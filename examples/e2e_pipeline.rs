@@ -1,0 +1,172 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer on a realistic workload:
+//!
+//!   1. generate a 2M-row synthetic XP trace (3 metrics, binned
+//!      covariates, panel-style user ids);
+//!   2. stream it through the sharded compression pipeline
+//!      (backpressure + rebalancing) in batches;
+//!   3. register with the coordinator and serve an analysis battery on
+//!      BOTH engines — native Rust and the AOT JAX/Pallas artifacts on
+//!      PJRT — verifying they agree;
+//!   4. report the paper's headline metrics: compression ratio, fit
+//!      speedup vs uncompressed OLS, and estimate divergence (≈0).
+//!
+//! Run: `cargo run --release --example e2e_pipeline`
+
+use std::time::Instant;
+
+use yoco::coordinator::{AnalysisRequest, Coordinator, EnginePref};
+use yoco::data::gen::{generate_xp, XpConfig};
+use yoco::estimator::{fit_ols, CovarianceKind};
+use yoco::linalg::Matrix;
+use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
+
+fn main() -> yoco::Result<()> {
+    let n = 2_000_000;
+    println!("=== YOCO end-to-end driver ===");
+    println!("[1/4] generating XP trace: n={n}, 3 metrics, 4 binned covariates…");
+    let t0 = Instant::now();
+    let (batch, _) = generate_xp(&XpConfig {
+        n,
+        arms: 2,
+        covariates: 4,
+        levels: 4,
+        outcomes: 3,
+        binary_first_outcome: true,
+        skew: 0.8,
+        seed: 2021,
+    });
+    let raw_mb = batch.memory_bytes() as f64 / (1 << 20) as f64;
+    println!("      done in {:.1?} ({raw_mb:.0} MB raw)", t0.elapsed());
+
+    // --- 2. Streaming compression through the pipeline. ---
+    println!("[2/4] streaming through the sharded pipeline…");
+    let t1 = Instant::now();
+    let cfg = PipelineConfig::default();
+    let pipe = Pipeline::new(cfg.clone(), PipelineMode::SuffStats);
+    let chunks = batch.split(100_000); // simulate a batched stream
+    let compressed = pipe.run_batches(chunks.iter())?.into_suffstats()?;
+    let compress_time = t1.elapsed();
+    let metrics = pipe.metrics();
+    let comp_mb = compressed.memory_bytes() as f64 / (1 << 20) as f64;
+    println!(
+        "      {} rows -> {} records in {:.1?}  ({:.1} Mrows/s, {} workers)",
+        n,
+        compressed.num_groups(),
+        compress_time,
+        metrics.rows_per_sec / 1e6,
+        cfg.workers,
+    );
+    println!(
+        "      compression ratio {:.0}x  ({:.0} MB -> {:.2} MB)  stalls={} rebalances={}",
+        compressed.compression_ratio(),
+        raw_mb,
+        comp_mb,
+        metrics.producer_stalls,
+        metrics.rebalances,
+    );
+
+    // --- 3. Analysis battery on both engines. ---
+    println!("[3/4] serving analyses (native + PJRT)…");
+    let coordinator =
+        Coordinator::with_runtime(PipelineConfig::default(), std::path::Path::new("artifacts"));
+    coordinator.store().register("trace", batch.clone());
+
+    let mut divergence: f64 = 0.0;
+    for outcome in ["y0", "y1", "y2"] {
+        for kind in [CovarianceKind::Homoskedastic, CovarianceKind::Heteroskedastic] {
+            let native = coordinator.analyze(
+                &AnalysisRequest::wls("trace", outcome)
+                    .with_covariance(kind)
+                    .with_engine(EnginePref::Native),
+            )?;
+            let label = match kind {
+                CovarianceKind::Homoskedastic => "hom",
+                CovarianceKind::Heteroskedastic => "hc0",
+                CovarianceKind::ClusterRobust => "clu",
+            };
+            if coordinator.runtime_available() {
+                let pjrt = coordinator.analyze(
+                    &AnalysisRequest::wls("trace", outcome)
+                        .with_covariance(kind)
+                        .with_engine(EnginePref::Pjrt),
+                )?;
+                let d = native
+                    .beta
+                    .iter()
+                    .zip(&pjrt.beta)
+                    .chain(native.se.iter().zip(&pjrt.se))
+                    .map(|(a, b)| {
+                        (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+                    })
+                    .fold(0.0f64, f64::max);
+                divergence = divergence.max(d);
+                println!(
+                    "      {outcome} {label}: native {:>6}µs | pjrt {:>6}µs | engines agree to {d:.1e}",
+                    native.elapsed_us, pjrt.elapsed_us
+                );
+            } else {
+                println!(
+                    "      {outcome} {label}: native {:>6}µs (pjrt unavailable — run `make artifacts`)",
+                    native.elapsed_us
+                );
+            }
+        }
+    }
+    // Logistic on the binary metric.
+    let logit = coordinator.analyze(&AnalysisRequest::wls("trace", "y0").logistic())?;
+    println!(
+        "      y0 logistic: {}µs on {} ({} records)",
+        logit.elapsed_us, logit.engine_used, logit.records_used
+    );
+
+    // --- 4. Headline: compressed vs uncompressed fit time. ---
+    println!("[4/4] headline comparison (hom fit on y1)…");
+    let f_idx = batch.schema().feature_indices();
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut r = vec![0.0; f_idx.len()];
+        batch.read_features(i, &f_idx, &mut r);
+        rows.push(r);
+    }
+    let m = Matrix::from_rows(&rows);
+    let y = batch.column_by_name("y1")?.to_vec();
+    let t2 = Instant::now();
+    let oracle = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None)?;
+    let uncompressed_time = t2.elapsed();
+    let t3 = Instant::now();
+    let resp = coordinator.analyze(
+        &AnalysisRequest::wls("trace", "y1").with_engine(EnginePref::Native),
+    )?;
+    let compressed_time = t3.elapsed();
+
+    let diff = resp
+        .beta
+        .iter()
+        .zip(&oracle.beta)
+        .chain(resp.se.iter().zip(&oracle.se()))
+        .map(|(a, b)| (a - b).abs() / a.abs().max(b.abs()).max(1e-12))
+        .fold(0.0f64, f64::max);
+
+    println!("\n=== RESULTS (paper headline metrics) ===");
+    println!("  compression ratio      : {:.0}x ({} rows -> {} records)",
+        compressed.compression_ratio(), n, compressed.num_groups());
+    println!("  memory                 : {raw_mb:.0} MB -> {comp_mb:.2} MB");
+    println!(
+        "  uncompressed OLS fit   : {:.1} ms",
+        uncompressed_time.as_secs_f64() * 1e3
+    );
+    println!(
+        "  compressed fit (cached): {:.3} ms  => speedup {:.0}x",
+        compressed_time.as_secs_f64() * 1e3,
+        uncompressed_time.as_secs_f64() / compressed_time.as_secs_f64()
+    );
+    println!("  estimate divergence    : {diff:.2e} (lossless)");
+    if coordinator.runtime_available() {
+        println!("  native vs PJRT engines : {divergence:.2e} max rel diff");
+    }
+    assert!(diff < 1e-8, "compression must be lossless");
+    println!("\ne2e_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--max-g 4096]
+
+Emits one artifact per (graph, G, P) bucket plus manifest.json. Rerun is
+cheap: unchanged artifacts are rewritten only if the content differs.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Bucket ladders — must match rust/src/runtime/pad.rs.
+G_BUCKETS = [256, 1024, 4096, 16384, 65536]
+P_BUCKETS = [8, 16, 32]
+
+GRAPH_NAMES = ["wls_hom", "wls_ehw", "wls_cluster", "logistic"]
+
+
+def to_hlo_text(fn, args):
+    """Lower a jitted fn at example args to XLA HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_if_changed(path, text):
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def build(out_dir, max_g, max_p, graphs):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for graph_name in graphs:
+        fn = model.GRAPHS[graph_name]
+        for g in G_BUCKETS:
+            if g > max_g:
+                continue
+            for p in P_BUCKETS:
+                if p > max_p:
+                    continue
+                name = f"{graph_name}_g{g}_p{p}"
+                rel = f"{name}.hlo.txt"
+                path = os.path.join(out_dir, rel)
+                args = model.example_args(graph_name, g, p)
+                text = to_hlo_text(fn, args)
+                changed = write_if_changed(path, text)
+                manifest.append(
+                    {"name": name, "graph": graph_name, "g": g, "p": p, "path": rel}
+                )
+                status = "wrote" if changed else "cached"
+                print(f"  {status} {rel} ({len(text)} chars)", flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest)} artifacts -> {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--max-g",
+        type=int,
+        default=4096,
+        help="largest G bucket to compile (interpret-mode Pallas tracing "
+        "cost grows with G; 4096 covers every example/test workload)",
+    )
+    ap.add_argument("--max-p", type=int, default=32)
+    ap.add_argument("--graphs", nargs="*", default=GRAPH_NAMES)
+    args = ap.parse_args()
+    for g in args.graphs:
+        if g not in model.GRAPHS:
+            sys.exit(f"unknown graph {g}; have {list(model.GRAPHS)}")
+    build(args.out_dir, args.max_g, args.max_p, args.graphs)
+
+
+if __name__ == "__main__":
+    main()

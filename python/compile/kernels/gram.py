@@ -1,0 +1,107 @@
+"""L1 Pallas kernels: weighted Gram and weighted cross-moment.
+
+The compute hot-spot of every estimator in the paper is the pair
+
+    Gram = M̃ᵀ diag(w) M̃   (P × P)      and      xty = M̃ᵀ s   (P,)
+
+over G compressed records. The kernels tile the G dimension: each grid
+step stages a (TILE, P) block of M̃ plus the matching weight slice into
+VMEM, runs a (P, TILE) × (TILE, P) matmul on the MXU, and accumulates
+into a (P, P) block that stays resident across the whole grid —
+HBM traffic is O(G·P) while compute is O(G·P²).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): TILE=256 rows of f32/f64
+at P ≤ 32 keeps the staged block ≤ 64 KiB — far under VMEM; the MXU
+sees well-shaped (P, TILE)·(TILE, P) contractions. On this CPU image the
+kernels run under `interpret=True`, which lowers them to plain HLO so
+the same artifact executes on the PJRT CPU client.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows staged per grid step. 256×32 f64 = 64 KiB — VMEM-friendly with
+# double-buffering headroom.
+TILE_G = 256
+
+
+def _gram_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o += xᵀ·diag(w)·x for a (TILE, P) block."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    # (P, TILE) × (TILE, P) — MXU-shaped contraction.
+    o_ref[...] += jnp.dot(x.T * w, x)
+
+
+def _xty_kernel(x_ref, s_ref, o_ref):
+    """One grid step: o += xᵀ·s for a (TILE, P) block."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ s_ref[...]
+
+
+def _grid(g):
+    """Choose (steps, tile) for the G dimension.
+
+    Perf note (EXPERIMENTS.md §Perf): under interpret=True each grid
+    step lowers to an XLA loop iteration with dynamic-slice staging, so
+    loop overhead dominates small problems. Buckets up to 1024 rows run
+    as a single step (the whole block "in VMEM": 1024x32 f64 = 256 KiB,
+    fine); larger buckets tile at 512 to bound the staged block.
+    """
+    if g <= 1024:
+        return 1, g
+    for tile in (512, TILE_G):
+        if g % tile == 0:
+            return g // tile, tile
+    raise ValueError(f"G={g} must be a multiple of 512/{TILE_G} or <= 1024")
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gram_weighted(x, w):
+    """Pallas M̃ᵀ diag(w) M̃. x: (G, P), w: (G,) → (P, P)."""
+    g, p = x.shape
+    steps, tile = _grid(g)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((p, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, p), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def xty_weighted(x, s):
+    """Pallas M̃ᵀ s. x: (G, P), s: (G,) → (P,)."""
+    g, p = x.shape
+    steps, tile = _grid(g)
+    return pl.pallas_call(
+        _xty_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), x.dtype),
+        interpret=True,
+    )(x, s)

@@ -1,0 +1,45 @@
+"""Pure-HLO dense linear algebra for the AOT graphs.
+
+`jnp.linalg.solve` / `inv` / `cholesky` lower to LAPACK custom-calls on
+CPU (API_VERSION_TYPED_FFI), which the runtime's xla_extension 0.5.1
+cannot execute. The estimation graphs only ever invert small SPD
+matrices (P ≤ 32 — the masked Gram / IRLS Hessian), so we implement a
+Gauss-Jordan inverse with `lax.fori_loop`: pivot-free is numerically
+safe for SPD input, and everything lowers to plain HLO
+(dynamic-slice / dynamic-update-slice / outer products).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def inv_spd(a):
+    """Inverse of a symmetric positive-definite matrix, pure HLO.
+
+    Gauss-Jordan elimination without pivoting on the augmented system
+    [A | I]; for SPD matrices the pivots are the (positive) Schur
+    complements, so no row exchanges are needed.
+    """
+    p = a.shape[0]
+    aug = jnp.concatenate([a, jnp.eye(p, dtype=a.dtype)], axis=1)
+
+    def step(j, aug):
+        pivot_row = aug[j] / aug[j, j]
+        col = aug[:, j]
+        # Eliminate column j from every row, then restore row j.
+        aug = aug - jnp.outer(col, pivot_row)
+        return aug.at[j].set(pivot_row)
+
+    aug = lax.fori_loop(0, p, step, aug)
+    return aug[:, p:]
+
+
+def solve_spd(a, b):
+    """Solve A x = b for SPD A (via the explicit inverse; P ≤ 32 so the
+    extra flops are negligible and the graphs reuse the inverse as the
+    sandwich bread anyway)."""
+    return inv_spd(a) @ b

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: fused logistic-regression IRLS statistics (§7.3).
+
+Per Newton step the solver needs, over G compressed records,
+
+    μ_g = s(m̃_gᵀβ),   w_g = ñ_g μ_g (1 − μ_g),   r_g = ỹ'_g − ñ_g μ_g .
+
+One staged (TILE, P) block yields all three: a mat-vec for the logits
+(MXU), then elementwise VPU math. The Newton system then reuses the
+weighted-Gram kernel: H = gram_weighted(M̃, w), score = xty(M̃, r).
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gram import _grid
+
+
+def _irls_kernel(x_ref, beta_ref, counts_ref, ysum_ref, w_ref, r_ref):
+    x = x_ref[...]
+    z = x @ beta_ref[...]
+    mu = jax.nn.sigmoid(z)
+    counts = counts_ref[...]
+    w_ref[...] = counts * mu * (1.0 - mu)
+    r_ref[...] = ysum_ref[...] - counts * mu
+
+
+@functools.partial(jax.jit, static_argnames=())
+def irls_stats(x, beta, counts, ysum):
+    """Fused per-group IRLS statistics (w_g, r_g)."""
+    g, p = x.shape
+    steps, tile = _grid(g)
+    return pl.pallas_call(
+        _irls_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), x.dtype),
+            jax.ShapeDtypeStruct((g,), x.dtype),
+        ],
+        interpret=True,
+    )(x, beta, counts, ysum)

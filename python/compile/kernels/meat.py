@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: per-group residual statistics (§5.1/§5.2).
+
+Computes, per compressed record,
+
+    RSS̃_g = ŷ_g² ñ_g − 2 ŷ_g ỹ'_g + ỹ''_g      (ŷ = M̃β)
+    ẽ'_g  = ỹ'_g − ñ_g ŷ_g                       (cluster score weights)
+
+in one fused pass: the (TILE, P) feature block is staged once, the
+fitted value is a (TILE, P)×(P,) mat-vec on the MXU, and both outputs
+are elementwise VPU work. The EHW meat is then `gram_weighted(M̃, RSS̃)`
+— kernel reuse, exactly mirroring the paper's observation that the EHW
+meat is "a Gram with residual weights".
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gram import TILE_G, _grid
+
+
+def _resid_kernel(x_ref, beta_ref, counts_ref, ysum_ref, ysumsq_ref, rss_ref, e_ref):
+    x = x_ref[...]
+    beta = beta_ref[...]
+    counts = counts_ref[...]
+    ysum = ysum_ref[...]
+    yhat = x @ beta
+    rss_ref[...] = yhat * yhat * counts - 2.0 * yhat * ysum + ysumsq_ref[...]
+    e_ref[...] = ysum - counts * yhat
+
+
+@functools.partial(jax.jit, static_argnames=())
+def group_residual_stats(x, beta, counts, ysum, ysumsq):
+    """Fused per-group (RSS̃_g, ẽ'_g). Shapes: x (G,P), rest (G,)/(P,)."""
+    g, p = x.shape
+    steps, tile = _grid(g)
+    return pl.pallas_call(
+        _resid_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), x.dtype),
+            jax.ShapeDtypeStruct((g,), x.dtype),
+        ],
+        interpret=True,
+    )(x, beta, counts, ysum, ysumsq)
+
+
+def group_rss(x, beta, counts, ysum, ysumsq):
+    """RSS̃ only (convenience wrapper used by the hom/EHW graphs)."""
+    rss, _ = group_residual_stats(x, beta, counts, ysum, ysumsq)
+    return rss

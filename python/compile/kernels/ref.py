@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here
+built only from `jnp` primitives; the pytest suite (python/tests) sweeps
+shapes and dtypes with hypothesis and asserts allclose between the two.
+The Rust native engine is, in turn, pinned against the AOT artifacts
+built from the kernels — so the chain
+
+    ref.py  ==  Pallas kernels  ==  HLO artifacts  ==  Rust engine
+
+is covered end to end.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+
+def gram_weighted(x, w):
+    """Mᵀ diag(w) M — the bread⁻¹ of every estimator (paper §5).
+
+    x: (G, P), w: (G,) → (P, P)
+    """
+    return (x.T * w) @ x
+
+
+def xty_weighted(x, s):
+    """Mᵀ s for a per-group vector s (e.g. ỹ'). x: (G, P), s: (G,) → (P,)."""
+    return x.T @ s
+
+
+def group_rss(x, beta, counts, ysum, ysumsq):
+    """Per-group residual sum of squares from sufficient statistics (§5.1):
+
+        RSS̃_g = ŷ_g² ñ_g − 2 ŷ_g ỹ'_g + ỹ''_g,  ŷ = Mβ.
+
+    Returns (G,).
+    """
+    yhat = x @ beta
+    return yhat * yhat * counts - 2.0 * yhat * ysum + ysumsq
+
+
+def sigmoid(z):
+    """Numerically stable logistic function."""
+    return jax.nn.sigmoid(z)
+
+
+def logistic_weights(x, beta, counts):
+    """IRLS Hessian weights ñ_g μ_g (1 − μ_g) per group (§7.3)."""
+    mu = sigmoid(x @ beta)
+    return counts * mu * (1.0 - mu)
+
+
+def logistic_score(x, beta, counts, ysum):
+    """Score vector Σ_g m̃_g (ỹ'_g − ñ_g μ_g) (§7.3)."""
+    mu = sigmoid(x @ beta)
+    return x.T @ (ysum - counts * mu)

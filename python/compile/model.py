@@ -1,0 +1,143 @@
+"""L2 JAX estimation graphs over sufficient statistics.
+
+Each graph consumes a *padded* compressed dataset (see
+rust/src/runtime/pad.rs for the contract) and returns the fit. The
+shared padding trick: `colmask` is 1 on real feature columns and 0 on
+padded ones; every Gram gets `+ diag(1 − colmask)` so padded dimensions
+are exactly the identity — the solve stays well-posed, padded β entries
+are 0 (their cross-moments are 0), and the Rust side drops them on
+unpack. Zero-count padded *rows* contribute nothing to any moment sum.
+
+Graphs (names must match `GraphKind` in rust/src/runtime/engine.rs):
+
+  wls_hom(features, counts, ysum, ysumsq, colmask, n, p_true)
+      -> (beta, cov, sigma2)                                   §5.1
+  wls_ehw(features, counts, ysum, ysumsq, colmask, n, p_true)
+      -> (beta, cov_hc0, sigma2)                               §5.2
+  wls_cluster(features, counts, ysum, ysumsq, colmask, cluster_ids)
+      -> (beta, cov_cr0, rss)                                  §5.3.1
+  logistic(features, counts, ysum, colmask)
+      -> (beta, cov)                                           §7.3
+
+All floating inputs are f64; cluster_ids are i32.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels import gram as gram_k
+from .kernels import linalg_hlo
+from .kernels import logistic as logistic_k
+from .kernels import meat as meat_k
+
+#: Newton iterations baked into the AOT logistic graph. 25 doubles the
+#: digits each step once it's in the basin; compressed XP problems
+#: converge in < 10.
+LOGISTIC_ITERS = 25
+
+
+def _masked_gram(x, w, colmask):
+    """Weighted Gram with identity on padded dimensions."""
+    g = gram_k.gram_weighted(x, w)
+    return g + jnp.diag(1.0 - colmask)
+
+
+def _solve_beta(x, counts, ysum, colmask):
+    gram = _masked_gram(x, counts, colmask)
+    xty = gram_k.xty_weighted(x, ysum)
+    # Pure-HLO inverse (see kernels/linalg_hlo.py): the runtime's XLA
+    # cannot execute LAPACK custom-calls. The inverse doubles as the
+    # sandwich bread, so nothing extra is computed.
+    bread = linalg_hlo.inv_spd(gram)
+    beta = bread @ xty
+    return beta, bread
+
+
+def wls_hom(features, counts, ysum, ysumsq, colmask, n, p_true):
+    """§5.1 — β̂, V(β̂) = σ̂²Π, σ̂² = RSS/(n−p)."""
+    beta, bread = _solve_beta(features, counts, ysum, colmask)
+    rss_g = meat_k.group_rss(features, beta, counts, ysum, ysumsq)
+    sigma2 = jnp.sum(rss_g) / (n - p_true)
+    cov = bread * sigma2
+    return beta, cov, sigma2
+
+
+def wls_ehw(features, counts, ysum, ysumsq, colmask, n, p_true):
+    """§5.2 — β̂, EHW/HC0 sandwich via Ξ̂ = M̃ᵀdiag(RSS̃)M̃."""
+    beta, bread = _solve_beta(features, counts, ysum, colmask)
+    rss_g = meat_k.group_rss(features, beta, counts, ysum, ysumsq)
+    meat = gram_k.gram_weighted(features, rss_g)
+    cov = bread @ meat @ bread
+    sigma2 = jnp.sum(rss_g) / (n - p_true)
+    return beta, cov, sigma2
+
+
+def wls_cluster(features, counts, ysum, ysumsq, colmask, cluster_ids):
+    """§5.3.1 — β̂ and the CR0 cluster sandwich.
+
+    Scores v_c = Σ_{g∈c} m̃_g ẽ'_g via segment-sum; the meat is then the
+    *unweighted* Gram of the score matrix — kernel reuse again. Padded
+    rows have ẽ' = 0 so their scatter into segment 0 is a no-op. The CR1
+    small-sample factor is applied by the Rust caller (it knows C).
+    """
+    g_bucket = features.shape[0]
+    beta, bread = _solve_beta(features, counts, ysum, colmask)
+    rss_g, e_g = meat_k.group_residual_stats(features, beta, counts, ysum, ysumsq)
+    scores = jax.ops.segment_sum(
+        features * e_g[:, None], cluster_ids, num_segments=g_bucket
+    )
+    ones = jnp.ones((g_bucket,), features.dtype)
+    meat = gram_k.gram_weighted(scores, ones)
+    cov = bread @ meat @ bread
+    return beta, cov, jnp.sum(rss_g)
+
+
+def logistic(features, counts, ysum, colmask):
+    """§7.3 — fixed-iteration Newton/IRLS on compressed records.
+
+    Padded rows (ñ = 0) contribute zero weight and zero score; padded
+    columns are pinned at β = 0 by the masked Gram (their score is 0 and
+    Hessian diagonal 1).
+    """
+    p = features.shape[1]
+
+    def step(_, beta):
+        w, r = logistic_k.irls_stats(features, beta, counts, ysum)
+        hess = _masked_gram(features, w, colmask)
+        score = gram_k.xty_weighted(features, r)
+        return beta + linalg_hlo.solve_spd(hess, score)
+
+    beta0 = jnp.zeros((p,), features.dtype)
+    beta = jax.lax.fori_loop(0, LOGISTIC_ITERS, step, beta0)
+    w, _ = logistic_k.irls_stats(features, beta, counts, ysum)
+    cov = linalg_hlo.inv_spd(_masked_gram(features, w, colmask))
+    return beta, cov
+
+
+#: name -> (callable, needs which inputs) used by aot.py.
+GRAPHS = {
+    "wls_hom": wls_hom,
+    "wls_ehw": wls_ehw,
+    "wls_cluster": wls_cluster,
+    "logistic": logistic,
+}
+
+
+def example_args(graph, g, p):
+    """ShapeDtypeStructs for lowering `graph` at bucket (g, p)."""
+    f64 = jnp.float64
+    feat = jax.ShapeDtypeStruct((g, p), f64)
+    vec_g = jax.ShapeDtypeStruct((g,), f64)
+    vec_p = jax.ShapeDtypeStruct((p,), f64)
+    scalar = jax.ShapeDtypeStruct((), f64)
+    ids = jax.ShapeDtypeStruct((g,), jnp.int32)
+    if graph in ("wls_hom", "wls_ehw"):
+        return (feat, vec_g, vec_g, vec_g, vec_p, scalar, scalar)
+    if graph == "wls_cluster":
+        return (feat, vec_g, vec_g, vec_g, vec_p, ids)
+    if graph == "logistic":
+        return (feat, vec_g, vec_g, vec_p)
+    raise KeyError(graph)

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, and value ranges; every kernel must
+agree with its reference to tight tolerance. This is the CORE
+correctness signal for the compute layer — the Rust integration suite
+then pins the AOT artifacts (built from these kernels) against the
+native engine.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, logistic, meat, ref
+
+# Shapes: G must divide the tile or be below it (kernel contract).
+G_VALUES = [4, 32, 256, 512, 1024]
+P_VALUES = [1, 2, 5, 8, 32]
+
+
+def _data(g, p, seed, dtype=np.float64):
+    rs = np.random.RandomState(seed)
+    x = rs.randn(g, p).astype(dtype)
+    w = np.abs(rs.randn(g)).astype(dtype)
+    s = rs.randn(g).astype(dtype)
+    beta = rs.randn(p).astype(dtype)
+    counts = rs.randint(1, 7, g).astype(dtype)
+    ysum = rs.randn(g).astype(dtype) * counts
+    ysumsq = (np.abs(rs.randn(g)) + 0.1).astype(dtype) * counts + ysum**2 / counts
+    return x, w, s, beta, counts, ysum, ysumsq
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    g=st.sampled_from(G_VALUES),
+    p=st.sampled_from(P_VALUES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_weighted_matches_ref(g, p, seed):
+    x, w, *_ = _data(g, p, seed)
+    got = gram.gram_weighted(jnp.array(x), jnp.array(w))
+    want = ref.gram_weighted(jnp.array(x), jnp.array(w))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    g=st.sampled_from(G_VALUES),
+    p=st.sampled_from(P_VALUES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xty_weighted_matches_ref(g, p, seed):
+    x, _, s, *_ = _data(g, p, seed)
+    got = gram.xty_weighted(jnp.array(x), jnp.array(s))
+    want = ref.xty_weighted(jnp.array(x), jnp.array(s))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.sampled_from(G_VALUES),
+    p=st.sampled_from(P_VALUES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_rss_matches_ref(g, p, seed):
+    x, _, _, beta, counts, ysum, ysumsq = _data(g, p, seed)
+    got = meat.group_rss(
+        jnp.array(x), jnp.array(beta), jnp.array(counts), jnp.array(ysum), jnp.array(ysumsq)
+    )
+    want = ref.group_rss(
+        jnp.array(x), jnp.array(beta), jnp.array(counts), jnp.array(ysum), jnp.array(ysumsq)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.sampled_from(G_VALUES),
+    p=st.sampled_from(P_VALUES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_residual_stats_e_component(g, p, seed):
+    x, _, _, beta, counts, ysum, ysumsq = _data(g, p, seed)
+    _, e = meat.group_residual_stats(
+        jnp.array(x), jnp.array(beta), jnp.array(counts), jnp.array(ysum), jnp.array(ysumsq)
+    )
+    want = jnp.array(ysum) - jnp.array(counts) * (jnp.array(x) @ jnp.array(beta))
+    np.testing.assert_allclose(e, want, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.sampled_from(G_VALUES),
+    p=st.sampled_from(P_VALUES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_irls_stats_match_ref(g, p, seed):
+    x, _, _, beta, counts, ysum, _ = _data(g, p, seed)
+    # Keep logits in a sane range.
+    beta = beta / (1.0 + np.abs(beta).max())
+    w, r = logistic.irls_stats(
+        jnp.array(x), jnp.array(beta), jnp.array(counts), jnp.array(ysum)
+    )
+    w_want = ref.logistic_weights(jnp.array(x), jnp.array(beta), jnp.array(counts))
+    np.testing.assert_allclose(w, w_want, rtol=1e-9, atol=1e-12)
+    mu = ref.sigmoid(jnp.array(x) @ jnp.array(beta))
+    np.testing.assert_allclose(
+        r, jnp.array(ysum) - jnp.array(counts) * mu, rtol=1e-9, atol=1e-12
+    )
+
+
+def test_zero_weight_rows_are_noops():
+    """The padding contract: ñ = 0 rows change nothing."""
+    x, w, *_ = _data(256, 8, 0)
+    w[100:] = 0.0
+    full = gram.gram_weighted(jnp.array(x), jnp.array(w))
+    trunc = ref.gram_weighted(jnp.array(x[:100]), jnp.array(w[:100]))
+    np.testing.assert_allclose(full, trunc, rtol=1e-12, atol=1e-12)
+
+
+def test_float32_also_supported():
+    x, w, *_ = _data(256, 8, 1, dtype=np.float32)
+    got = gram.gram_weighted(jnp.array(x), jnp.array(w))
+    want = ref.gram_weighted(jnp.array(x), jnp.array(w))
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_odd_g_rejected():
+    # G beyond the single-step limit must divide a supported tile.
+    x = jnp.zeros((1500, 4))
+    w = jnp.zeros((1500,))
+    with pytest.raises(ValueError):
+        gram.gram_weighted(x, w)
+
+
+def test_small_g_single_step_allowed():
+    # Anything <= 1024 runs as one grid step (perf pass), including odd sizes.
+    x = jnp.ones((300, 4))
+    w = jnp.ones((300,))
+    out = gram.gram_weighted(x, w)
+    np.testing.assert_allclose(out, 300.0 * jnp.ones((4, 4)))

@@ -1,0 +1,166 @@
+"""L2 graph correctness: the estimation graphs vs numpy linear algebra,
+including the padding contract (zero-count rows, masked columns)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import linalg_hlo
+
+
+def _padded_problem(g_real, p_real, g, p, seed=0, binary=False):
+    """Random WLS problem embedded in a (g, p) bucket."""
+    rs = np.random.RandomState(seed)
+    x = np.zeros((g, p))
+    x[:g_real, 0] = 1.0
+    x[:g_real, 1:p_real] = rs.randint(0, 3, (g_real, p_real - 1))
+    counts = np.zeros(g)
+    counts[:g_real] = rs.randint(1, 9, g_real)
+    beta_true = rs.randn(p_real)
+    ysum = np.zeros(g)
+    ysumsq = np.zeros(g)
+    for i in range(g_real):
+        mu = x[i, :p_real] @ beta_true
+        if binary:
+            k = rs.binomial(int(counts[i]), 1.0 / (1.0 + np.exp(-mu)))
+            ysum[i] = k
+            ysumsq[i] = k
+        else:
+            ys = mu + rs.randn(int(counts[i]))
+            ysum[i] = ys.sum()
+            ysumsq[i] = (ys**2).sum()
+    colmask = np.zeros(p)
+    colmask[:p_real] = 1.0
+    return x, counts, ysum, ysumsq, colmask
+
+
+def _numpy_wls(x, counts, ysum, p_real):
+    gram = (x.T * counts) @ x
+    gram = gram[:p_real, :p_real]
+    xty = (x.T @ ysum)[:p_real]
+    return np.linalg.solve(gram, xty), np.linalg.inv(gram)
+
+
+def test_inv_spd_matches_numpy():
+    rs = np.random.RandomState(1)
+    for p in [2, 5, 8, 16]:
+        b = rs.randn(p, p)
+        a = b @ b.T + p * np.eye(p)
+        got = linalg_hlo.inv_spd(jnp.array(a))
+        np.testing.assert_allclose(got, np.linalg.inv(a), rtol=1e-9, atol=1e-10)
+
+
+@pytest.mark.parametrize("g_real,p_real", [(5, 2), (40, 5), (200, 8)])
+def test_wls_hom_matches_numpy(g_real, p_real):
+    g, p = 256, 8
+    x, counts, ysum, ysumsq, colmask = _padded_problem(g_real, p_real, g, p)
+    n = counts.sum()
+    beta, cov, sigma2 = model.wls_hom(
+        jnp.array(x), jnp.array(counts), jnp.array(ysum), jnp.array(ysumsq),
+        jnp.array(colmask), jnp.float64(n), jnp.float64(p_real),
+    )
+    want_beta, want_bread = _numpy_wls(x, counts, ysum, p_real)
+    np.testing.assert_allclose(np.asarray(beta)[:p_real], want_beta, rtol=1e-8)
+    # Padded beta entries are exactly 0.
+    np.testing.assert_allclose(np.asarray(beta)[p_real:], 0.0, atol=1e-12)
+    # RSS from suff stats.
+    yhat = x[:, :p_real] @ want_beta
+    rss = float((yhat**2 * counts - 2 * yhat * ysum + ysumsq).sum())
+    want_sigma2 = rss / (n - p_real)
+    np.testing.assert_allclose(float(sigma2), want_sigma2, rtol=1e-8)
+    np.testing.assert_allclose(
+        np.asarray(cov)[:p_real, :p_real], want_bread * want_sigma2, rtol=1e-7
+    )
+
+
+def test_wls_ehw_meat_is_weighted_gram_of_rss():
+    g, p = 256, 8
+    g_real, p_real = 30, 3
+    x, counts, ysum, ysumsq, colmask = _padded_problem(g_real, p_real, g, p, seed=3)
+    n = counts.sum()
+    beta, cov, _ = model.wls_ehw(
+        jnp.array(x), jnp.array(counts), jnp.array(ysum), jnp.array(ysumsq),
+        jnp.array(colmask), jnp.float64(n), jnp.float64(p_real),
+    )
+    want_beta, bread = _numpy_wls(x, counts, ysum, p_real)
+    yhat = x[:, :p_real] @ want_beta
+    rss_g = yhat**2 * counts - 2 * yhat * ysum + ysumsq
+    meat = (x[:, :p_real].T * rss_g) @ x[:, :p_real]
+    want_cov = bread @ meat @ bread
+    np.testing.assert_allclose(np.asarray(cov)[:p_real, :p_real], want_cov, rtol=1e-7)
+
+
+def test_wls_cluster_scatter():
+    g, p = 256, 8
+    g_real, p_real = 24, 3
+    x, counts, ysum, ysumsq, colmask = _padded_problem(g_real, p_real, g, p, seed=5)
+    ids = np.zeros(g, dtype=np.int32)
+    ids[:g_real] = np.arange(g_real) % 6  # 6 clusters
+    beta, cov, rss = model.wls_cluster(
+        jnp.array(x), jnp.array(counts), jnp.array(ysum), jnp.array(ysumsq),
+        jnp.array(colmask), jnp.array(ids),
+    )
+    want_beta, bread = _numpy_wls(x, counts, ysum, p_real)
+    yhat = x[:, :p_real] @ want_beta
+    e = ysum - counts * yhat
+    scores = np.zeros((6, p_real))
+    for i in range(g_real):
+        scores[ids[i]] += x[i, :p_real] * e[i]
+    meat = scores.T @ scores
+    want_cov = bread @ meat @ bread
+    np.testing.assert_allclose(np.asarray(beta)[:p_real], want_beta, rtol=1e-8)
+    np.testing.assert_allclose(np.asarray(cov)[:p_real, :p_real], want_cov, rtol=1e-6)
+    assert float(rss) > 0
+
+
+def test_logistic_graph_converges_to_mle():
+    g, p = 256, 8
+    g_real, p_real = 12, 2
+    x, counts, ysum, _, colmask = _padded_problem(
+        g_real, p_real, g, p, seed=7, binary=True
+    )
+    beta, cov = model.logistic(
+        jnp.array(x), jnp.array(counts), jnp.array(ysum), jnp.array(colmask)
+    )
+    beta = np.asarray(beta)
+    # Newton from scratch in numpy as the oracle.
+    b = np.zeros(p_real)
+    for _ in range(50):
+        mu = 1.0 / (1.0 + np.exp(-(x[:, :p_real] @ b)))
+        grad = x[:, :p_real].T @ (ysum - counts * mu)
+        w = counts * mu * (1 - mu)
+        hess = (x[:, :p_real].T * w) @ x[:, :p_real]
+        b += np.linalg.solve(hess, grad)
+    np.testing.assert_allclose(beta[:p_real], b, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(beta[p_real:], 0.0, atol=1e-10)
+    # Covariance is the inverse Fisher information.
+    mu = 1.0 / (1.0 + np.exp(-(x[:, :p_real] @ b)))
+    w = counts * mu * (1 - mu)
+    want_cov = np.linalg.inv((x[:, :p_real].T * w) @ x[:, :p_real])
+    np.testing.assert_allclose(
+        np.asarray(cov)[:p_real, :p_real], want_cov, rtol=1e-5
+    )
+
+
+def test_example_args_cover_all_graphs():
+    for name in model.GRAPHS:
+        args = model.example_args(name, 256, 8)
+        assert args[0].shape == (256, 8)
+    with pytest.raises(KeyError):
+        model.example_args("nope", 256, 8)
+
+
+def test_graphs_lower_to_custom_call_free_hlo():
+    """The runtime's XLA cannot execute typed-FFI custom calls; assert
+    the lowered HLO has none (the regression that motivated
+    kernels/linalg_hlo.py)."""
+    from compile import aot
+
+    for name in model.GRAPHS:
+        text = aot.to_hlo_text(model.GRAPHS[name], model.example_args(name, 256, 8))
+        assert "custom-call" not in text, f"{name} contains a custom call"

@@ -1,0 +1,96 @@
+//! §5.3/§5.4 — the three cluster-robust compression strategies vs the
+//! uncompressed oracle, swept over panel length T.
+//!
+//! Paper's claim: clustered covariances speed up on the order of T/2
+//! for balanced panels (compressing n_u·T records to ~n_u), and the
+//! §5.3.3 strategy always reaches C records regardless of feature
+//! structure. Also benches the §5.3.2 between-cluster estimator and the
+//! balanced-panel Kronecker path (plain + interacted).
+//!
+//! Run: `cargo bench --bench cluster_strategies`.
+
+use yoco::compress::{
+    BalancedPanelCompressor, BetweenClusterCompressor, ClusterStaticCompressor,
+};
+use yoco::estimator::{
+    fit_balanced_panel, fit_between_cluster, fit_cluster_static, fit_ols, CovarianceKind,
+    PanelModel,
+};
+use yoco::linalg::Matrix;
+use yoco::util::bench::{bench, black_box, report};
+use yoco::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let nu = if quick { 500 } else { 2_000 };
+    let ts: &[usize] = if quick { &[10, 50] } else { &[10, 50, 100] };
+
+    println!("=== §5.4 cluster-robust fit time, n_u={nu} clusters ===\n");
+    for &t in ts {
+        let mut rng = Rng::seed_from_u64(11);
+        let m2 = Matrix::from_rows(&(0..t).map(|d| vec![1.0, d as f64]).collect::<Vec<_>>());
+        let mut bp = BalancedPanelCompressor::new(m2, 2);
+        let mut ck = ClusterStaticCompressor::new(4);
+        let mut bc = BetweenClusterCompressor::new(4);
+        let mut rows = Vec::with_capacity(nu * t);
+        let mut ys = Vec::with_capacity(nu * t);
+        let mut labels = Vec::with_capacity(nu * t);
+        for c in 0..nu {
+            let treat = f64::from(rng.bool(0.5));
+            // Binary static covariate keeps the §5.3.2 cluster-matrix
+            // signature count small (4 distinct M_c).
+            let x = f64::from(rng.bool(0.5));
+            let ce = rng.normal() * 0.7;
+            let series: Vec<f64> = (0..t)
+                .map(|d| 1.0 + 0.5 * treat + 0.1 * d as f64 + 0.2 * x + ce + rng.normal())
+                .collect();
+            bp.push_cluster(&[treat, x], &series).unwrap();
+            let mut crows = Vec::with_capacity(t);
+            for (d, &yv) in series.iter().enumerate() {
+                let row = vec![treat, x, 1.0, d as f64];
+                ck.push(&row, yv, c as f64);
+                crows.push(row.clone());
+                rows.push(row);
+                ys.push(yv);
+                labels.push(c as f64);
+            }
+            bc.push_cluster(&Matrix::from_rows(&crows), &series);
+        }
+        let (bp, ck, bc) = (bp.finish(), ck.finish(), bc.finish());
+        let m = Matrix::from_rows(&rows);
+
+        println!(
+            "T = {t}  (n = {}, §5.3.2 groups = {}, §5.3.3 records = {})",
+            nu * t,
+            bc.num_groups(),
+            ck.num_clusters()
+        );
+        let r_unc = bench(&format!("uncompressed/T={t}"), || {
+            black_box(fit_ols(&m, &ys, CovarianceKind::ClusterRobust, Some(&labels)).unwrap())
+        });
+        report(&r_unc);
+        let r_bc = bench(&format!("between-cluster §5.3.2/T={t}"), || {
+            black_box(fit_between_cluster(&bc).unwrap())
+        });
+        report(&r_bc);
+        let r_ck = bench(&format!("K1K2 §5.3.3/T={t}"), || {
+            black_box(fit_cluster_static(&ck).unwrap())
+        });
+        report(&r_ck);
+        let r_bp = bench(&format!("balanced-panel plain/T={t}"), || {
+            black_box(fit_balanced_panel(&bp, PanelModel::Plain).unwrap())
+        });
+        report(&r_bp);
+        let r_bpi = bench(&format!("balanced-panel interacted/T={t}"), || {
+            black_box(fit_balanced_panel(&bp, PanelModel::Interacted).unwrap())
+        });
+        report(&r_bpi);
+        println!(
+            "    -> speedups vs uncompressed: §5.3.2 {:.1}x, §5.3.3 {:.1}x, bal-panel {:.1}x (paper: ~T/2 = {:.0}x)\n",
+            r_unc.median.as_secs_f64() / r_bc.median.as_secs_f64(),
+            r_unc.median.as_secs_f64() / r_ck.median.as_secs_f64(),
+            r_unc.median.as_secs_f64() / r_bp.median.as_secs_f64(),
+            t as f64 / 2.0
+        );
+    }
+}

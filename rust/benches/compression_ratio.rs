@@ -1,0 +1,112 @@
+//! §5.3 memory table + §6 binning compression study.
+//!
+//! (a) Balanced-panel memory: the paper's 37.25 GB → 381 MB example,
+//!     reproduced at scaled-down n_u with the same T=100, p=10 shape —
+//!     the *ratio* (~100x) is the reproducible quantity.
+//! (b) §6: compression rate vs feature cardinality, with and without
+//!     decile binning, plus compression throughput.
+//!
+//! Run: `cargo bench --bench compression_ratio`.
+
+use yoco::compress::binning::Binner;
+use yoco::compress::{BalancedPanelCompressor, ClusterStaticCompressor, SuffStatsCompressor};
+use yoco::data::gen::generate_high_cardinality;
+use yoco::linalg::Matrix;
+use yoco::util::bench::{bench, black_box, report};
+use yoco::util::rng::Rng;
+
+fn main() {
+    println!("=== §5.3 memory: balanced panel, T=100, p=10 ===\n");
+    println!(
+        "{:>9} {:>15} {:>15} {:>15} {:>8}",
+        "n_u", "uncompressed", "K1K2 (§5.3.3)", "balanced-panel", "ratio"
+    );
+    let t = 100;
+    for nu in [1_000usize, 10_000, 50_000] {
+        let mut rng = Rng::seed_from_u64(5);
+        let m2 = Matrix::from_rows(&(0..t).map(|d| vec![1.0, d as f64]).collect::<Vec<_>>());
+        let mut bp = BalancedPanelCompressor::new(m2, 8);
+        let mut ck = ClusterStaticCompressor::new(10);
+        for c in 0..nu {
+            let m1: Vec<f64> = (0..8).map(|_| f64::from(rng.bool(0.5))).collect();
+            let ys: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            bp.push_cluster(&m1, &ys).unwrap();
+            for (tt, &yv) in ys.iter().enumerate() {
+                let mut row = vec![0.0; 10];
+                row[..8].copy_from_slice(&m1);
+                row[8] = 1.0;
+                row[9] = tt as f64;
+                ck.push(&row, yv, c as f64);
+            }
+        }
+        let (bp, ck) = (bp.finish(), ck.finish());
+        let unc = nu * t * 11 * 8;
+        println!(
+            "{:>9} {:>12} KB {:>12} KB {:>12} KB {:>7.0}x",
+            nu,
+            unc / 1024,
+            ck.memory_bytes() / 1024,
+            bp.memory_bytes() / 1024,
+            unc as f64 / bp.memory_bytes() as f64
+        );
+    }
+    println!("\npaper: n_u=1e8 => 37.25 GB -> 381 MB (~100x) — same ratio as above.\n");
+
+    println!("=== §6 binning: compression rate vs cardinality ===\n");
+    println!(
+        "{:>12} {:>10} {:>12} {:>14}",
+        "continuous", "G (raw)", "G (binned)", "ratio gained"
+    );
+    let n = 100_000;
+    for covs in [1usize, 2, 3] {
+        let batch = generate_high_cardinality(n, covs, 7);
+        let f_idx = batch.schema().feature_indices();
+        // Raw: compress on exact continuous values.
+        let mut raw = SuffStatsCompressor::new(f_idx.len(), 1);
+        // Binned: decile-bin the continuous columns first.
+        let binners: Vec<Binner> = (0..covs)
+            .map(|c| Binner::fit_quantiles(batch.column_by_name(&format!("x{c}")).unwrap(), 10))
+            .collect();
+        let mut binned = SuffStatsCompressor::new(f_idx.len(), 1);
+        let y = batch.column_by_name("y0").unwrap();
+        let mut feats = vec![0.0; f_idx.len()];
+        for i in 0..n {
+            batch.read_features(i, &f_idx, &mut feats);
+            raw.push(&feats, &[y[i]]);
+            let mut b = feats.clone();
+            for (c, binner) in binners.iter().enumerate() {
+                b[2 + c] = binner.bin(feats[2 + c]) as f64;
+            }
+            binned.push(&b, &[y[i]]);
+        }
+        let (raw, binned) = (raw.finish(), binned.finish());
+        println!(
+            "{:>10} x {:>10} {:>12} {:>13.0}x",
+            covs,
+            raw.num_groups(),
+            binned.num_groups(),
+            raw.num_groups() as f64 / binned.num_groups() as f64
+        );
+    }
+
+    println!("\n=== compression throughput (single-threaded fold) ===\n");
+    let batch = generate_high_cardinality(200_000, 1, 3);
+    let f_idx = batch.schema().feature_indices();
+    let y = batch.column_by_name("y0").unwrap().to_vec();
+    let binner = Binner::fit_quantiles(batch.column_by_name("x0").unwrap(), 10);
+    let r = bench("compress 200k rows (binned)", || {
+        let mut c = SuffStatsCompressor::new(3, 1);
+        let mut feats = vec![0.0; 3];
+        for i in 0..batch.num_rows() {
+            batch.read_features(i, &f_idx, &mut feats);
+            feats[2] = binner.bin(feats[2]) as f64;
+            c.push(&feats, &[y[i]]);
+        }
+        black_box(c.finish())
+    });
+    report(&r);
+    println!(
+        "  -> {:.1} Mrows/s",
+        batch.num_rows() as f64 / r.median.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,18 @@
+//! §Perf microbench: the L3 group-by fold in isolation (1M rows, 6
+//! features, ~4k groups). This is the workload used for the before/after
+//! measurements in EXPERIMENTS.md §Perf (34 -> 51 Mrows/s after the
+//! borrowed-slice key probe).
+use yoco::compress::SuffStatsCompressor;
+use yoco::util::bench::{bench, black_box, report};
+fn main() {
+    let rows: Vec<[f64; 6]> = (0..1_000_000).map(|i| {
+        [1.0, (i % 2) as f64, ((i / 2) % 8) as f64, ((i / 16) % 16) as f64, ((i / 7) % 4) as f64, 0.0]
+    }).collect();
+    let r = bench("compress 1M rows (group-by fold)", || {
+        let mut c = SuffStatsCompressor::new(6, 1);
+        for (i, row) in rows.iter().enumerate() { c.push(row, &[i as f64]); }
+        black_box(c.finish())
+    });
+    report(&r);
+    println!("{:.2} Mrows/s", 1.0 / r.median.as_secs_f64());
+}

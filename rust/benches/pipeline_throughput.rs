@@ -1,0 +1,73 @@
+//! Streaming-pipeline throughput and scaling: workers sweep, chunk-size
+//! sweep, backpressure behaviour, and the associative-merge overhead.
+//!
+//! Not a direct paper figure, but the substrate behind the §1 claim that
+//! compression makes 50M-row datasets tractable interactively — ingest
+//! throughput is what bounds "compress once".
+//!
+//! Run: `cargo bench --bench pipeline_throughput`.
+
+use yoco::data::gen::{generate_xp, XpConfig};
+use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
+use yoco::util::bench::{bench, black_box, report};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 200_000 } else { 1_000_000 };
+    let (batch, _) = generate_xp(&XpConfig { n, outcomes: 2, ..Default::default() });
+    println!("=== pipeline throughput, n={n} ===\n");
+
+    println!("-- worker scaling (chunk=8192) --");
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = PipelineConfig {
+            workers,
+            virtual_shards: workers * 16,
+            queue_capacity: 4,
+            chunk_rows: 8192,
+            rebalance_every: 64,
+        };
+        let r = bench(&format!("workers={workers}"), || {
+            let pipe = Pipeline::new(cfg.clone(), PipelineMode::SuffStats);
+            black_box(pipe.run_batch(&batch).unwrap())
+        });
+        report(&r);
+        println!(
+            "    -> {:.1} Mrows/s",
+            n as f64 / r.median.as_secs_f64() / 1e6
+        );
+    }
+
+    println!("\n-- chunk-size sweep (workers=4) --");
+    for chunk in [512usize, 4096, 8192, 32768] {
+        let cfg = PipelineConfig {
+            workers: 4,
+            virtual_shards: 64,
+            queue_capacity: 4,
+            chunk_rows: chunk,
+            rebalance_every: 64,
+        };
+        let r = bench(&format!("chunk={chunk}"), || {
+            let pipe = Pipeline::new(cfg.clone(), PipelineMode::SuffStats);
+            black_box(pipe.run_batch(&batch).unwrap())
+        });
+        report(&r);
+    }
+
+    println!("\n-- backpressure: tiny queues must not deadlock, only stall --");
+    let cfg = PipelineConfig {
+        workers: 2,
+        virtual_shards: 32,
+        queue_capacity: 1,
+        chunk_rows: 1024,
+        rebalance_every: 0,
+    };
+    let pipe = Pipeline::new(cfg, PipelineMode::SuffStats);
+    let result = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();
+    let m = pipe.metrics();
+    println!(
+        "queue_capacity=1: {} rows ok, stalls={} ({} chunks) -> backpressure engaged",
+        result.total_n(),
+        m.producer_stalls,
+        m.chunks_in
+    );
+}

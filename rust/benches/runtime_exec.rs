@@ -1,0 +1,63 @@
+//! AOT-runtime execution latency: native Rust engine vs the PJRT
+//! executables, per graph kind and bucket size — the L3-vs-L2/L1 engine
+//! comparison behind DESIGN.md §Perf.
+//!
+//! Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench runtime_exec`.
+
+use std::path::Path;
+
+use yoco::compress::SuffStatsCompressor;
+use yoco::estimator::{fit_wls_suffstats, CovarianceKind};
+use yoco::runtime::RuntimeEngine;
+use yoco::util::bench::{bench, black_box, report};
+
+fn xp_compressed(n: usize, cells: usize) -> yoco::compress::CompressedData {
+    let mut c = SuffStatsCompressor::new(4, 1);
+    for i in 0..n {
+        let t = (i % 2) as f64;
+        let a = ((i / 2) % cells) as f64;
+        let b = ((i / 4) % 3) as f64;
+        let y = 1.0 + 0.5 * t + 0.1 * a - 0.2 * b
+            + (((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5);
+        c.push(&[1.0, t, a, b], &[y]);
+    }
+    c.finish()
+}
+
+fn main() {
+    let engine = match RuntimeEngine::load(Path::new("artifacts")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("runtime_exec: {e}\nrun `make artifacts` first");
+            std::process::exit(0); // don't fail `cargo bench` pre-artifacts
+        }
+    };
+    println!("=== PJRT runtime vs native engine (platform: {}) ===\n", engine.platform());
+
+    for (label, cells) in [("G~384", 64usize), ("G~1500", 250), ("G~3840", 640)] {
+        let d = xp_compressed(100_000, cells);
+        println!("{label}: G = {}", d.num_groups());
+        for kind in [CovarianceKind::Homoskedastic, CovarianceKind::Heteroskedastic] {
+            let klabel = match kind {
+                CovarianceKind::Homoskedastic => "hom",
+                CovarianceKind::Heteroskedastic => "hc0",
+                CovarianceKind::ClusterRobust => "clu",
+            };
+            // Warm the executable cache first so we bench execution, not
+            // compilation.
+            let _ = engine.fit(&d, 0, kind).unwrap();
+            let r_native = bench(&format!("native/{klabel}/{label}"), || {
+                black_box(fit_wls_suffstats(&d, 0, kind).unwrap())
+            });
+            report(&r_native);
+            let r_pjrt = bench(&format!("pjrt/{klabel}/{label}"), || {
+                black_box(engine.fit(&d, 0, kind).unwrap())
+            });
+            report(&r_pjrt);
+        }
+        println!();
+    }
+    println!("(compiled executables cached: {})", engine.compiled_count());
+}

@@ -1,0 +1,250 @@
+//! §5.3.3 (balanced panel) + Appendix A — Kronecker-factored compression.
+//!
+//! For a balanced panel the design factorizes as
+//!
+//!   M = [ M₁ | M₂ | M₃ ],   M₁ = static per-cluster features
+//!                            M₂ = 1_C ⊗ M̃₂ (shared T × p₂ time design)
+//!                            M₃ = M̃₁ ⊗ M̃₂ row-wise (interactions)
+//!
+//! so the entire model — including the interaction block, which would
+//! materialize as an n × p₁p₂ matrix — is estimable from just
+//! **M̃₁ (C × p₁), M̃₂ (T × p₂), and Y = Matrix(y, T, C)**.
+//!
+//! Using the appendix identities, the per-cluster moment blocks reduce to
+//! (with m₁ = cluster's static row, s₂ = 1ᵀM̃₂, G₂ = M̃₂ᵀM̃₂,
+//! q_c = M̃₂ᵀ y_c, B₃ = Matrix(β₃, p₂, p₁)):
+//!
+//!   K¹_c β̂ = [ m₁ · r_c ;  u_c ;  m₁ ⊗ u_c ]
+//!     r_c = T·m₁ᵀβ₁ + s₂ᵀβ₂ + m₁ᵀ(B₃ᵀs₂)       (scalar)
+//!     u_c = s₂·(m₁ᵀβ₁) + G₂(β₂ + B₃ m₁)          (p₂ vector)
+//!   K²_c   = [ m₁ · Σ_t y_ct ;  q_c ;  m₁ ⊗ q_c ]
+//!
+//! which makes the cluster-robust meat Σ_c v_c v_cᵀ with
+//! v_c = K²_c − K¹_c β̂ computable in O(T·p₂ + p₁p₂) per cluster and the
+//! summed Gram Σ_c K¹_c available in closed form (no per-cluster loop at
+//! all for the bread). Estimation lives in
+//! [`estimator::balanced_panel`](crate::estimator).
+
+use crate::error::{Result, YocoError};
+use crate::linalg::Matrix;
+
+/// Compressed balanced panel: the three small matrices of Appendix A.
+#[derive(Debug, Clone)]
+pub struct BalancedPanelCompressed {
+    /// Static feature matrix M̃₁ (C × p₁), one row per cluster.
+    pub m1: Matrix,
+    /// Shared dynamic design M̃₂ (T × p₂), identical for every cluster.
+    pub m2: Matrix,
+    /// Outcomes reshaped as Matrix(y, T, C): column c = cluster c's series.
+    pub y: Matrix,
+}
+
+impl BalancedPanelCompressed {
+    /// Number of clusters C.
+    pub fn num_clusters(&self) -> usize {
+        self.m1.rows()
+    }
+
+    /// Panel length T.
+    pub fn t_len(&self) -> usize {
+        self.m2.rows()
+    }
+
+    /// Static feature count p₁.
+    pub fn p1(&self) -> usize {
+        self.m1.cols()
+    }
+
+    /// Dynamic feature count p₂.
+    pub fn p2(&self) -> usize {
+        self.m2.cols()
+    }
+
+    /// Original row count n = C·T.
+    pub fn total_rows(&self) -> u64 {
+        (self.num_clusters() * self.t_len()) as u64
+    }
+
+    /// Design width with interactions: p₂ + p₁p₂.
+    ///
+    /// The interacted design is `[M₂ | M₁⊗M₂]`: when M̃₂ carries an
+    /// intercept column the standalone M₁ block is exactly spanned by
+    /// the `M₁ ⊗ 1` interactions (the paper's `α + M₁β₁ + M₂β₂ + M₃β₃`
+    /// would be collinear), so we estimate the full-rank
+    /// reparameterization with identical span — M₁ main effects are the
+    /// β₃ coefficients on the intercept-column interactions.
+    pub fn design_width_interacted(&self) -> usize {
+        self.p2() + self.p1() * self.p2()
+    }
+
+    /// Design width without interactions: p₁ + p₂.
+    pub fn design_width_plain(&self) -> usize {
+        self.p1() + self.p2()
+    }
+
+    /// Memory footprint of the compressed form in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        8 * (self.m1.rows() * self.m1.cols()
+            + self.m2.rows() * self.m2.cols()
+            + self.y.rows() * self.y.cols())
+    }
+
+    /// Memory the *uncompressed* interacted design would need (the §5.3
+    /// "potentially enormous matrix" M₃ included).
+    pub fn uncompressed_bytes_interacted(&self) -> usize {
+        8 * self.num_clusters() * self.t_len() * (self.design_width_interacted() + 1)
+    }
+
+    /// Materialize the full uncompressed interacted design
+    /// `[M₂ | M₁⊗M₂]` (rows + y), for oracle tests only — this is
+    /// exactly what the compression avoids.
+    pub fn materialize_interacted(&self) -> (Matrix, Vec<f64>) {
+        let (c_n, t, p1, p2) = (self.num_clusters(), self.t_len(), self.p1(), self.p2());
+        let p = self.design_width_interacted();
+        let mut m = Matrix::zeros(c_n * t, p);
+        let mut y = Vec::with_capacity(c_n * t);
+        for c in 0..c_n {
+            let m1 = self.m1.row(c);
+            for tt in 0..t {
+                let m2 = self.m2.row(tt);
+                let row = m.row_mut(c * t + tt);
+                row[..p2].copy_from_slice(m2);
+                for i in 0..p1 {
+                    for j in 0..p2 {
+                        row[p2 + i * p2 + j] = m1[i] * m2[j];
+                    }
+                }
+                y.push(self.y[(tt, c)]);
+            }
+        }
+        (m, y)
+    }
+
+    /// Materialize the plain (no-interaction) design.
+    pub fn materialize_plain(&self) -> (Matrix, Vec<f64>) {
+        let (c_n, t, p1, p2) = (self.num_clusters(), self.t_len(), self.p1(), self.p2());
+        let mut m = Matrix::zeros(c_n * t, p1 + p2);
+        let mut y = Vec::with_capacity(c_n * t);
+        for c in 0..c_n {
+            let m1 = self.m1.row(c);
+            for tt in 0..t {
+                let row = m.row_mut(c * t + tt);
+                row[..p1].copy_from_slice(m1);
+                row[p1..].copy_from_slice(self.m2.row(tt));
+                y.push(self.y[(tt, c)]);
+            }
+        }
+        (m, y)
+    }
+}
+
+/// Builder: feed per-cluster static rows + outcome series against a
+/// shared time design.
+pub struct BalancedPanelCompressor {
+    m2: Matrix,
+    m1_rows: Vec<Vec<f64>>,
+    y_cols: Vec<Vec<f64>>,
+    p1: usize,
+}
+
+impl BalancedPanelCompressor {
+    /// New compressor with the shared dynamic design `m2` (T × p₂) and
+    /// `p1` static features per cluster.
+    pub fn new(m2: Matrix, p1: usize) -> Self {
+        BalancedPanelCompressor { m2, m1_rows: Vec::new(), y_cols: Vec::new(), p1 }
+    }
+
+    /// Add one cluster: its static feature row and its outcome series
+    /// (must have length T).
+    pub fn push_cluster(&mut self, m1_row: &[f64], y_series: &[f64]) -> Result<()> {
+        if m1_row.len() != self.p1 {
+            return Err(YocoError::shape(format!(
+                "static row has {} features, expected {}",
+                m1_row.len(),
+                self.p1
+            )));
+        }
+        if y_series.len() != self.m2.rows() {
+            return Err(YocoError::shape(format!(
+                "series length {} != panel length {} (unbalanced panels need §5.3.1/§5.3.2)",
+                y_series.len(),
+                self.m2.rows()
+            )));
+        }
+        self.m1_rows.push(m1_row.to_vec());
+        self.y_cols.push(y_series.to_vec());
+        Ok(())
+    }
+
+    /// Finalize.
+    pub fn finish(self) -> BalancedPanelCompressed {
+        let c_n = self.m1_rows.len();
+        let t = self.m2.rows();
+        let m1 = Matrix::from_rows(&self.m1_rows);
+        let mut y = Matrix::zeros(t, c_n);
+        for (c, col) in self.y_cols.iter().enumerate() {
+            for (tt, &v) in col.iter().enumerate() {
+                y[(tt, c)] = v;
+            }
+        }
+        BalancedPanelCompressed { m1, m2: self.m2, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn time_design(t: usize) -> Matrix {
+        // [1, t] time design
+        Matrix::from_rows(&(0..t).map(|tt| vec![1.0, tt as f64]).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn shapes_and_memory() {
+        let mut c = BalancedPanelCompressor::new(time_design(4), 2);
+        c.push_cluster(&[1.0, 0.0], &[1., 2., 3., 4.]).unwrap();
+        c.push_cluster(&[0.0, 1.0], &[2., 2., 2., 2.]).unwrap();
+        let d = c.finish();
+        assert_eq!(d.num_clusters(), 2);
+        assert_eq!(d.t_len(), 4);
+        assert_eq!(d.design_width_interacted(), 2 + 4);
+        assert_eq!(d.total_rows(), 8);
+        assert!(d.memory_bytes() < d.uncompressed_bytes_interacted());
+        assert_eq!(d.y[(2, 0)], 3.0);
+        assert_eq!(d.y[(1, 1)], 2.0);
+    }
+
+    #[test]
+    fn materialization_lays_out_kronecker_rows() {
+        let mut c = BalancedPanelCompressor::new(time_design(2), 1);
+        c.push_cluster(&[3.0], &[10.0, 20.0]).unwrap();
+        let d = c.finish();
+        let (m, y) = d.materialize_interacted();
+        // Row (c=0, t=1): m2=[1,1], m3 = 3·[1,1] = [3,3]
+        assert_eq!(m.row(1), &[1.0, 1.0, 3.0, 3.0]);
+        assert_eq!(y, vec![10.0, 20.0]);
+        let (mp, _) = d.materialize_plain();
+        assert_eq!(mp.row(1), &[3.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn wrong_series_length_rejected() {
+        let mut c = BalancedPanelCompressor::new(time_design(3), 1);
+        assert!(c.push_cluster(&[1.0], &[1.0, 2.0]).is_err());
+        assert!(c.push_cluster(&[1.0, 2.0], &[1.0, 2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn compression_factor_scales_with_t() {
+        // n·(p+1) doubles uncompressed vs C·p1 + T·p2 + C·T compressed.
+        let t = 50;
+        let mut c = BalancedPanelCompressor::new(time_design(t), 3);
+        for i in 0..100 {
+            c.push_cluster(&[1.0, (i % 2) as f64, 0.0], &vec![1.0; t]).unwrap();
+        }
+        let d = c.finish();
+        let ratio = d.uncompressed_bytes_interacted() as f64 / d.memory_bytes() as f64;
+        assert!(ratio > 5.0, "ratio = {ratio}");
+    }
+}

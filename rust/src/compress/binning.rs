@@ -1,0 +1,170 @@
+//! §6 — binning high-cardinality features to make compression practical.
+//!
+//! Continuous covariates defeat exact-duplicate compression (every row is
+//! unique). Binning X into quantile bins and regressing on the resulting
+//! dummies (a) restores a high compression rate and (b) is a general
+//! nonlinear feature transform; because X is pre-treatment, the binned
+//! model's treatment-effect estimator remains consistent (no endogeneity
+//! via measurement error — Wooldridge §4.4 argument in the paper).
+
+/// A fitted binning transform for one continuous column.
+#[derive(Debug, Clone)]
+pub struct Binner {
+    /// Interior cut points (ascending): bin b covers
+    /// (cuts[b-1], cuts[b]], with b=0 below cuts[0].
+    cuts: Vec<f64>,
+}
+
+impl Binner {
+    /// Fit quantile (e.g. decile) cuts from a sample of the column.
+    /// `bins` must be ≥ 2; duplicate quantiles collapse (fewer effective
+    /// bins for highly skewed data).
+    pub fn fit_quantiles(values: &[f64], bins: usize) -> Self {
+        assert!(bins >= 2, "need at least 2 bins");
+        assert!(!values.is_empty(), "cannot fit binner on empty column");
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cuts = Vec::with_capacity(bins - 1);
+        for b in 1..bins {
+            let q = b as f64 / bins as f64;
+            let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+            let cut = sorted[idx];
+            // Skip duplicate quantiles and cuts at the minimum (both would
+            // create empty bins — e.g. constant columns produce no cuts).
+            if cut > sorted[0] && cuts.last().map_or(true, |&last| cut > last) {
+                cuts.push(cut);
+            }
+        }
+        Binner { cuts }
+    }
+
+    /// Fit equal-width cuts over the observed range.
+    pub fn fit_equal_width(values: &[f64], bins: usize) -> Self {
+        assert!(bins >= 2);
+        assert!(!values.is_empty());
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let width = (hi - lo) / bins as f64;
+        let cuts = if width > 0.0 {
+            (1..bins).map(|b| lo + width * b as f64).collect()
+        } else {
+            Vec::new()
+        };
+        Binner { cuts }
+    }
+
+    /// Number of bins this transform produces.
+    pub fn num_bins(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// Bin index for a value (0-based; binary search over the cuts).
+    #[inline]
+    pub fn bin(&self, v: f64) -> usize {
+        // partition_point returns count of cuts < v… we want v <= cut to
+        // stay in the lower bin, i.e. first cut with cut >= v.
+        self.cuts.partition_point(|&c| c < v)
+    }
+
+    /// Dummy-encode a value into `out` (length `num_bins() - 1`;
+    /// bin 0 is the reference level). `out` is zeroed first.
+    pub fn encode_dummies(&self, v: f64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.num_bins() - 1);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let b = self.bin(v);
+        if b > 0 {
+            out[b - 1] = 1.0;
+        }
+    }
+
+    /// The interior cut points.
+    pub fn cuts(&self) -> &[f64] {
+        &self.cuts
+    }
+}
+
+/// Round a feature to `decimals` decimal places — the paper's lighter-
+/// weight alternative to binning for medium-cardinality features.
+#[inline]
+pub fn round_to(v: f64, decimals: i32) -> f64 {
+    let s = 10f64.powi(decimals);
+    (v * s).round() / s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_bins_are_balanced() {
+        let values: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let b = Binner::fit_quantiles(&values, 10);
+        assert_eq!(b.num_bins(), 10);
+        // Each decile gets ~100 values.
+        let mut counts = vec![0usize; 10];
+        for &v in &values {
+            counts[b.bin(v)] += 1;
+        }
+        for c in counts {
+            assert!((90..=110).contains(&c), "unbalanced decile: {c}");
+        }
+    }
+
+    #[test]
+    fn equal_width_bins() {
+        let values = vec![0.0, 10.0];
+        let b = Binner::fit_equal_width(&values, 5);
+        assert_eq!(b.num_bins(), 5);
+        assert_eq!(b.bin(0.5), 0);
+        assert_eq!(b.bin(9.9), 4);
+        assert_eq!(b.bin(-1.0), 0);
+        assert_eq!(b.bin(99.0), 4);
+    }
+
+    #[test]
+    fn constant_column_degrades_gracefully() {
+        let values = vec![3.0; 50];
+        let b = Binner::fit_equal_width(&values, 4);
+        assert_eq!(b.num_bins(), 1);
+        let q = Binner::fit_quantiles(&values, 4);
+        assert_eq!(q.num_bins(), 1);
+        assert_eq!(q.bin(3.0), 0);
+    }
+
+    #[test]
+    fn dummy_encoding() {
+        let values: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let b = Binner::fit_quantiles(&values, 4);
+        let mut out = vec![0.0; 3];
+        b.encode_dummies(1.0, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0]); // reference bin
+        b.encode_dummies(99.0, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn binning_restores_compression() {
+        use crate::compress::SuffStatsCompressor;
+        // Continuous feature: no compression. Binned: G ≈ bins.
+        let values: Vec<f64> = (0..500).map(|i| (i as f64) * 0.01).collect();
+        let binner = Binner::fit_quantiles(&values, 10);
+        let mut raw = SuffStatsCompressor::new(1, 1);
+        let mut binned = SuffStatsCompressor::new(1, 1);
+        for &v in &values {
+            raw.push(&[v], &[1.0]);
+            binned.push(&[binner.bin(v) as f64], &[1.0]);
+        }
+        assert_eq!(raw.finish().num_groups(), 500);
+        assert_eq!(binned.finish().num_groups(), 10);
+    }
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(-1.005, 1), -1.0);
+        assert_eq!(round_to(123.0, -1), 120.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! §5.3.2 — between-cluster compression.
+//!
+//! Groups *clusters* with identical feature matrices M_c (rather than
+//! rows with identical feature vectors), mixing observations from many
+//! clusters into one group. The required sufficient statistics per group
+//! become the vector sum Σ_c y_c and the **sum of outer products**
+//! Σ_c y_c y_cᵀ — the off-diagonal elements are what capture
+//! within-cluster autocorrelation, replacing the scalar ỹ''.
+//!
+//! The cost is a statistic quadratic in the within-cluster length T_g;
+//! the benefit is that a balanced panel compresses to G¹·T records where
+//! G¹ counts the unique *static* feature combinations.
+
+use std::collections::HashMap;
+
+use super::key::{FeatureKey, FxHasherBuilder};
+use crate::linalg::Matrix;
+
+/// One group of clusters sharing a feature matrix.
+#[derive(Debug, Clone)]
+pub struct ClusterGroup {
+    /// Shared feature matrix M_g (T_g × p).
+    pub features: Matrix,
+    /// Number of clusters stacked into this group (n_g).
+    pub n_clusters: f64,
+    /// Σ_c y_c (length T_g).
+    pub y_sum: Vec<f64>,
+    /// Σ_c y_c y_cᵀ (T_g × T_g, symmetric).
+    pub y_outer: Matrix,
+}
+
+/// §5.3.2 compressed dataset: Gᶜ cluster-groups.
+#[derive(Debug, Clone)]
+pub struct BetweenClusterCompressed {
+    p: usize,
+    groups: Vec<ClusterGroup>,
+    total_rows: u64,
+    total_clusters: u64,
+}
+
+impl BetweenClusterCompressed {
+    /// Number of cluster-groups Gᶜ.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of features p.
+    pub fn num_features(&self) -> usize {
+        self.p
+    }
+
+    /// Original row count n.
+    pub fn total_rows(&self) -> u64 {
+        self.total_rows
+    }
+
+    /// Original cluster count C.
+    pub fn total_clusters(&self) -> u64 {
+        self.total_clusters
+    }
+
+    /// The cluster-groups.
+    pub fn groups(&self) -> &[ClusterGroup] {
+        &self.groups
+    }
+
+    /// Number of compressed records when flattened row-wise
+    /// (Σ_g T_g — the paper's "G¹·T records" for a balanced panel).
+    pub fn num_records(&self) -> usize {
+        self.groups.iter().map(|g| g.features.rows()).sum()
+    }
+
+    /// Approximate memory footprint in bytes, including the quadratic
+    /// y-outer statistic (the §5.3.2 trade-off made measurable).
+    pub fn memory_bytes(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| {
+                8 * (g.features.rows() * g.features.cols()
+                    + g.y_sum.len()
+                    + g.y_outer.rows() * g.y_outer.cols()
+                    + 1)
+            })
+            .sum()
+    }
+}
+
+/// Streaming builder: feed complete clusters (feature matrix + outcome
+/// vector, rows in a canonical order such as time).
+pub struct BetweenClusterCompressor {
+    p: usize,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    groups: Vec<ClusterGroup>,
+    total_rows: u64,
+    total_clusters: u64,
+}
+
+impl BetweenClusterCompressor {
+    /// New compressor for `p` features.
+    pub fn new(p: usize) -> Self {
+        BetweenClusterCompressor {
+            p,
+            index: HashMap::with_hasher(FxHasherBuilder),
+            groups: Vec::new(),
+            total_rows: 0,
+            total_clusters: 0,
+        }
+    }
+
+    /// Add one complete cluster: `features` is T_c × p row-major,
+    /// `y` has length T_c. Clusters with bit-identical feature matrices
+    /// (including row order) collapse into one group.
+    pub fn push_cluster(&mut self, features: &Matrix, y: &[f64]) {
+        assert_eq!(features.cols(), self.p);
+        assert_eq!(features.rows(), y.len());
+        let key = FeatureKey::from_row(features.as_slice());
+        let g = match self.index.get(&key) {
+            Some(&g) => g,
+            None => {
+                let t = features.rows();
+                let g = self.groups.len();
+                self.groups.push(ClusterGroup {
+                    features: features.clone(),
+                    n_clusters: 0.0,
+                    y_sum: vec![0.0; t],
+                    y_outer: Matrix::zeros(t, t),
+                });
+                self.index.insert(key, g);
+                g
+            }
+        };
+        let grp = &mut self.groups[g];
+        grp.n_clusters += 1.0;
+        for (t, &yt) in y.iter().enumerate() {
+            grp.y_sum[t] += yt;
+            let row = grp.y_outer.row_mut(t);
+            for (s, &ys) in y.iter().enumerate() {
+                row[s] += yt * ys;
+            }
+        }
+        self.total_rows += y.len() as u64;
+        self.total_clusters += 1;
+    }
+
+    /// Finalize.
+    pub fn finish(self) -> BetweenClusterCompressed {
+        BetweenClusterCompressed {
+            p: self.p,
+            groups: self.groups,
+            total_rows: self.total_rows,
+            total_clusters: self.total_clusters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster_m(t: usize, treat: f64) -> Matrix {
+        // intercept, treat, time
+        Matrix::from_rows(
+            &(0..t).map(|tt| vec![1.0, treat, tt as f64]).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn identical_cluster_matrices_collapse() {
+        let mut c = BetweenClusterCompressor::new(3);
+        c.push_cluster(&cluster_m(4, 0.0), &[1., 2., 3., 4.]);
+        c.push_cluster(&cluster_m(4, 1.0), &[5., 6., 7., 8.]);
+        c.push_cluster(&cluster_m(4, 0.0), &[2., 2., 2., 2.]);
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 2);
+        assert_eq!(d.total_clusters(), 3);
+        assert_eq!(d.total_rows(), 12);
+        assert_eq!(d.num_records(), 8); // 2 groups × T=4
+        let g0 = &d.groups()[0];
+        assert_eq!(g0.n_clusters, 2.0);
+        assert_eq!(g0.y_sum, vec![3., 4., 5., 6.]);
+        // y_outer[0][1] = 1*2 + 2*2 = 6
+        assert_eq!(g0.y_outer[(0, 1)], 6.0);
+        // diag holds Σ y_t² = 1+4=5 at t=0
+        assert_eq!(g0.y_outer[(0, 0)], 5.0);
+    }
+
+    #[test]
+    fn different_lengths_never_collapse() {
+        let mut c = BetweenClusterCompressor::new(3);
+        c.push_cluster(&cluster_m(2, 0.0), &[1., 2.]);
+        c.push_cluster(&cluster_m(3, 0.0), &[1., 2., 3.]);
+        assert_eq!(c.finish().num_groups(), 2);
+    }
+
+    #[test]
+    fn outer_stat_is_symmetric() {
+        let mut c = BetweenClusterCompressor::new(3);
+        c.push_cluster(&cluster_m(3, 1.0), &[1., -2., 0.5]);
+        let d = c.finish();
+        let o = &d.groups()[0].y_outer;
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((o[(i, j)] - o[(j, i)]).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_condition_balanced_panel() {
+        // 20 clusters, only 2 unique static signatures -> 2 groups,
+        // num_records = 2T << n = 20T.
+        let mut c = BetweenClusterCompressor::new(3);
+        for i in 0..20 {
+            let treat = (i % 2) as f64;
+            c.push_cluster(&cluster_m(5, treat), &vec![i as f64; 5]);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 2);
+        assert_eq!(d.num_records(), 10);
+        assert_eq!(d.total_rows(), 100);
+    }
+}

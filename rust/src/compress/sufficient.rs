@@ -1,0 +1,610 @@
+//! §4 — lossless compression with conditionally sufficient statistics.
+//!
+//! Groups observations by exact feature vector m̃ and accumulates, per
+//! group and per outcome, the conditionally sufficient statistics
+//! `T(y|m*) = { Σ yᵢ, Σ yᵢ², n }` (the paper's ỹ', ỹ'', ñ). These are
+//! enough to recover β̂ *and* the homoskedastic / EHW covariances exactly,
+//! for every outcome at once — the **YOCO** property.
+
+use std::collections::HashMap;
+
+use super::key::{FeatureKey, FxHasherBuilder};
+use crate::error::{Result, YocoError};
+use crate::linalg::Matrix;
+
+/// Per-group, per-outcome sufficient statistics plus the group's feature
+/// vector, for `G` groups, `p` features, `o` outcomes.
+///
+/// This is the paper's Table 1(d) structure:
+/// `(m̃_g ; ỹ'_g ; ỹ''_g ; ñ_g)` for each compressed record, generalized to
+/// multiple outcomes (§7.1) and optionally carrying a per-group cluster
+/// assignment (§5.3.1).
+#[derive(Debug, Clone)]
+pub struct CompressedData {
+    p: usize,
+    o: usize,
+    features: Vec<f64>,  // G × p row-major
+    counts: Vec<f64>,    // ñ_g
+    sums: Vec<f64>,      // G × o row-major: ỹ'
+    sumsqs: Vec<f64>,    // G × o row-major: ỹ''
+    total_n: u64,
+    /// §5.3.1: the cluster each group belongs to (all of a group's rows
+    /// share it, by construction of the within-cluster compressor).
+    cluster_of: Option<Vec<u32>>,
+    num_clusters: usize,
+}
+
+impl CompressedData {
+    pub(crate) fn from_parts(
+        p: usize,
+        o: usize,
+        features: Vec<f64>,
+        counts: Vec<f64>,
+        sums: Vec<f64>,
+        sumsqs: Vec<f64>,
+        total_n: u64,
+        cluster_of: Option<Vec<u32>>,
+        num_clusters: usize,
+    ) -> Self {
+        let g = counts.len();
+        debug_assert_eq!(features.len(), g * p);
+        debug_assert_eq!(sums.len(), g * o);
+        debug_assert_eq!(sumsqs.len(), g * o);
+        CompressedData { p, o, features, counts, sums, sumsqs, total_n, cluster_of, num_clusters }
+    }
+
+    /// Number of compressed records G.
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Number of features p.
+    pub fn num_features(&self) -> usize {
+        self.p
+    }
+
+    /// Number of outcomes o.
+    pub fn num_outcomes(&self) -> usize {
+        self.o
+    }
+
+    /// Original (uncompressed) sample size n = Σ ñ_g.
+    pub fn total_n(&self) -> u64 {
+        self.total_n
+    }
+
+    /// Compression ratio n / G.
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_n as f64 / self.num_groups().max(1) as f64
+    }
+
+    /// Feature row of group `g` (m̃_g).
+    #[inline]
+    pub fn feature_row(&self, g: usize) -> &[f64] {
+        &self.features[g * self.p..(g + 1) * self.p]
+    }
+
+    /// Group sizes ñ.
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// ỹ'_g for outcome `k`.
+    #[inline]
+    pub fn sum(&self, g: usize, k: usize) -> f64 {
+        self.sums[g * self.o + k]
+    }
+
+    /// ỹ''_g for outcome `k`.
+    #[inline]
+    pub fn sumsq(&self, g: usize, k: usize) -> f64 {
+        self.sumsqs[g * self.o + k]
+    }
+
+    /// Column vector ỹ' for outcome `k`.
+    pub fn sums_for(&self, k: usize) -> Vec<f64> {
+        (0..self.num_groups()).map(|g| self.sum(g, k)).collect()
+    }
+
+    /// Column vector ỹ'' for outcome `k`.
+    pub fn sumsqs_for(&self, k: usize) -> Vec<f64> {
+        (0..self.num_groups()).map(|g| self.sumsq(g, k)).collect()
+    }
+
+    /// The feature matrix M̃ as a [`Matrix`] (G × p).
+    pub fn feature_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.num_groups(), self.p, self.features.clone())
+    }
+
+    /// §5.3.1 cluster assignment per group, when compressed within clusters.
+    pub fn cluster_of(&self) -> Option<&[u32]> {
+        self.cluster_of.as_deref()
+    }
+
+    /// Number of clusters C (0 when not cluster-compressed).
+    pub fn num_clusters(&self) -> usize {
+        self.num_clusters
+    }
+
+    /// Approximate in-memory footprint in bytes (for the §5.3 memory
+    /// comparison: compressed vs uncompressed).
+    pub fn memory_bytes(&self) -> usize {
+        8 * (self.features.len() + self.counts.len() + self.sums.len() + self.sumsqs.len())
+            + self.cluster_of.as_ref().map_or(0, |c| 4 * c.len())
+    }
+
+    /// Merge another compression of *disjoint* observations into this one
+    /// (associative + commutative — the pipeline's shard-merge).
+    ///
+    /// Identical feature vectors collapse; sufficient statistics add.
+    /// Cluster-tagged data can only merge with cluster-tagged data and
+    /// requires agreement on each shared group's cluster (guaranteed when
+    /// sharding by cluster or by feature key including the cluster id).
+    pub fn merge(&mut self, other: &CompressedData) -> Result<()> {
+        if self.p != other.p || self.o != other.o {
+            return Err(YocoError::shape(format!(
+                "merge shape mismatch: ({}, {}) vs ({}, {})",
+                self.p, self.o, other.p, other.o
+            )));
+        }
+        if self.cluster_of.is_some() != other.cluster_of.is_some() {
+            return Err(YocoError::invalid(
+                "cannot merge cluster-tagged with untagged compression",
+            ));
+        }
+        // Index existing groups by key.
+        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(self.num_groups() * 2, FxHasherBuilder);
+        for g in 0..self.num_groups() {
+            index.insert(self.key_of(g, self.cluster_of.as_ref().map(|c| c[g])), g);
+        }
+        for g in 0..other.num_groups() {
+            let oc = other.cluster_of.as_ref().map(|c| c[g]);
+            let key = other.key_of(g, oc);
+            match index.get(&key) {
+                Some(&mine) => {
+                    self.counts[mine] += other.counts[g];
+                    for k in 0..self.o {
+                        self.sums[mine * self.o + k] += other.sums[g * other.o + k];
+                        self.sumsqs[mine * self.o + k] += other.sumsqs[g * other.o + k];
+                    }
+                }
+                None => {
+                    let mine = self.num_groups();
+                    self.features.extend_from_slice(other.feature_row(g));
+                    self.counts.push(other.counts[g]);
+                    for k in 0..self.o {
+                        self.sums.push(other.sums[g * other.o + k]);
+                        self.sumsqs.push(other.sumsqs[g * other.o + k]);
+                    }
+                    if let Some(c) = self.cluster_of.as_mut() {
+                        c.push(oc.expect("tagged merge checked above"));
+                    }
+                    index.insert(key, mine);
+                }
+            }
+        }
+        self.total_n += other.total_n;
+        self.num_clusters = self.num_clusters.max(other.num_clusters);
+        Ok(())
+    }
+
+    /// Group key: features plus (for cluster-tagged data) the cluster id.
+    fn key_of(&self, g: usize, cluster: Option<u32>) -> FeatureKey {
+        let row = self.feature_row(g);
+        match cluster {
+            None => FeatureKey::from_row(row),
+            Some(c) => {
+                let mut ext = Vec::with_capacity(row.len() + 1);
+                ext.extend_from_slice(row);
+                ext.push(c as f64);
+                FeatureKey::from_row(&ext)
+            }
+        }
+    }
+
+    /// Shift all cluster ids by `offset` (pipeline merge helper: worker-
+    /// local dense ids become globally unique). No-op on untagged data.
+    pub fn offset_clusters(mut self, offset: u32) -> CompressedData {
+        if let Some(tags) = self.cluster_of.as_mut() {
+            for t in tags.iter_mut() {
+                *t += offset;
+            }
+            self.num_clusters += offset as usize;
+        }
+        self
+    }
+
+    /// Project to a subset of feature columns, re-compressing (groups
+    /// that collide under the projection merge — still lossless for the
+    /// smaller model). This is the "drop a feature and refit" interactive
+    /// workflow of §4.1.
+    pub fn project_features(&self, keep: &[usize]) -> Result<CompressedData> {
+        for &j in keep {
+            if j >= self.p {
+                return Err(YocoError::shape(format!("project: column {j} out of range")));
+            }
+        }
+        let mut c = SuffStatsCompressor::new(keep.len(), self.o);
+        if let Some(cl) = &self.cluster_of {
+            c = c.with_cluster_tags();
+            let mut feats = vec![0.0; keep.len()];
+            let mut outs_sum = vec![0.0; self.o];
+            let mut outs_sq = vec![0.0; self.o];
+            for g in 0..self.num_groups() {
+                let row = self.feature_row(g);
+                for (k, &j) in keep.iter().enumerate() {
+                    feats[k] = row[j];
+                }
+                for k in 0..self.o {
+                    outs_sum[k] = self.sum(g, k);
+                    outs_sq[k] = self.sumsq(g, k);
+                }
+                c.push_group(&feats, &outs_sum, &outs_sq, self.counts[g], Some(cl[g]));
+            }
+        } else {
+            let mut feats = vec![0.0; keep.len()];
+            let mut outs_sum = vec![0.0; self.o];
+            let mut outs_sq = vec![0.0; self.o];
+            for g in 0..self.num_groups() {
+                let row = self.feature_row(g);
+                for (k, &j) in keep.iter().enumerate() {
+                    feats[k] = row[j];
+                }
+                for k in 0..self.o {
+                    outs_sum[k] = self.sum(g, k);
+                    outs_sq[k] = self.sumsq(g, k);
+                }
+                c.push_group(&feats, &outs_sum, &outs_sq, self.counts[g], None);
+            }
+        }
+        let mut out = c.finish();
+        out.num_clusters = self.num_clusters;
+        Ok(out)
+    }
+
+    /// Add a derived feature column computed from existing features
+    /// (e.g. an interaction term — §4.1 "new features based on M̃ can be
+    /// generated"). The closure sees each group's feature row.
+    pub fn add_feature<F: Fn(&[f64]) -> f64>(&self, f: F) -> CompressedData {
+        let g_count = self.num_groups();
+        let new_p = self.p + 1;
+        let mut features = Vec::with_capacity(g_count * new_p);
+        for g in 0..g_count {
+            let row = self.feature_row(g);
+            features.extend_from_slice(row);
+            features.push(f(row));
+        }
+        CompressedData {
+            p: new_p,
+            o: self.o,
+            features,
+            counts: self.counts.clone(),
+            sums: self.sums.clone(),
+            sumsqs: self.sumsqs.clone(),
+            total_n: self.total_n,
+            cluster_of: self.cluster_of.clone(),
+            num_clusters: self.num_clusters,
+        }
+    }
+}
+
+/// Streaming builder for [`CompressedData`] (§4).
+///
+/// `push` one observation at a time; `finish` yields the compressed
+/// records. The builder is also used group-at-a-time by `merge`-style
+/// consumers via [`SuffStatsCompressor::push_group`].
+pub struct SuffStatsCompressor {
+    p: usize,
+    o: usize,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    features: Vec<f64>,
+    counts: Vec<f64>,
+    sums: Vec<f64>,
+    sumsqs: Vec<f64>,
+    total_n: u64,
+    tagged: bool,
+    cluster_of: Vec<u32>,
+    max_cluster: u32,
+    scratch: Vec<u64>,
+}
+
+impl SuffStatsCompressor {
+    /// New compressor for `p` features and `o` outcomes.
+    pub fn new(p: usize, o: usize) -> Self {
+        SuffStatsCompressor {
+            p,
+            o,
+            index: HashMap::with_hasher(FxHasherBuilder),
+            features: Vec::new(),
+            counts: Vec::new(),
+            sums: Vec::new(),
+            sumsqs: Vec::new(),
+            total_n: 0,
+            tagged: false,
+            cluster_of: Vec::new(),
+            max_cluster: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Enable §5.3.1 cluster tagging: groups are keyed by
+    /// (features, cluster) and remember their cluster.
+    pub fn with_cluster_tags(mut self) -> Self {
+        self.tagged = true;
+        self
+    }
+
+    /// Add one observation: feature row + one value per outcome.
+    #[inline]
+    pub fn push(&mut self, features: &[f64], outcomes: &[f64]) {
+        debug_assert_eq!(features.len(), self.p);
+        debug_assert_eq!(outcomes.len(), self.o);
+        debug_assert!(!self.tagged, "tagged compressor needs push_clustered");
+        self.push_inner(features, outcomes, None);
+    }
+
+    /// Add one observation with its cluster id (within-cluster mode).
+    #[inline]
+    pub fn push_clustered(&mut self, features: &[f64], outcomes: &[f64], cluster: u32) {
+        debug_assert!(self.tagged);
+        self.push_inner(features, outcomes, Some(cluster));
+    }
+
+    #[inline]
+    fn push_inner(&mut self, features: &[f64], outcomes: &[f64], cluster: Option<u32>) {
+        // Canonicalize into the reusable scratch buffer and probe by
+        // borrowed slice — a key is allocated only for *new* groups, so
+        // the steady-state hot loop is allocation-free (EXPERIMENTS.md
+        // §Perf).
+        super::key::canonicalize_into(features, &mut self.scratch);
+        if let Some(c) = cluster {
+            self.scratch.push((c as f64).to_bits());
+        }
+        let o = self.o;
+        let g = match self.index.get(self.scratch.as_slice()) {
+            Some(&g) => g,
+            None => {
+                let g = self.counts.len();
+                self.features.extend_from_slice(features);
+                self.counts.push(0.0);
+                self.sums.extend(std::iter::repeat(0.0).take(o));
+                self.sumsqs.extend(std::iter::repeat(0.0).take(o));
+                if let Some(c) = cluster {
+                    self.cluster_of.push(c);
+                    self.max_cluster = self.max_cluster.max(c);
+                }
+                self.index.insert(FeatureKey::from_words(&self.scratch), g);
+                g
+            }
+        };
+        self.counts[g] += 1.0;
+        for (k, &y) in outcomes.iter().enumerate() {
+            self.sums[g * o + k] += y;
+            self.sumsqs[g * o + k] += y * y;
+        }
+        self.total_n += 1;
+    }
+
+    /// Fold an entire pre-aggregated group (used by projection / re-keying).
+    pub fn push_group(
+        &mut self,
+        features: &[f64],
+        sums: &[f64],
+        sumsqs: &[f64],
+        count: f64,
+        cluster: Option<u32>,
+    ) {
+        let key = match cluster {
+            None => FeatureKey::from_row(features),
+            Some(c) => {
+                let mut ext = Vec::with_capacity(features.len() + 1);
+                ext.extend_from_slice(features);
+                ext.push(c as f64);
+                FeatureKey::from_row(&ext)
+            }
+        };
+        let o = self.o;
+        let g = match self.index.get(&key) {
+            Some(&g) => g,
+            None => {
+                let g = self.counts.len();
+                self.features.extend_from_slice(features);
+                self.counts.push(0.0);
+                self.sums.extend(std::iter::repeat(0.0).take(o));
+                self.sumsqs.extend(std::iter::repeat(0.0).take(o));
+                if let Some(c) = cluster {
+                    self.cluster_of.push(c);
+                    self.max_cluster = self.max_cluster.max(c);
+                }
+                self.index.insert(key, g);
+                g
+            }
+        };
+        self.counts[g] += count;
+        for k in 0..o {
+            self.sums[g * o + k] += sums[k];
+            self.sumsqs[g * o + k] += sumsqs[k];
+        }
+        self.total_n += count.round() as u64;
+    }
+
+    /// Number of groups so far.
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Finalize into [`CompressedData`].
+    pub fn finish(self) -> CompressedData {
+        let num_clusters = if self.tagged && !self.counts.is_empty() {
+            self.max_cluster as usize + 1
+        } else {
+            0
+        };
+        CompressedData::from_parts(
+            self.p,
+            self.o,
+            self.features,
+            self.counts,
+            self.sums,
+            self.sumsqs,
+            self.total_n,
+            self.tagged.then_some(self.cluster_of),
+            num_clusters,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1's running example: features A/B/C as rows of a dummy
+    /// design, outcomes 1,1,2,3,4,5.
+    pub(crate) fn table1() -> CompressedData {
+        let m = [
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 0.0, 1.0],
+        ];
+        let y = [1.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut c = SuffStatsCompressor::new(3, 1);
+        for (mi, yi) in m.iter().zip(y) {
+            c.push(mi, &[yi]);
+        }
+        c.finish()
+    }
+
+    #[test]
+    fn table1_sufficient_statistics() {
+        // Paper Table 1(d): A -> (y'=4, y''=6, n=3), B -> (7, 25, 2), C -> (5, 25, 1).
+        let c = table1();
+        assert_eq!(c.num_groups(), 3);
+        assert_eq!(c.total_n(), 6);
+        // Group order is insertion order: A, B, C.
+        assert_eq!(c.counts(), &[3.0, 2.0, 1.0]);
+        assert_eq!(c.sums_for(0), vec![4.0, 7.0, 5.0]);
+        assert_eq!(c.sumsqs_for(0), vec![6.0, 25.0, 25.0]);
+        assert_eq!(c.feature_row(0), &[1.0, 0.0, 0.0]);
+        assert!((c.compression_ratio() - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn multi_outcome_yoco() {
+        // One compression serves two outcomes (§7.1).
+        let mut c = SuffStatsCompressor::new(1, 2);
+        c.push(&[1.0], &[2.0, 10.0]);
+        c.push(&[1.0], &[4.0, 20.0]);
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 1);
+        assert_eq!(d.sum(0, 0), 6.0);
+        assert_eq!(d.sum(0, 1), 30.0);
+        assert_eq!(d.sumsq(0, 1), 500.0);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_single_pass() {
+        let rows: Vec<(Vec<f64>, f64)> = (0..100)
+            .map(|i| (vec![(i % 5) as f64, (i % 3) as f64], i as f64 * 0.5))
+            .collect();
+        // Single pass.
+        let mut one = SuffStatsCompressor::new(2, 1);
+        for (m, y) in &rows {
+            one.push(m, &[*y]);
+        }
+        let one = one.finish();
+        // Two shards merged.
+        let mut a = SuffStatsCompressor::new(2, 1);
+        let mut b = SuffStatsCompressor::new(2, 1);
+        for (i, (m, y)) in rows.iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(m, &[*y]);
+            } else {
+                b.push(m, &[*y]);
+            }
+        }
+        let mut merged = a.finish();
+        merged.merge(&b.finish()).unwrap();
+        assert_eq!(merged.total_n(), one.total_n());
+        assert_eq!(merged.num_groups(), one.num_groups());
+        // Group order may differ; compare via sorted (key, stats) pairs.
+        let stats = |c: &CompressedData| {
+            let mut v: Vec<(Vec<u64>, Vec<u64>)> = (0..c.num_groups())
+                .map(|g| {
+                    let key: Vec<u64> =
+                        c.feature_row(g).iter().map(|v| v.to_bits()).collect();
+                    let vals = vec![
+                        c.counts()[g].to_bits(),
+                        c.sum(g, 0).to_bits(),
+                        c.sumsq(g, 0).to_bits(),
+                    ];
+                    (key, vals)
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(stats(&merged), stats(&one));
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_shapes() {
+        let a = SuffStatsCompressor::new(2, 1).finish();
+        let b = SuffStatsCompressor::new(3, 1).finish();
+        let mut a = a;
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn clustered_push_separates_clusters() {
+        let mut c = SuffStatsCompressor::new(1, 1).with_cluster_tags();
+        c.push_clustered(&[1.0], &[1.0], 0);
+        c.push_clustered(&[1.0], &[2.0], 1); // same features, different cluster
+        c.push_clustered(&[1.0], &[3.0], 0);
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 2);
+        assert_eq!(d.num_clusters(), 2);
+        let cl = d.cluster_of().unwrap();
+        assert_eq!(cl.len(), 2);
+    }
+
+    #[test]
+    fn projection_recompresses() {
+        // Two features; projecting away the second merges groups.
+        let mut c = SuffStatsCompressor::new(2, 1);
+        c.push(&[1.0, 0.0], &[1.0]);
+        c.push(&[1.0, 1.0], &[2.0]);
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 2);
+        let proj = d.project_features(&[0]).unwrap();
+        assert_eq!(proj.num_groups(), 1);
+        assert_eq!(proj.sum(0, 0), 3.0);
+        assert_eq!(proj.counts()[0], 2.0);
+        assert!(d.project_features(&[5]).is_err());
+    }
+
+    #[test]
+    fn add_feature_interaction() {
+        let d = table1();
+        let with_int = d.add_feature(|row| row[0] * 2.0 + row[1]);
+        assert_eq!(with_int.num_features(), 4);
+        assert_eq!(with_int.feature_row(0)[3], 2.0);
+        assert_eq!(with_int.feature_row(1)[3], 1.0);
+        assert_eq!(with_int.total_n(), d.total_n());
+    }
+
+    #[test]
+    fn memory_is_much_smaller_than_raw() {
+        let mut c = SuffStatsCompressor::new(2, 1);
+        for i in 0..10_000 {
+            c.push(&[(i % 4) as f64, 1.0], &[i as f64]);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 4);
+        // raw would be 10_000 * 3 * 8 bytes
+        assert!(d.memory_bytes() < 10_000 * 3 * 8 / 100);
+    }
+}

@@ -1,0 +1,235 @@
+//! §7.2 — compression when the original problem already carries weights
+//! (analytic / probability / importance weights).
+//!
+//! Deduplication is still on the feature vector alone — the presence of a
+//! continuous wᵢ does not hurt the compression rate — but the sufficient
+//! statistics become weighted moments. For the heteroskedasticity-
+//! consistent meat, w² moments are needed as well, so the compressor
+//! tracks, per group and outcome:
+//!
+//!   w̃       = Σ wᵢ          w̃₂      = Σ wᵢ²        ñ = Σ 1
+//!   ỹ'(w)   = Σ wᵢ yᵢ       ỹ''(w)  = Σ wᵢ yᵢ²
+//!   ỹ'(w²)  = Σ wᵢ² yᵢ      ỹ''(w²) = Σ wᵢ² yᵢ²
+
+use std::collections::HashMap;
+
+use super::key::{FeatureKey, FxHasherBuilder};
+use crate::linalg::Matrix;
+
+/// Weighted sufficient statistics per compressed record (§7.2).
+#[derive(Debug, Clone)]
+pub struct WeightedCompressedData {
+    p: usize,
+    o: usize,
+    features: Vec<f64>, // G × p
+    counts: Vec<f64>,   // ñ (raw record counts)
+    w: Vec<f64>,        // Σ w
+    w2: Vec<f64>,       // Σ w²
+    wy: Vec<f64>,       // G × o: Σ w y
+    wy2: Vec<f64>,      // G × o: Σ w y²
+    w2y: Vec<f64>,      // G × o: Σ w² y
+    w2y2: Vec<f64>,     // G × o: Σ w² y²
+    total_n: u64,
+    total_w: f64,
+}
+
+impl WeightedCompressedData {
+    /// Number of compressed records G.
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Number of features p.
+    pub fn num_features(&self) -> usize {
+        self.p
+    }
+
+    /// Number of outcomes o.
+    pub fn num_outcomes(&self) -> usize {
+        self.o
+    }
+
+    /// Original record count n.
+    pub fn total_n(&self) -> u64 {
+        self.total_n
+    }
+
+    /// Total weight Σᵢ wᵢ (the effective sample size for dof when the
+    /// weights are frequency weights).
+    pub fn total_weight(&self) -> f64 {
+        self.total_w
+    }
+
+    /// Feature row m̃_g.
+    pub fn feature_row(&self, g: usize) -> &[f64] {
+        &self.features[g * self.p..(g + 1) * self.p]
+    }
+
+    /// The feature matrix M̃.
+    pub fn feature_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.num_groups(), self.p, self.features.clone())
+    }
+
+    /// Group weights w̃ = Σ w (the WLS weights).
+    pub fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    /// Σ w² per group.
+    pub fn weights_sq(&self) -> &[f64] {
+        &self.w2
+    }
+
+    /// Raw record counts ñ per group.
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// ỹ'(w) for outcome k.
+    pub fn wy(&self, g: usize, k: usize) -> f64 {
+        self.wy[g * self.o + k]
+    }
+
+    /// ỹ''(w) for outcome k.
+    pub fn wy2(&self, g: usize, k: usize) -> f64 {
+        self.wy2[g * self.o + k]
+    }
+
+    /// ỹ'(w²) for outcome k.
+    pub fn w2y(&self, g: usize, k: usize) -> f64 {
+        self.w2y[g * self.o + k]
+    }
+
+    /// ỹ''(w²) for outcome k.
+    pub fn w2y2(&self, g: usize, k: usize) -> f64 {
+        self.w2y2[g * self.o + k]
+    }
+}
+
+/// Streaming builder for [`WeightedCompressedData`].
+pub struct WeightedSuffStatsCompressor {
+    p: usize,
+    o: usize,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    data: WeightedCompressedData,
+}
+
+impl WeightedSuffStatsCompressor {
+    /// New compressor for `p` features, `o` outcomes.
+    pub fn new(p: usize, o: usize) -> Self {
+        WeightedSuffStatsCompressor {
+            p,
+            o,
+            index: HashMap::with_hasher(FxHasherBuilder),
+            data: WeightedCompressedData {
+                p,
+                o,
+                features: Vec::new(),
+                counts: Vec::new(),
+                w: Vec::new(),
+                w2: Vec::new(),
+                wy: Vec::new(),
+                wy2: Vec::new(),
+                w2y: Vec::new(),
+                w2y2: Vec::new(),
+                total_n: 0,
+                total_w: 0.0,
+            },
+        }
+    }
+
+    /// Add one observation with weight `w`.
+    pub fn push(&mut self, features: &[f64], outcomes: &[f64], w: f64) {
+        debug_assert_eq!(features.len(), self.p);
+        debug_assert_eq!(outcomes.len(), self.o);
+        let key = FeatureKey::from_row(features);
+        let o = self.o;
+        let d = &mut self.data;
+        let g = match self.index.get(&key) {
+            Some(&g) => g,
+            None => {
+                let g = d.counts.len();
+                d.features.extend_from_slice(features);
+                d.counts.push(0.0);
+                d.w.push(0.0);
+                d.w2.push(0.0);
+                for v in [&mut d.wy, &mut d.wy2, &mut d.w2y, &mut d.w2y2] {
+                    v.extend(std::iter::repeat(0.0).take(o));
+                }
+                self.index.insert(key, g);
+                g
+            }
+        };
+        let w2 = w * w;
+        d.counts[g] += 1.0;
+        d.w[g] += w;
+        d.w2[g] += w2;
+        for (k, &y) in outcomes.iter().enumerate() {
+            d.wy[g * o + k] += w * y;
+            d.wy2[g * o + k] += w * y * y;
+            d.w2y[g * o + k] += w2 * y;
+            d.w2y2[g * o + k] += w2 * y * y;
+        }
+        d.total_n += 1;
+        d.total_w += w;
+    }
+
+    /// Finalize.
+    pub fn finish(self) -> WeightedCompressedData {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_weights_reduce_to_unweighted_stats() {
+        let mut wc = WeightedSuffStatsCompressor::new(1, 1);
+        let mut uc = super::super::SuffStatsCompressor::new(1, 1);
+        for i in 0..20 {
+            let m = [(i % 4) as f64];
+            let y = [i as f64 * 0.3];
+            wc.push(&m, &y, 1.0);
+            uc.push(&m, &y);
+        }
+        let (wd, ud) = (wc.finish(), uc.finish());
+        assert_eq!(wd.num_groups(), ud.num_groups());
+        for g in 0..wd.num_groups() {
+            assert!((wd.weights()[g] - ud.counts()[g]).abs() < 1e-12);
+            assert!((wd.wy(g, 0) - ud.sum(g, 0)).abs() < 1e-12);
+            assert!((wd.wy2(g, 0) - ud.sumsq(g, 0)).abs() < 1e-12);
+            // With w=1, w² moments equal w moments.
+            assert!((wd.w2y(g, 0) - wd.wy(g, 0)).abs() < 1e-12);
+        }
+        assert!((wd.total_weight() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_weights_do_not_hurt_compression() {
+        // The paper's point: dedup is on m alone, w can be anything.
+        let mut wc = WeightedSuffStatsCompressor::new(1, 1);
+        for i in 0..100 {
+            wc.push(&[(i % 2) as f64], &[1.0], 0.001 * i as f64);
+        }
+        let d = wc.finish();
+        assert_eq!(d.num_groups(), 2);
+        assert_eq!(d.total_n(), 100);
+    }
+
+    #[test]
+    fn weighted_moments_accumulate() {
+        let mut wc = WeightedSuffStatsCompressor::new(1, 1);
+        wc.push(&[1.0], &[2.0], 3.0);
+        wc.push(&[1.0], &[4.0], 0.5);
+        let d = wc.finish();
+        assert_eq!(d.num_groups(), 1);
+        assert!((d.weights()[0] - 3.5).abs() < 1e-12);
+        assert!((d.weights_sq()[0] - 9.25).abs() < 1e-12);
+        assert!((d.wy(0, 0) - (3.0 * 2.0 + 0.5 * 4.0)).abs() < 1e-12);
+        assert!((d.wy2(0, 0) - (3.0 * 4.0 + 0.5 * 16.0)).abs() < 1e-12);
+        assert!((d.w2y(0, 0) - (9.0 * 2.0 + 0.25 * 4.0)).abs() < 1e-12);
+        assert!((d.w2y2(0, 0) - (9.0 * 4.0 + 0.25 * 16.0)).abs() < 1e-12);
+    }
+}

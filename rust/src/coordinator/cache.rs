@@ -1,0 +1,223 @@
+//! The YOCO store: datasets compressed once per (features, strategy),
+//! shared by every subsequent analysis.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::compress::CompressedData;
+use crate::data::Batch;
+use crate::error::{Result, YocoError};
+use crate::pipeline::{Pipeline, PipelineConfig, PipelineMode};
+
+use super::planner::Strategy;
+
+/// Cache key: strategy + the exact ordered feature list.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Compression strategy.
+    pub strategy: &'static str,
+    /// Ordered feature column names.
+    pub features: Vec<String>,
+}
+
+struct DatasetEntry {
+    batch: Batch,
+    compressed: HashMap<CacheKey, Arc<CompressedData>>,
+}
+
+/// Thread-safe dataset registry + compressed-data cache.
+pub struct YocoStore {
+    datasets: Mutex<HashMap<String, DatasetEntry>>,
+    pipeline_cfg: PipelineConfig,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl YocoStore {
+    /// New store; compressions use `pipeline_cfg`.
+    pub fn new(pipeline_cfg: PipelineConfig) -> Self {
+        YocoStore {
+            datasets: Mutex::new(HashMap::new()),
+            pipeline_cfg,
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Register (or replace) a dataset.
+    pub fn register(&self, name: &str, batch: Batch) {
+        self.datasets.lock().unwrap().insert(
+            name.to_string(),
+            DatasetEntry { batch, compressed: HashMap::new() },
+        );
+    }
+
+    /// Dataset names currently registered.
+    pub fn dataset_names(&self) -> Vec<String> {
+        self.datasets.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Schema of a registered dataset.
+    pub fn schema(&self, name: &str) -> Result<crate::data::Schema> {
+        let g = self.datasets.lock().unwrap();
+        let e = g
+            .get(name)
+            .ok_or_else(|| YocoError::NotFound { what: format!("dataset '{name}'") })?;
+        Ok(e.batch.schema().clone())
+    }
+
+    /// Row count of a registered dataset.
+    pub fn num_rows(&self, name: &str) -> Result<usize> {
+        let g = self.datasets.lock().unwrap();
+        let e = g
+            .get(name)
+            .ok_or_else(|| YocoError::NotFound { what: format!("dataset '{name}'") })?;
+        Ok(e.batch.num_rows())
+    }
+
+    /// Get-or-compute the compressed form for (dataset, features,
+    /// strategy). Returns `(data, cache_hit)`.
+    ///
+    /// The compressed dataset always carries *all* outcome columns — that
+    /// is the YOCO property: one compression, every metric.
+    pub fn compressed(
+        &self,
+        dataset: &str,
+        features: &[String],
+        strategy: Strategy,
+    ) -> Result<(Arc<CompressedData>, bool)> {
+        use std::sync::atomic::Ordering;
+        let key = CacheKey { strategy: strategy.name(), features: features.to_vec() };
+        // Fast path under the lock.
+        {
+            let g = self.datasets.lock().unwrap();
+            let e = g
+                .get(dataset)
+                .ok_or_else(|| YocoError::NotFound { what: format!("dataset '{dataset}'") })?;
+            if let Some(c) = e.compressed.get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((c.clone(), true));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compress outside the lock (the batch is cloned cheaply enough
+        // via projection; holding the lock across a pipeline run would
+        // serialize unrelated datasets).
+        let projected = {
+            let g = self.datasets.lock().unwrap();
+            let e = g.get(dataset).unwrap();
+            project_for(&e.batch, features, strategy)?
+        };
+        let mode = match strategy {
+            Strategy::SuffStats => PipelineMode::SuffStats,
+            Strategy::WithinCluster => PipelineMode::WithinCluster,
+        };
+        let pipe = Pipeline::new(self.pipeline_cfg.clone(), mode);
+        let data = Arc::new(pipe.run_batch(&projected)?.into_suffstats()?);
+        let mut g = self.datasets.lock().unwrap();
+        let e = g
+            .get_mut(dataset)
+            .ok_or_else(|| YocoError::NotFound { what: format!("dataset '{dataset}'") })?;
+        let entry = e.compressed.entry(key).or_insert_with(|| data.clone());
+        Ok((entry.clone(), false))
+    }
+
+    /// (hits, misses) counters.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering;
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Outcome column names of a dataset (order matches the compressed
+    /// outcome indices).
+    pub fn outcome_names(&self, dataset: &str) -> Result<Vec<String>> {
+        let schema = self.schema(dataset)?;
+        Ok(schema
+            .outcome_indices()
+            .into_iter()
+            .map(|i| schema.names()[i].clone())
+            .collect())
+    }
+}
+
+/// Build the projection batch the pipeline consumes: chosen features (in
+/// request order) + ALL outcomes (+ cluster column for within-cluster).
+fn project_for(batch: &Batch, features: &[String], strategy: Strategy) -> Result<Batch> {
+    use crate::data::ColumnRole;
+    let schema = batch.schema();
+    let mut cols: Vec<(&str, ColumnRole)> = Vec::new();
+    if strategy == Strategy::WithinCluster {
+        let ci = schema
+            .cluster_index()
+            .ok_or_else(|| YocoError::invalid("within-cluster needs a Cluster column"))?;
+        cols.push((schema.names()[ci].as_str(), ColumnRole::Cluster));
+    }
+    for f in features {
+        cols.push((f.as_str(), ColumnRole::Feature));
+    }
+    for oi in schema.outcome_indices() {
+        cols.push((schema.names()[oi].as_str(), ColumnRole::Outcome));
+    }
+    batch.project(&cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen::{generate_panel, generate_xp, PanelConfig, XpConfig};
+
+    fn store() -> YocoStore {
+        YocoStore::new(PipelineConfig {
+            workers: 2,
+            virtual_shards: 8,
+            queue_capacity: 2,
+            chunk_rows: 512,
+            rebalance_every: 0,
+        })
+    }
+
+    #[test]
+    fn compress_once_then_hit() {
+        let s = store();
+        let (batch, _) = generate_xp(&XpConfig { n: 2000, ..Default::default() });
+        s.register("xp", batch);
+        let feats: Vec<String> = vec!["const".into(), "treat1".into()];
+        let (c1, hit1) = s.compressed("xp", &feats, Strategy::SuffStats).unwrap();
+        assert!(!hit1);
+        let (c2, hit2) = s.compressed("xp", &feats, Strategy::SuffStats).unwrap();
+        assert!(hit2, "second identical request must hit the cache");
+        assert!(Arc::ptr_eq(&c1, &c2));
+        assert_eq!(s.cache_stats(), (1, 1));
+        // Both outcomes present in one compression (YOCO).
+        assert_eq!(c1.num_outcomes(), 2);
+        // Different feature set = different cache entry.
+        let feats2: Vec<String> = vec!["const".into()];
+        let (_, hit3) = s.compressed("xp", &feats2, Strategy::SuffStats).unwrap();
+        assert!(!hit3);
+    }
+
+    #[test]
+    fn within_cluster_strategy_keyed_separately() {
+        let s = store();
+        let batch = generate_panel(&PanelConfig {
+            clusters: 30,
+            t: 4,
+            time_trend: false,
+            ..Default::default()
+        });
+        s.register("panel", batch);
+        let feats: Vec<String> = vec!["const".into(), "treat".into()];
+        let (plain, _) = s.compressed("panel", &feats, Strategy::SuffStats).unwrap();
+        let (within, _) = s.compressed("panel", &feats, Strategy::WithinCluster).unwrap();
+        assert!(plain.cluster_of().is_none());
+        assert!(within.cluster_of().is_some());
+        assert!(within.num_groups() >= plain.num_groups());
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let s = store();
+        assert!(s.compressed("ghost", &["a".into()], Strategy::SuffStats).is_err());
+        assert!(s.schema("ghost").is_err());
+    }
+}

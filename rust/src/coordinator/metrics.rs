@@ -1,0 +1,77 @@
+//! Coordinator-level metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Request counters + latency accumulator.
+#[derive(Default)]
+pub struct CoordinatorMetrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    native_fits: AtomicU64,
+    pjrt_fits: AtomicU64,
+    total_us: AtomicU64,
+}
+
+impl CoordinatorMetrics {
+    /// Record one served request.
+    pub fn record(&self, engine: &str, elapsed_us: u128) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(elapsed_us as u64, Ordering::Relaxed);
+        match engine {
+            "pjrt" => self.pjrt_fits.fetch_add(1, Ordering::Relaxed),
+            _ => self.native_fits.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    /// Record one failed request.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot.
+    pub fn snapshot(&self) -> CoordinatorMetricsSnapshot {
+        let req = self.requests.load(Ordering::Relaxed);
+        let total = self.total_us.load(Ordering::Relaxed);
+        CoordinatorMetricsSnapshot {
+            requests: req,
+            errors: self.errors.load(Ordering::Relaxed),
+            native_fits: self.native_fits.load(Ordering::Relaxed),
+            pjrt_fits: self.pjrt_fits.load(Ordering::Relaxed),
+            mean_latency_us: if req > 0 { total as f64 / req as f64 } else { 0.0 },
+        }
+    }
+}
+
+/// Point-in-time coordinator counters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorMetricsSnapshot {
+    /// Requests served.
+    pub requests: u64,
+    /// Requests failed.
+    pub errors: u64,
+    /// Fits on the native engine.
+    pub native_fits: u64,
+    /// Fits on the PJRT runtime.
+    pub pjrt_fits: u64,
+    /// Mean service latency (µs).
+    pub mean_latency_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = CoordinatorMetrics::default();
+        m.record("native", 100);
+        m.record("pjrt", 300);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.native_fits, 1);
+        assert_eq!(s.pjrt_fits, 1);
+        assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+}

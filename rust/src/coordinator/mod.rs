@@ -1,0 +1,25 @@
+//! The analysis coordinator — the XP-facing service layer.
+//!
+//! This is where the paper's "You Only Compress Once" property becomes a
+//! system: datasets are registered once, compressed once per (feature
+//! set, strategy), and every subsequent analysis request — any outcome,
+//! any covariance structure, any engine — is served from the cached
+//! compressed records at O(G) cost.
+//!
+//! * [`AnalysisRequest`] / [`AnalysisResponse`] — the request DSL
+//!   (model spec by column names, covariance kind, engine preference).
+//! * [`YocoStore`] — the compressed-dataset cache.
+//! * [`planner`] — strategy + engine selection.
+//! * [`Coordinator`] — validation, planning, dispatch, metrics.
+
+mod cache;
+mod metrics;
+mod planner;
+mod request;
+mod service;
+
+pub use cache::{CacheKey, YocoStore};
+pub use metrics::{CoordinatorMetrics, CoordinatorMetricsSnapshot};
+pub use planner::{plan, EnginePref, Plan, PlannedEngine, Strategy};
+pub use request::{AnalysisRequest, AnalysisResponse, EstimatorKind};
+pub use service::Coordinator;

@@ -1,0 +1,193 @@
+//! Strategy + engine planning.
+
+use crate::data::Schema;
+use crate::error::{Result, YocoError};
+use crate::estimator::CovarianceKind;
+use crate::runtime::pick_bucket;
+
+use super::request::{AnalysisRequest, EstimatorKind};
+
+/// Engine preference in a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnginePref {
+    /// Runtime when an artifact bucket fits, else native.
+    Auto,
+    /// Force the native Rust engine.
+    Native,
+    /// Force the PJRT runtime (error if no artifact fits).
+    Pjrt,
+}
+
+/// Which compression strategy backs the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// §4 sufficient statistics keyed by feature vector.
+    SuffStats,
+    /// §5.3.1 within-cluster sufficient statistics.
+    WithinCluster,
+}
+
+impl Strategy {
+    /// Human-readable name (used in responses/metrics).
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::SuffStats => "suffstats",
+            Strategy::WithinCluster => "within_cluster",
+        }
+    }
+}
+
+/// Which engine the planner chose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannedEngine {
+    /// Native Rust estimators.
+    Native,
+    /// AOT HLO on the PJRT client.
+    Pjrt,
+}
+
+/// The execution plan for one request.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Compression strategy (also the cache-key discriminator).
+    pub strategy: Strategy,
+    /// Engine to dispatch to.
+    pub engine: PlannedEngine,
+    /// Resolved feature column names, in model order.
+    pub features: Vec<String>,
+    /// Resolved outcome column name.
+    pub outcome: String,
+}
+
+/// Validate a request against its dataset schema and produce a plan.
+///
+/// * Cluster-robust ⇒ within-cluster strategy (needs a Cluster column).
+/// * Engine Auto ⇒ PJRT when the (estimated) compressed shape fits an
+///   artifact bucket and the runtime is loaded; the final fallback to
+///   native on bucket overflow happens at dispatch (G is only known
+///   after compression).
+pub fn plan(
+    req: &AnalysisRequest,
+    schema: &Schema,
+    runtime_available: bool,
+    estimated_g: usize,
+) -> Result<Plan> {
+    // Resolve features.
+    let features: Vec<String> = if req.features.is_empty() {
+        schema
+            .feature_indices()
+            .into_iter()
+            .map(|i| schema.names()[i].clone())
+            .collect()
+    } else {
+        for f in &req.features {
+            if schema.index_of(f).is_none() {
+                return Err(YocoError::NotFound { what: format!("feature column '{f}'") });
+            }
+        }
+        req.features.clone()
+    };
+    if features.is_empty() {
+        return Err(YocoError::invalid("no feature columns"));
+    }
+    // Resolve outcome.
+    if schema.index_of(&req.outcome).is_none() {
+        return Err(YocoError::NotFound {
+            what: format!("outcome column '{}'", req.outcome),
+        });
+    }
+
+    let strategy = match (req.estimator, req.covariance) {
+        (EstimatorKind::Wls, CovarianceKind::ClusterRobust) => {
+            if schema.cluster_index().is_none() {
+                return Err(YocoError::invalid(
+                    "cluster-robust covariance requires a Cluster column",
+                ));
+            }
+            Strategy::WithinCluster
+        }
+        _ => Strategy::SuffStats,
+    };
+
+    let fits_bucket = pick_bucket(estimated_g, features.len()).is_some();
+    let engine = match req.engine {
+        EnginePref::Native => PlannedEngine::Native,
+        EnginePref::Pjrt => {
+            if !runtime_available {
+                return Err(YocoError::Runtime(
+                    "PJRT engine requested but no artifacts loaded".into(),
+                ));
+            }
+            PlannedEngine::Pjrt
+        }
+        EnginePref::Auto => {
+            if runtime_available && fits_bucket {
+                PlannedEngine::Pjrt
+            } else {
+                PlannedEngine::Native
+            }
+        }
+    };
+
+    Ok(Plan { strategy, engine, features, outcome: req.outcome.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ColumnRole;
+
+    fn schema() -> Schema {
+        Schema::new(vec![
+            ("user".into(), ColumnRole::Cluster),
+            ("const".into(), ColumnRole::Feature),
+            ("treat".into(), ColumnRole::Feature),
+            ("y0".into(), ColumnRole::Outcome),
+        ])
+    }
+
+    #[test]
+    fn default_features_resolve_from_schema() {
+        let req = AnalysisRequest::wls("d", "y0");
+        let p = plan(&req, &schema(), false, 100).unwrap();
+        assert_eq!(p.features, vec!["const", "treat"]);
+        assert_eq!(p.strategy, Strategy::SuffStats);
+        assert_eq!(p.engine, PlannedEngine::Native);
+    }
+
+    #[test]
+    fn cluster_robust_needs_cluster_column() {
+        let req = AnalysisRequest::wls("d", "y0")
+            .with_covariance(crate::estimator::CovarianceKind::ClusterRobust);
+        let p = plan(&req, &schema(), false, 100).unwrap();
+        assert_eq!(p.strategy, Strategy::WithinCluster);
+        // Schema without cluster column:
+        let s2 = Schema::simple(2, 1);
+        assert!(plan(&req, &s2, false, 100).is_err());
+    }
+
+    #[test]
+    fn unknown_columns_rejected() {
+        let req = AnalysisRequest::wls("d", "nope");
+        assert!(plan(&req, &schema(), false, 10).is_err());
+        let req = AnalysisRequest::wls("d", "y0").with_features(&["ghost"]);
+        assert!(plan(&req, &schema(), false, 10).is_err());
+    }
+
+    #[test]
+    fn engine_selection() {
+        let auto = AnalysisRequest::wls("d", "y0");
+        assert_eq!(plan(&auto, &schema(), true, 100).unwrap().engine, PlannedEngine::Pjrt);
+        assert_eq!(
+            plan(&auto, &schema(), true, 10_000_000).unwrap().engine,
+            PlannedEngine::Native,
+            "bucket overflow should fall back to native"
+        );
+        let force = auto.clone().with_engine(EnginePref::Pjrt);
+        assert!(plan(&force, &schema(), false, 100).is_err());
+        assert_eq!(
+            plan(&force, &schema(), true, 100).unwrap().engine,
+            PlannedEngine::Pjrt
+        );
+    }
+}

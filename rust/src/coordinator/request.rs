@@ -1,0 +1,175 @@
+//! Analysis request/response DSL.
+
+use crate::estimator::CovarianceKind;
+use crate::util::json::Json;
+
+/// Which estimator family the request wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorKind {
+    /// Linear model (OLS/WLS over sufficient statistics).
+    Wls,
+    /// Logistic regression (binary outcome).
+    Logistic,
+}
+
+/// One analysis request against a registered dataset.
+#[derive(Debug, Clone)]
+pub struct AnalysisRequest {
+    /// Registered dataset name.
+    pub dataset: String,
+    /// Outcome column name.
+    pub outcome: String,
+    /// Feature column names, in model order. Empty = all Feature-role
+    /// columns in schema order.
+    pub features: Vec<String>,
+    /// Covariance structure (§5). Ignored for logistic.
+    pub covariance: CovarianceKind,
+    /// Estimator family.
+    pub estimator: EstimatorKind,
+    /// Engine preference (Auto = runtime when it fits, else native).
+    pub engine: super::planner::EnginePref,
+}
+
+impl AnalysisRequest {
+    /// A plain homoskedastic WLS request with default engine selection.
+    pub fn wls(dataset: &str, outcome: &str) -> Self {
+        AnalysisRequest {
+            dataset: dataset.to_string(),
+            outcome: outcome.to_string(),
+            features: Vec::new(),
+            covariance: CovarianceKind::Homoskedastic,
+            estimator: EstimatorKind::Wls,
+            engine: super::planner::EnginePref::Auto,
+        }
+    }
+
+    /// Builder: set covariance kind.
+    pub fn with_covariance(mut self, kind: CovarianceKind) -> Self {
+        self.covariance = kind;
+        self
+    }
+
+    /// Builder: set explicit feature list.
+    pub fn with_features(mut self, features: &[&str]) -> Self {
+        self.features = features.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Builder: request logistic regression.
+    pub fn logistic(mut self) -> Self {
+        self.estimator = EstimatorKind::Logistic;
+        self
+    }
+
+    /// Builder: set engine preference.
+    pub fn with_engine(mut self, engine: super::planner::EnginePref) -> Self {
+        self.engine = engine;
+        self
+    }
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct AnalysisResponse {
+    /// Coefficient estimates, in feature order.
+    pub beta: Vec<f64>,
+    /// Standard errors under the requested covariance.
+    pub se: Vec<f64>,
+    /// t-statistics.
+    pub t_stats: Vec<f64>,
+    /// Feature names matching `beta`.
+    pub feature_names: Vec<String>,
+    /// σ̂² when homoskedastic.
+    pub sigma2: Option<f64>,
+    /// Original observation count.
+    pub n: u64,
+    /// Compressed records used by the fit.
+    pub records_used: usize,
+    /// Cluster count for cluster-robust fits.
+    pub clusters: Option<usize>,
+    /// Which engine served it: "native" or "pjrt".
+    pub engine_used: &'static str,
+    /// Which compression strategy backed it.
+    pub strategy: &'static str,
+    /// True when the compressed dataset came from the cache (the YOCO
+    /// hit path).
+    pub cache_hit: bool,
+    /// Service-side wall time in microseconds (excl. compression when
+    /// cache_hit).
+    pub elapsed_us: u128,
+}
+
+impl AnalysisResponse {
+    /// Serialize for the wire protocol.
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|x| Json::Num(*x)).collect());
+        Json::obj(vec![
+            ("beta", nums(&self.beta)),
+            ("se", nums(&self.se)),
+            ("t_stats", nums(&self.t_stats)),
+            (
+                "feature_names",
+                Json::Arr(
+                    self.feature_names.iter().map(|s| Json::Str(s.clone())).collect(),
+                ),
+            ),
+            (
+                "sigma2",
+                self.sigma2.map_or(Json::Null, Json::Num),
+            ),
+            ("n", Json::Num(self.n as f64)),
+            ("records_used", Json::Num(self.records_used as f64)),
+            (
+                "clusters",
+                self.clusters.map_or(Json::Null, |c| Json::Num(c as f64)),
+            ),
+            ("engine_used", Json::Str(self.engine_used.to_string())),
+            ("strategy", Json::Str(self.strategy.to_string())),
+            ("cache_hit", Json::Bool(self.cache_hit)),
+            ("elapsed_us", Json::Num(self.elapsed_us as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::EnginePref;
+
+    #[test]
+    fn builder_chains() {
+        let r = AnalysisRequest::wls("xp", "y0")
+            .with_covariance(CovarianceKind::ClusterRobust)
+            .with_features(&["const", "treat"])
+            .with_engine(EnginePref::Native);
+        assert_eq!(r.dataset, "xp");
+        assert_eq!(r.features, vec!["const", "treat"]);
+        assert_eq!(r.covariance, CovarianceKind::ClusterRobust);
+        assert_eq!(r.engine, EnginePref::Native);
+        assert_eq!(r.estimator, EstimatorKind::Wls);
+    }
+
+    #[test]
+    fn response_serializes() {
+        let resp = AnalysisResponse {
+            beta: vec![1.0, 2.0],
+            se: vec![0.1, 0.2],
+            t_stats: vec![10.0, 10.0],
+            feature_names: vec!["const".into(), "treat".into()],
+            sigma2: Some(1.5),
+            n: 100,
+            records_used: 4,
+            clusters: None,
+            engine_used: "native",
+            strategy: "suffstats",
+            cache_hit: true,
+            elapsed_us: 42,
+        };
+        let j = resp.to_json();
+        assert_eq!(j.get("n").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("cache_hit").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("clusters"), Some(&Json::Null));
+        let text = j.to_string();
+        assert!(text.contains("\"engine_used\":\"native\""));
+    }
+}

@@ -1,0 +1,299 @@
+//! The coordinator service: validate → plan → (cached) compress →
+//! dispatch → respond.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Result, YocoError};
+use crate::estimator::{
+    fit_logistic_suffstats, fit_wls_suffstats, CovarianceKind, LogisticOptions,
+};
+use crate::pipeline::PipelineConfig;
+use crate::runtime::RuntimeHandle;
+
+use super::cache::YocoStore;
+use super::metrics::{CoordinatorMetrics, CoordinatorMetricsSnapshot};
+use super::planner::{plan, PlannedEngine};
+use super::request::{AnalysisRequest, AnalysisResponse, EstimatorKind};
+
+/// The analysis coordinator. One per process; thread-safe.
+pub struct Coordinator {
+    store: YocoStore,
+    runtime: Option<RuntimeHandle>,
+    metrics: CoordinatorMetrics,
+}
+
+impl Coordinator {
+    /// Coordinator with no PJRT runtime (native engine only).
+    pub fn native_only(pipeline_cfg: PipelineConfig) -> Self {
+        Coordinator {
+            store: YocoStore::new(pipeline_cfg),
+            runtime: None,
+            metrics: CoordinatorMetrics::default(),
+        }
+    }
+
+    /// Coordinator with the PJRT runtime loaded from `artifacts_dir`.
+    /// Falls back to native-only (with a warning on stderr) when the
+    /// artifacts are missing — the service still works, just without
+    /// the AOT engine.
+    pub fn with_runtime(pipeline_cfg: PipelineConfig, artifacts_dir: &Path) -> Self {
+        let runtime = match RuntimeHandle::load(artifacts_dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("yoco: PJRT runtime unavailable ({e}); using native engine");
+                None
+            }
+        };
+        Coordinator {
+            store: YocoStore::new(pipeline_cfg),
+            runtime,
+            metrics: CoordinatorMetrics::default(),
+        }
+    }
+
+    /// The dataset store (registration, stats).
+    pub fn store(&self) -> &YocoStore {
+        &self.store
+    }
+
+    /// True when the PJRT runtime is loaded.
+    pub fn runtime_available(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Service metrics snapshot.
+    pub fn metrics(&self) -> CoordinatorMetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Serve one analysis request.
+    pub fn analyze(&self, req: &AnalysisRequest) -> Result<AnalysisResponse> {
+        let result = self.analyze_inner(req);
+        if result.is_err() {
+            self.metrics.record_error();
+        }
+        result
+    }
+
+    fn analyze_inner(&self, req: &AnalysisRequest) -> Result<AnalysisResponse> {
+        let start = Instant::now();
+        let schema = self.store.schema(&req.dataset)?;
+        // Estimate G pessimistically as the row count for engine
+        // planning; refined after compression.
+        let est_g = self.store.num_rows(&req.dataset)?;
+        let plan = plan(req, &schema, self.runtime.is_some(), est_g.min(65536))?;
+
+        let (data, cache_hit) =
+            self.store.compressed(&req.dataset, &plan.features, plan.strategy)?;
+
+        // Outcome column -> index within the compressed outcome block.
+        let outcome_names = self.store.outcome_names(&req.dataset)?;
+        let outcome_idx = outcome_names
+            .iter()
+            .position(|n| n == &plan.outcome)
+            .ok_or_else(|| YocoError::NotFound {
+                what: format!("outcome column '{}' (must have Outcome role)", plan.outcome),
+            })?;
+
+        // Engine dispatch. Auto falls back to native when the *actual* G
+        // misses every bucket; a forced Pjrt preference is honored so the
+        // runtime's own error surfaces instead of being masked.
+        let use_pjrt = plan.engine == PlannedEngine::Pjrt
+            && (req.engine == super::planner::EnginePref::Pjrt
+                || crate::runtime::pick_bucket(data.num_groups(), data.num_features())
+                    .is_some());
+
+        let (fit_beta, fit_se, fit_t, sigma2, n, records, clusters, engine_used) =
+            match req.estimator {
+                EstimatorKind::Wls => {
+                    let fit = if use_pjrt {
+                        self.runtime
+                            .as_ref()
+                            .expect("planner guarantees runtime")
+                            .fit(&data, outcome_idx, req.covariance)?
+                    } else {
+                        fit_wls_suffstats(&data, outcome_idx, req.covariance)?
+                    };
+                    (
+                        fit.beta.clone(),
+                        fit.se(),
+                        fit.t_stats(),
+                        fit.sigma2,
+                        fit.n,
+                        fit.records_used,
+                        fit.clusters,
+                        if use_pjrt { "pjrt" } else { "native" },
+                    )
+                }
+                EstimatorKind::Logistic => {
+                    if use_pjrt {
+                        let rt = self.runtime.as_ref().expect("planner guarantees runtime");
+                        let (beta, cov) = rt.fit_logistic(&data, outcome_idx)?;
+                        let se: Vec<f64> =
+                            cov.diagonal().iter().map(|v| v.max(0.0).sqrt()).collect();
+                        let t: Vec<f64> =
+                            beta.iter().zip(&se).map(|(b, s)| b / s).collect();
+                        (
+                            beta,
+                            se,
+                            t,
+                            None,
+                            data.total_n(),
+                            data.num_groups(),
+                            None,
+                            "pjrt",
+                        )
+                    } else {
+                        let fit = fit_logistic_suffstats(
+                            &data,
+                            outcome_idx,
+                            &LogisticOptions::default(),
+                        )?;
+                        let se = fit.se();
+                        let t: Vec<f64> =
+                            fit.beta.iter().zip(&se).map(|(b, s)| b / s).collect();
+                        (
+                            fit.beta,
+                            se,
+                            t,
+                            None,
+                            fit.n,
+                            fit.records_used,
+                            None,
+                            "native",
+                        )
+                    }
+                }
+            };
+
+        let elapsed_us = start.elapsed().as_micros();
+        self.metrics.record(engine_used, elapsed_us);
+        Ok(AnalysisResponse {
+            beta: fit_beta,
+            se: fit_se,
+            t_stats: fit_t,
+            feature_names: plan.features,
+            sigma2: if req.covariance == CovarianceKind::Homoskedastic
+                && req.estimator == EstimatorKind::Wls
+            {
+                sigma2
+            } else {
+                None
+            },
+            n,
+            records_used: records,
+            clusters,
+            engine_used,
+            strategy: plan.strategy.name(),
+            cache_hit,
+            elapsed_us,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::EnginePref;
+    use crate::data::gen::{generate_panel, generate_xp, PanelConfig, XpConfig};
+
+    fn coordinator() -> Coordinator {
+        Coordinator::native_only(PipelineConfig {
+            workers: 2,
+            virtual_shards: 8,
+            queue_capacity: 2,
+            chunk_rows: 512,
+            rebalance_every: 0,
+        })
+    }
+
+    #[test]
+    fn wls_request_end_to_end() {
+        let c = coordinator();
+        let (batch, _) = generate_xp(&XpConfig { n: 3000, ..Default::default() });
+        c.store().register("xp", batch);
+        let resp = c.analyze(&AnalysisRequest::wls("xp", "y0")).unwrap();
+        assert_eq!(resp.engine_used, "native");
+        assert_eq!(resp.n, 3000);
+        assert!(resp.records_used < 3000);
+        assert!(!resp.cache_hit);
+        assert!(resp.sigma2.unwrap() > 0.0);
+        assert_eq!(resp.beta.len(), resp.feature_names.len());
+        // Second request on the other outcome: same compression (YOCO).
+        let resp2 = c.analyze(&AnalysisRequest::wls("xp", "y1")).unwrap();
+        assert!(resp2.cache_hit, "different outcome must reuse the compression");
+        let m = c.metrics();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn cluster_robust_panel_request() {
+        let c = coordinator();
+        let batch = generate_panel(&PanelConfig {
+            clusters: 50,
+            t: 4,
+            time_trend: false,
+            ..Default::default()
+        });
+        c.store().register("panel", batch);
+        let resp = c
+            .analyze(
+                &AnalysisRequest::wls("panel", "y0")
+                    .with_covariance(CovarianceKind::ClusterRobust),
+            )
+            .unwrap();
+        assert_eq!(resp.strategy, "within_cluster");
+        assert_eq!(resp.clusters, Some(50));
+        assert!(resp.sigma2.is_none());
+    }
+
+    #[test]
+    fn logistic_request() {
+        let c = coordinator();
+        let (batch, _) = generate_xp(&XpConfig {
+            n: 2000,
+            binary_first_outcome: true,
+            ..Default::default()
+        });
+        c.store().register("xp", batch);
+        let resp =
+            c.analyze(&AnalysisRequest::wls("xp", "y0").logistic()).unwrap();
+        assert_eq!(resp.engine_used, "native");
+        assert!(resp.beta.iter().all(|b| b.is_finite()));
+    }
+
+    #[test]
+    fn errors_are_counted() {
+        let c = coordinator();
+        assert!(c.analyze(&AnalysisRequest::wls("ghost", "y0")).is_err());
+        assert_eq!(c.metrics().errors, 1);
+    }
+
+    #[test]
+    fn pjrt_pref_without_runtime_errors() {
+        let c = coordinator();
+        let (batch, _) = generate_xp(&XpConfig { n: 500, ..Default::default() });
+        c.store().register("xp", batch);
+        let req = AnalysisRequest::wls("xp", "y0").with_engine(EnginePref::Pjrt);
+        assert!(c.analyze(&req).is_err());
+    }
+
+    #[test]
+    fn feature_subset_models() {
+        let c = coordinator();
+        let (batch, _) = generate_xp(&XpConfig { n: 2000, ..Default::default() });
+        c.store().register("xp", batch);
+        let resp = c
+            .analyze(
+                &AnalysisRequest::wls("xp", "y0").with_features(&["const", "treat1"]),
+            )
+            .unwrap();
+        assert_eq!(resp.feature_names, vec!["const", "treat1"]);
+        assert_eq!(resp.beta.len(), 2);
+        // Treatment effect ≈ -0.25 by the generator's beta pattern
+        // (j=1 -> 0.25*((1%5)-2) = -0.25).
+        assert!((resp.beta[1] + 0.25).abs() < 0.2, "b1={}", resp.beta[1]);
+    }
+}

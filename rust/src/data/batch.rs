@@ -1,0 +1,222 @@
+//! Columnar record batches.
+
+use super::{ColumnRole, Schema};
+use crate::error::{Result, YocoError};
+
+/// A columnar batch of observations: one `Vec<f64>` per schema column.
+///
+/// Columnar layout matches both the compression pass (hash rows of the
+/// feature projection) and the estimation pass (scan outcome columns),
+/// and is what the streaming pipeline ships between workers.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    schema: Schema,
+    columns: Vec<Vec<f64>>,
+    rows: usize,
+}
+
+impl Batch {
+    /// An empty batch with capacity hints.
+    pub fn with_capacity(schema: Schema, cap: usize) -> Self {
+        let ncols = schema.len();
+        Batch { schema, columns: (0..ncols).map(|_| Vec::with_capacity(cap)).collect(), rows: 0 }
+    }
+
+    /// Build from a schema and per-column data. All columns must have the
+    /// same length.
+    pub fn new(schema: Schema, columns: Vec<Vec<f64>>) -> Result<Self> {
+        if columns.len() != schema.len() {
+            return Err(YocoError::shape(format!(
+                "batch has {} columns, schema expects {}",
+                columns.len(),
+                schema.len()
+            )));
+        }
+        let rows = columns.first().map_or(0, Vec::len);
+        if columns.iter().any(|c| c.len() != rows) {
+            return Err(YocoError::shape("ragged batch columns".to_string()));
+        }
+        Ok(Batch { schema, columns, rows })
+    }
+
+    /// The batch schema.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Number of rows.
+    pub fn num_rows(&self) -> usize {
+        self.rows
+    }
+
+    /// True when the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Borrow column `j`.
+    pub fn column(&self, j: usize) -> &[f64] {
+        &self.columns[j]
+    }
+
+    /// Borrow the column named `name`.
+    pub fn column_by_name(&self, name: &str) -> Result<&[f64]> {
+        let j = self
+            .schema
+            .index_of(name)
+            .ok_or_else(|| YocoError::NotFound { what: format!("column '{name}'") })?;
+        Ok(self.column(j))
+    }
+
+    /// Append a row given in schema order.
+    pub fn push_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.schema.len() {
+            return Err(YocoError::shape(format!(
+                "row has {} values, schema expects {}",
+                row.len(),
+                self.schema.len()
+            )));
+        }
+        for (col, v) in self.columns.iter_mut().zip(row) {
+            col.push(*v);
+        }
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Copy row `i` into `out` (schema order). `out` must have schema length.
+    pub fn read_row(&self, i: usize, out: &mut [f64]) {
+        for (j, col) in self.columns.iter().enumerate() {
+            out[j] = col[i];
+        }
+    }
+
+    /// Gather the feature columns of row `i` into `out`.
+    pub fn read_features(&self, i: usize, feature_idx: &[usize], out: &mut [f64]) {
+        for (k, &j) in feature_idx.iter().enumerate() {
+            out[k] = self.columns[j][i];
+        }
+    }
+
+    /// Split into chunks of at most `chunk_rows` rows (for the pipeline).
+    pub fn split(&self, chunk_rows: usize) -> Vec<Batch> {
+        assert!(chunk_rows > 0);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.rows {
+            let end = (start + chunk_rows).min(self.rows);
+            let cols = self.columns.iter().map(|c| c[start..end].to_vec()).collect();
+            out.push(Batch::new(self.schema.clone(), cols).expect("split preserves shape"));
+            start = end;
+        }
+        out
+    }
+
+    /// Concatenate batches with identical schemas.
+    pub fn concat(batches: &[Batch]) -> Result<Batch> {
+        let first = batches
+            .first()
+            .ok_or_else(|| YocoError::invalid("concat of zero batches"))?;
+        let mut out = Batch::with_capacity(
+            first.schema.clone(),
+            batches.iter().map(|b| b.rows).sum(),
+        );
+        for b in batches {
+            if b.schema.names() != first.schema.names() {
+                return Err(YocoError::shape("concat schema mismatch".to_string()));
+            }
+            for (dst, src) in out.columns.iter_mut().zip(&b.columns) {
+                dst.extend_from_slice(src);
+            }
+            out.rows += b.rows;
+        }
+        Ok(out)
+    }
+
+    /// Approximate in-memory footprint in bytes (the §5.3 memory argument).
+    pub fn memory_bytes(&self) -> usize {
+        self.columns.len() * self.rows * std::mem::size_of::<f64>()
+    }
+
+    /// Project to a sub-batch holding only the named columns, assigning
+    /// them the given roles (used by the planner to build M / y views).
+    pub fn project(&self, cols: &[(&str, ColumnRole)]) -> Result<Batch> {
+        let mut names = Vec::with_capacity(cols.len());
+        let mut data = Vec::with_capacity(cols.len());
+        for (name, role) in cols {
+            let j = self
+                .schema
+                .index_of(name)
+                .ok_or_else(|| YocoError::NotFound { what: format!("column '{name}'") })?;
+            names.push(((*name).to_string(), *role));
+            data.push(self.columns[j].clone());
+        }
+        Batch::new(Schema::new(names), data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Batch {
+        let schema = Schema::simple(2, 1);
+        Batch::new(
+            schema,
+            vec![vec![1., 1., 0.], vec![0., 1., 1.], vec![10., 20., 30.]],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn push_and_read() {
+        let mut b = Batch::with_capacity(Schema::simple(2, 1), 4);
+        b.push_row(&[1., 2., 3.]).unwrap();
+        b.push_row(&[4., 5., 6.]).unwrap();
+        assert_eq!(b.num_rows(), 2);
+        let mut row = [0.0; 3];
+        b.read_row(1, &mut row);
+        assert_eq!(row, [4., 5., 6.]);
+        assert!(b.push_row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn feature_gather() {
+        let b = sample();
+        let mut f = [0.0; 2];
+        b.read_features(2, &[0, 1], &mut f);
+        assert_eq!(f, [0., 1.]);
+    }
+
+    #[test]
+    fn split_and_concat_roundtrip() {
+        let b = sample();
+        let parts = b.split(2);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].num_rows(), 2);
+        assert_eq!(parts[1].num_rows(), 1);
+        let back = Batch::concat(&parts).unwrap();
+        assert_eq!(back.num_rows(), 3);
+        assert_eq!(back.column(2), b.column(2));
+    }
+
+    #[test]
+    fn project_builds_views() {
+        let b = sample();
+        let m = b.project(&[("x1", ColumnRole::Feature)]).unwrap();
+        assert_eq!(m.column(0), &[0., 1., 1.]);
+        assert!(b.project(&[("zz", ColumnRole::Feature)]).is_err());
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let r = Batch::new(Schema::simple(1, 1), vec![vec![1.0], vec![]]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let b = sample();
+        assert_eq!(b.memory_bytes(), 3 * 3 * 8);
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal CSV reader/writer for numeric datasets.
+//!
+//! Good enough for the examples and tests (header row, comma-separated
+//! f64 values, no quoting). The streaming pipeline uses [`read_csv`]'s
+//! batch output directly.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{Batch, ColumnRole, Schema};
+use crate::error::{Result, YocoError};
+
+/// Read a headered numeric CSV into a [`Batch`]. Column roles are taken
+/// from `roles`, which must match the header column count.
+pub fn read_csv(path: &Path, roles: &[ColumnRole]) -> Result<Batch> {
+    let file = std::fs::File::open(path)?;
+    read_csv_from(file, roles)
+}
+
+/// Same as [`read_csv`] over any reader (used by tests with in-memory data).
+pub fn read_csv_from<R: Read>(reader: R, roles: &[ColumnRole]) -> Result<Batch> {
+    let mut lines = BufReader::new(reader).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| YocoError::Parse("empty csv".into()))??;
+    let names: Vec<&str> = header.split(',').map(str::trim).collect();
+    if names.len() != roles.len() {
+        return Err(YocoError::Parse(format!(
+            "csv has {} columns but {} roles supplied",
+            names.len(),
+            roles.len()
+        )));
+    }
+    let schema = Schema::new(
+        names.iter().zip(roles).map(|(n, r)| (n.to_string(), *r)).collect(),
+    );
+    let ncols = schema.len();
+    let mut batch = Batch::with_capacity(schema, 1024);
+    let mut row = vec![0.0; ncols];
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut count = 0;
+        for (k, field) in line.split(',').enumerate() {
+            if k >= ncols {
+                return Err(YocoError::Parse(format!("line {}: too many fields", lineno + 2)));
+            }
+            row[k] = field.trim().parse::<f64>().map_err(|e| {
+                YocoError::Parse(format!("line {}: field {k}: {e}", lineno + 2))
+            })?;
+            count += 1;
+        }
+        if count != ncols {
+            return Err(YocoError::Parse(format!(
+                "line {}: expected {ncols} fields, got {count}",
+                lineno + 2
+            )));
+        }
+        batch.push_row(&row)?;
+    }
+    Ok(batch)
+}
+
+/// Write a [`Batch`] as a headered CSV.
+pub fn write_csv(path: &Path, batch: &Batch) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "{}", batch.schema().names().join(","))?;
+    let ncols = batch.schema().len();
+    let mut row = vec![0.0; ncols];
+    for i in 0..batch.num_rows() {
+        batch.read_row(i, &mut row);
+        let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", line.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let path = std::env::temp_dir().join(format!(
+            "yoco_csv_test_{}_{:?}.csv",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let schema = Schema::simple(1, 1);
+        let batch =
+            Batch::new(schema, vec![vec![1.0, 2.0], vec![3.5, -4.25]]).unwrap();
+        write_csv(&path, &batch).unwrap();
+        let back = read_csv(&path, &[ColumnRole::Feature, ColumnRole::Outcome]).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.num_rows(), 2);
+        assert_eq!(back.column(1), &[3.5, -4.25]);
+        assert_eq!(back.schema().names(), &["x0".to_string(), "y0".to_string()]);
+    }
+
+    #[test]
+    fn parse_errors_are_reported_with_location() {
+        let data = "a,b\n1,2\n3,oops\n";
+        let err =
+            read_csv_from(data.as_bytes(), &[ColumnRole::Feature, ColumnRole::Outcome])
+                .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 3"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_field_count_rejected() {
+        let data = "a,b\n1\n";
+        assert!(read_csv_from(data.as_bytes(), &[ColumnRole::Feature, ColumnRole::Outcome])
+            .is_err());
+        let data = "a,b\n1,2,3\n";
+        assert!(read_csv_from(data.as_bytes(), &[ColumnRole::Feature, ColumnRole::Outcome])
+            .is_err());
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let data = "a,b\n1,2\n\n3,4\n";
+        let b = read_csv_from(data.as_bytes(), &[ColumnRole::Feature, ColumnRole::Outcome])
+            .unwrap();
+        assert_eq!(b.num_rows(), 2);
+    }
+}

@@ -1,0 +1,396 @@
+//! Synthetic workload generators.
+//!
+//! Substitutes for the Netflix XP production traces the paper evaluates
+//! on (DESIGN.md §2). Each generator controls exactly the structural
+//! quantities the compression math depends on: sample size n, unique
+//! feature vectors G, cluster count C, panel length T, feature count p,
+//! and the duplication skew across feature cells.
+
+use super::{Batch, ColumnRole, Schema};
+use crate::util::rng::Rng;
+
+/// Configuration for the cross-sectional XP workload generator.
+#[derive(Debug, Clone)]
+pub struct XpConfig {
+    /// Number of observations (rows).
+    pub n: usize,
+    /// Number of treatment arms (incl. control); coded as dummies.
+    pub arms: usize,
+    /// Number of binned pre-treatment covariates.
+    pub covariates: usize,
+    /// Levels per binned covariate (bins, e.g. deciles = 10).
+    pub levels: usize,
+    /// Number of outcome metrics (YOCO across outcomes — §7.1).
+    pub outcomes: usize,
+    /// If true, outcome 0 is binary (for logistic regression / LPM tests).
+    pub binary_first_outcome: bool,
+    /// Zipf-like skew of covariate cell occupancy; 0.0 = uniform.
+    pub skew: f64,
+    /// RNG seed for reproducibility.
+    pub seed: u64,
+}
+
+impl Default for XpConfig {
+    fn default() -> Self {
+        XpConfig {
+            n: 10_000,
+            arms: 2,
+            covariates: 3,
+            levels: 4,
+            outcomes: 2,
+            binary_first_outcome: false,
+            skew: 0.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Ground truth used to generate an XP workload (for consistency tests).
+#[derive(Debug, Clone)]
+pub struct XpTruth {
+    /// True coefficient vector in the design used by [`xp_design_width`].
+    pub beta: Vec<f64>,
+    /// Residual standard deviation (before heteroskedastic scaling).
+    pub sigma: f64,
+}
+
+/// Width of the design matrix produced by [`generate_xp`]:
+/// intercept + (arms−1) treatment dummies + covariates·(levels−1) dummies.
+pub fn xp_design_width(cfg: &XpConfig) -> usize {
+    1 + (cfg.arms - 1) + cfg.covariates * (cfg.levels - 1)
+}
+
+/// Generate a cross-sectional XP trace.
+///
+/// Feature columns are the full dummy design (intercept is implicit in
+/// the estimators' model spec, so it is emitted as the leading `const`
+/// column). Outcomes follow a linear model with heteroskedastic noise
+/// whose scale depends on the treatment arm — guaranteeing the EHW and
+/// homoskedastic covariances genuinely differ in tests.
+///
+/// Returns `(batch, truth)`.
+pub fn generate_xp(cfg: &XpConfig) -> (Batch, XpTruth) {
+    assert!(cfg.arms >= 2, "need at least control + one treatment");
+    assert!(cfg.levels >= 2);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let p = xp_design_width(cfg);
+
+    // True coefficients: modest treatment effects, covariate effects.
+    let beta: Vec<f64> = (0..p)
+        .map(|j| if j == 0 { 1.0 } else { 0.25 * ((j % 5) as f64 - 2.0) })
+        .collect();
+    let sigma = 1.0;
+
+    let mut cols: Vec<(String, ColumnRole)> = vec![("const".into(), ColumnRole::Feature)];
+    for a in 1..cfg.arms {
+        cols.push((format!("treat{a}"), ColumnRole::Feature));
+    }
+    for c in 0..cfg.covariates {
+        for l in 1..cfg.levels {
+            cols.push((format!("x{c}_b{l}"), ColumnRole::Feature));
+        }
+    }
+    for o in 0..cfg.outcomes {
+        cols.push((format!("y{o}"), ColumnRole::Outcome));
+    }
+    let schema = Schema::new(cols);
+    let mut batch = Batch::with_capacity(schema, cfg.n);
+
+    // Skewed level sampler: P(level=l) ∝ (l+1)^(−skew).
+    let level_weights: Vec<f64> =
+        (0..cfg.levels).map(|l| ((l + 1) as f64).powf(-cfg.skew)).collect();
+    let level_total: f64 = level_weights.iter().sum();
+
+    let mut row = vec![0.0; p + cfg.outcomes];
+    for _ in 0..cfg.n {
+        row.iter_mut().for_each(|v| *v = 0.0);
+        row[0] = 1.0;
+        // Treatment arm: uniform assignment.
+        let arm = rng.below(cfg.arms);
+        if arm > 0 {
+            row[arm] = 1.0;
+        }
+        // Covariates: skewed categorical, dummy-coded dropping level 0.
+        let mut off = cfg.arms; // 1 + (arms-1)
+        for _ in 0..cfg.covariates {
+            let mut u = rng.f64() * level_total;
+            let mut lvl = 0;
+            for (l, w) in level_weights.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    lvl = l;
+                    break;
+                }
+            }
+            if lvl > 0 {
+                row[off + lvl - 1] = 1.0;
+            }
+            off += cfg.levels - 1;
+        }
+        // Outcomes: linear signal + heteroskedastic noise (scale grows
+        // with treatment arm), distinct shift per outcome.
+        let mut xb = 0.0;
+        for j in 0..p {
+            xb += row[j] * beta[j];
+        }
+        let het_scale = 1.0 + 0.5 * arm as f64;
+        for o in 0..cfg.outcomes {
+            let eps = rng.normal() * sigma * het_scale;
+            let val = xb + 0.3 * o as f64 + eps;
+            row[p + o] = if o == 0 && cfg.binary_first_outcome {
+                // Threshold into {0,1} for LPM / logistic use.
+                f64::from(val > 1.0)
+            } else {
+                val
+            };
+        }
+        batch.push_row(&row).expect("generator row matches schema");
+    }
+    (batch, XpTruth { beta, sigma })
+}
+
+/// Configuration for the repeated-observations panel generator (§5.3).
+#[derive(Debug, Clone)]
+pub struct PanelConfig {
+    /// Number of clusters (users), C = n_u.
+    pub clusters: usize,
+    /// Observations per cluster (panel length T). For unbalanced panels
+    /// this is the *maximum*; actual lengths are uniform in [1, T].
+    pub t: usize,
+    /// If false, cluster lengths vary (§5.3.1/§5.3.2 generality tests).
+    pub balanced: bool,
+    /// Number of static (per-cluster) binary covariates (M₁, excl. intercept).
+    pub static_covariates: usize,
+    /// Levels per static covariate.
+    pub levels: usize,
+    /// Include a linear time trend column (M₂).
+    pub time_trend: bool,
+    /// Within-cluster error correlation (AR via shared cluster effect).
+    pub rho: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for PanelConfig {
+    fn default() -> Self {
+        PanelConfig {
+            clusters: 500,
+            t: 8,
+            balanced: true,
+            static_covariates: 2,
+            levels: 3,
+            time_trend: true,
+            rho: 0.5,
+            seed: 11,
+        }
+    }
+}
+
+/// Width of the design produced by [`generate_panel`]:
+/// intercept + treat + static dummies + optional time column.
+pub fn panel_design_width(cfg: &PanelConfig) -> usize {
+    1 + 1 + cfg.static_covariates * (cfg.levels - 1) + usize::from(cfg.time_trend)
+}
+
+/// Generate a repeated-observations panel: clusters of `T` rows sharing
+/// static covariates, with a shared per-cluster random effect inducing
+/// within-cluster autocorrelation (so cluster-robust and heteroskedastic
+/// covariances genuinely differ).
+///
+/// Schema: `user` (Cluster), `const`, `treat`, static dummies, optional
+/// `t` time column (Features), then `y0` (Outcome).
+pub fn generate_panel(cfg: &PanelConfig) -> Batch {
+    assert!(cfg.levels >= 2);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let p = panel_design_width(cfg);
+
+    let mut cols: Vec<(String, ColumnRole)> = vec![("user".into(), ColumnRole::Cluster)];
+    cols.push(("const".into(), ColumnRole::Feature));
+    cols.push(("treat".into(), ColumnRole::Feature));
+    for c in 0..cfg.static_covariates {
+        for l in 1..cfg.levels {
+            cols.push((format!("s{c}_b{l}"), ColumnRole::Feature));
+        }
+    }
+    if cfg.time_trend {
+        cols.push(("t".into(), ColumnRole::Feature));
+    }
+    cols.push(("y0".into(), ColumnRole::Outcome));
+    let schema = Schema::new(cols);
+
+    let est_rows = cfg.clusters * cfg.t;
+    let mut batch = Batch::with_capacity(schema, est_rows);
+
+    let mut row = vec![0.0; 1 + p + 1];
+    for c in 0..cfg.clusters {
+        let len = if cfg.balanced { cfg.t } else { rng.range(1, cfg.t) };
+        // Static features for this cluster.
+        let treat = f64::from(rng.bool(0.5));
+        let static_levels: Vec<usize> =
+            (0..cfg.static_covariates).map(|_| rng.below(cfg.levels)).collect();
+        // Shared cluster effect → within-cluster correlation ρ.
+        let cluster_effect = rng.normal() * cfg.rho.sqrt();
+        let idio_scale = (1.0 - cfg.rho).max(0.0).sqrt();
+        for t in 0..len {
+            row.iter_mut().for_each(|v| *v = 0.0);
+            row[0] = c as f64;
+            row[1] = 1.0; // const
+            row[2] = treat;
+            let mut off = 3;
+            for &lvl in &static_levels {
+                if lvl > 0 {
+                    row[off + lvl - 1] = 1.0;
+                }
+                off += cfg.levels - 1;
+            }
+            if cfg.time_trend {
+                row[off] = t as f64;
+            }
+            // Outcome: effects + time trend + correlated errors.
+            let mut xb = 1.0 + 0.5 * treat;
+            for (ci, &lvl) in static_levels.iter().enumerate() {
+                xb += 0.2 * (ci as f64 + 1.0) * (lvl as f64);
+            }
+            if cfg.time_trend {
+                xb += 0.1 * t as f64;
+            }
+            let y = xb + cluster_effect + idio_scale * rng.normal();
+            row[1 + p] = y;
+            batch.push_row(&row).expect("generator row matches schema");
+        }
+    }
+    batch
+}
+
+/// Generate a high-cardinality workload for the §6 binning study:
+/// `covariates` continuous columns (many unique values) plus a treatment
+/// dummy, with a smooth nonlinear outcome surface.
+pub fn generate_high_cardinality(
+    n: usize,
+    covariates: usize,
+    seed: u64,
+) -> Batch {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut cols: Vec<(String, ColumnRole)> = vec![
+        ("const".into(), ColumnRole::Feature),
+        ("treat".into(), ColumnRole::Feature),
+    ];
+    for c in 0..covariates {
+        cols.push((format!("x{c}"), ColumnRole::Feature));
+    }
+    cols.push(("y0".into(), ColumnRole::Outcome));
+    let schema = Schema::new(cols);
+    let mut batch = Batch::with_capacity(schema, n);
+    let mut row = vec![0.0; 2 + covariates + 1];
+    for _ in 0..n {
+        row[0] = 1.0;
+        let treat = f64::from(rng.bool(0.5));
+        row[1] = treat;
+        let mut g = 0.0;
+        for c in 0..covariates {
+            let x: f64 = rng.f64();
+            row[2 + c] = x;
+            // Smooth nonlinear g(X): sin + quadratic mix.
+            g += (std::f64::consts::PI * x).sin() + 0.5 * x * x;
+        }
+        // True treatment effect = 0.7, exogenous of X.
+        row[2 + covariates] = 0.7 * treat + g + rng.normal();
+        batch.push_row(&row).expect("generator row matches schema");
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xp_shapes_and_determinism() {
+        let cfg = XpConfig { n: 200, ..Default::default() };
+        let (b1, truth) = generate_xp(&cfg);
+        let (b2, _) = generate_xp(&cfg);
+        assert_eq!(b1.num_rows(), 200);
+        assert_eq!(truth.beta.len(), xp_design_width(&cfg));
+        // Deterministic for a fixed seed.
+        assert_eq!(b1.column(0), b2.column(0));
+        assert_eq!(
+            b1.column(b1.schema().len() - 1),
+            b2.column(b2.schema().len() - 1)
+        );
+        // const column is all ones.
+        assert!(b1.column(0).iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn xp_binary_outcome_is_binary() {
+        let cfg =
+            XpConfig { n: 300, binary_first_outcome: true, ..Default::default() };
+        let (b, _) = generate_xp(&cfg);
+        let y0 = b.column_by_name("y0").unwrap();
+        assert!(y0.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(y0.iter().any(|&v| v == 1.0));
+        assert!(y0.iter().any(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn xp_skew_concentrates_levels() {
+        let flat = XpConfig { n: 5000, skew: 0.0, covariates: 1, levels: 8, ..Default::default() };
+        let skewed = XpConfig { skew: 3.0, ..flat.clone() };
+        let count_base = |cfg: &XpConfig| {
+            let (b, _) = generate_xp(cfg);
+            // Base level = all dummies zero for covariate 0.
+            let idx: Vec<usize> = (0..7).map(|l| 2 + l).collect();
+            (0..b.num_rows())
+                .filter(|&i| idx.iter().all(|&j| b.column(j)[i] == 0.0))
+                .count()
+        };
+        assert!(count_base(&skewed) > 2 * count_base(&flat));
+    }
+
+    #[test]
+    fn panel_balanced_row_count() {
+        let cfg = PanelConfig { clusters: 20, t: 5, ..Default::default() };
+        let b = generate_panel(&cfg);
+        assert_eq!(b.num_rows(), 100);
+        // Cluster ids 0..19, each 5 times.
+        let users = b.column_by_name("user").unwrap();
+        assert_eq!(users.iter().filter(|&&u| u == 7.0).count(), 5);
+        // Time column cycles 0..T-1.
+        let t = b.column_by_name("t").unwrap();
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[4], 4.0);
+        assert_eq!(t[5], 0.0);
+    }
+
+    #[test]
+    fn panel_unbalanced_varies() {
+        let cfg =
+            PanelConfig { clusters: 50, t: 6, balanced: false, ..Default::default() };
+        let b = generate_panel(&cfg);
+        assert!(b.num_rows() < 300);
+        assert!(b.num_rows() >= 50);
+    }
+
+    #[test]
+    fn panel_static_features_constant_within_cluster() {
+        let cfg = PanelConfig { clusters: 10, t: 4, ..Default::default() };
+        let b = generate_panel(&cfg);
+        let users = b.column_by_name("user").unwrap();
+        let treat = b.column_by_name("treat").unwrap();
+        for i in 1..b.num_rows() {
+            if users[i] == users[i - 1] {
+                assert_eq!(treat[i], treat[i - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn high_cardinality_is_high_cardinality() {
+        let b = generate_high_cardinality(1000, 2, 3);
+        let x0 = b.column_by_name("x0").unwrap();
+        let mut sorted: Vec<u64> = x0.iter().map(|v| v.to_bits()).collect();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert!(sorted.len() > 990, "continuous column should be ~all-unique");
+    }
+}

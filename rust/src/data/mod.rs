@@ -1,0 +1,18 @@
+//! Data substrate: schemas, columnar batches, CSV I/O, and synthetic
+//! workload generators.
+//!
+//! The paper's experiments run on Netflix experimentation-platform (XP)
+//! traces we do not have; [`gen`] provides synthetic equivalents whose
+//! *structure* — number of unique feature vectors G, cluster count C,
+//! panel length T, feature count p, duplication skew — is controlled
+//! exactly, which is all the compression/estimation math depends on
+//! (see DESIGN.md §2).
+
+mod batch;
+mod csv;
+pub mod gen;
+mod schema;
+
+pub use batch::Batch;
+pub use csv::{read_csv, write_csv};
+pub use schema::{ColumnRole, Schema};

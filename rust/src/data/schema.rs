@@ -1,0 +1,128 @@
+//! Dataset schema: named columns with analysis roles.
+
+/// The role a column plays in an analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnRole {
+    /// A model feature (a column of M).
+    Feature,
+    /// An outcome metric (a column of y; there may be several — §7.1).
+    Outcome,
+    /// Cluster identifier (e.g. user id) for cluster-robust covariances.
+    Cluster,
+    /// Observation weight (analytic / probability / importance — §7.2).
+    Weight,
+    /// Carried through but not modeled (e.g. timestamps kept for audit).
+    Metadata,
+}
+
+/// Column names + roles for a dataset.
+///
+/// The schema is what lets the coordinator validate an
+/// [`AnalysisRequest`](crate::coordinator::AnalysisRequest) (referenced
+/// features/outcomes must exist with the right role) before planning.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    names: Vec<String>,
+    roles: Vec<ColumnRole>,
+}
+
+impl Schema {
+    /// Build a schema from `(name, role)` pairs.
+    pub fn new(cols: Vec<(String, ColumnRole)>) -> Self {
+        let (names, roles) = cols.into_iter().unzip();
+        Schema { names, roles }
+    }
+
+    /// Convenience: `p` features named `x0..` plus `o` outcomes named `y0..`.
+    pub fn simple(p: usize, o: usize) -> Self {
+        let mut cols: Vec<(String, ColumnRole)> =
+            (0..p).map(|j| (format!("x{j}"), ColumnRole::Feature)).collect();
+        cols.extend((0..o).map(|j| (format!("y{j}"), ColumnRole::Outcome)));
+        Schema::new(cols)
+    }
+
+    /// Number of columns.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// True when the schema has no columns.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Column names in order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Column roles in order.
+    pub fn roles(&self) -> &[ColumnRole] {
+        &self.roles
+    }
+
+    /// Index of the column called `name`, if any.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Indices of all columns with the given role.
+    pub fn indices_with_role(&self, role: ColumnRole) -> Vec<usize> {
+        self.roles
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| (*r == role).then_some(i))
+            .collect()
+    }
+
+    /// Indices of the feature columns.
+    pub fn feature_indices(&self) -> Vec<usize> {
+        self.indices_with_role(ColumnRole::Feature)
+    }
+
+    /// Indices of the outcome columns.
+    pub fn outcome_indices(&self) -> Vec<usize> {
+        self.indices_with_role(ColumnRole::Outcome)
+    }
+
+    /// Index of the (single) cluster column, if present.
+    pub fn cluster_index(&self) -> Option<usize> {
+        self.indices_with_role(ColumnRole::Cluster).first().copied()
+    }
+
+    /// Index of the (single) weight column, if present.
+    pub fn weight_index(&self) -> Option<usize> {
+        self.indices_with_role(ColumnRole::Weight).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_schema_layout() {
+        let s = Schema::simple(3, 2);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.feature_indices(), vec![0, 1, 2]);
+        assert_eq!(s.outcome_indices(), vec![3, 4]);
+        assert_eq!(s.index_of("y1"), Some(4));
+        assert_eq!(s.index_of("nope"), None);
+        assert!(s.cluster_index().is_none());
+    }
+
+    #[test]
+    fn roles_lookup() {
+        let s = Schema::new(vec![
+            ("user".into(), ColumnRole::Cluster),
+            ("treat".into(), ColumnRole::Feature),
+            ("watch_hours".into(), ColumnRole::Outcome),
+            ("w".into(), ColumnRole::Weight),
+            ("ts".into(), ColumnRole::Metadata),
+        ]);
+        assert_eq!(s.cluster_index(), Some(0));
+        assert_eq!(s.weight_index(), Some(3));
+        assert_eq!(s.indices_with_role(ColumnRole::Metadata), vec![4]);
+    }
+
+}

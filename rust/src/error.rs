@@ -1,0 +1,117 @@
+//! Error types shared across the YOCO library.
+
+use std::fmt;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, YocoError>;
+
+/// Errors produced by compression, estimation, pipeline, and runtime layers.
+#[derive(Debug)]
+pub enum YocoError {
+    /// The Gram matrix (or IRLS Hessian) was singular / not positive
+    /// definite at the given pivot.
+    Singular {
+        /// Pivot index at which the Cholesky factorization failed.
+        pivot: usize,
+    },
+    /// Shapes of the supplied operands disagree.
+    ShapeMismatch {
+        /// Human-readable description of the mismatch.
+        context: String,
+    },
+    /// A request referenced an outcome / feature / dataset that does not exist.
+    NotFound {
+        /// What was looked up.
+        what: String,
+    },
+    /// The requested operation is invalid for the given compression strategy.
+    InvalidRequest {
+        /// Why the request was rejected.
+        reason: String,
+    },
+    /// Iterative solver (IRLS / SGD) failed to converge.
+    NoConvergence {
+        /// Iterations performed before giving up.
+        iters: usize,
+        /// Final convergence criterion value.
+        delta: f64,
+    },
+    /// PJRT runtime failure (artifact load, compile, or execute).
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Malformed input data (CSV parse, manifest parse, wire protocol).
+    Parse(String),
+    /// The streaming pipeline was shut down or a worker panicked.
+    Pipeline(String),
+}
+
+impl fmt::Display for YocoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            YocoError::Singular { pivot } => {
+                write!(f, "matrix not positive definite (pivot {pivot}); features may be collinear")
+            }
+            YocoError::ShapeMismatch { context } => write!(f, "shape mismatch: {context}"),
+            YocoError::NotFound { what } => write!(f, "not found: {what}"),
+            YocoError::InvalidRequest { reason } => write!(f, "invalid request: {reason}"),
+            YocoError::NoConvergence { iters, delta } => {
+                write!(f, "solver did not converge after {iters} iterations (delta={delta:.3e})")
+            }
+            YocoError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            YocoError::Io(e) => write!(f, "io error: {e}"),
+            YocoError::Parse(msg) => write!(f, "parse error: {msg}"),
+            YocoError::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for YocoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            YocoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for YocoError {
+    fn from(e: std::io::Error) -> Self {
+        YocoError::Io(e)
+    }
+}
+
+impl YocoError {
+    /// Convenience constructor for shape mismatches.
+    pub fn shape(context: impl Into<String>) -> Self {
+        YocoError::ShapeMismatch { context: context.into() }
+    }
+
+    /// Convenience constructor for invalid requests.
+    pub fn invalid(reason: impl Into<String>) -> Self {
+        YocoError::InvalidRequest { reason: reason.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_informative() {
+        let e = YocoError::Singular { pivot: 3 };
+        assert!(e.to_string().contains("pivot 3"));
+        let e = YocoError::shape("M has 4 cols, beta has 5 rows");
+        assert!(e.to_string().contains("4 cols"));
+        let e = YocoError::NoConvergence { iters: 25, delta: 1e-3 };
+        assert!(e.to_string().contains("25 iterations"));
+    }
+
+    #[test]
+    fn io_error_roundtrip() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: YocoError = io.into();
+        assert!(matches!(e, YocoError::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

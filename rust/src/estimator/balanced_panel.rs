@@ -1,0 +1,339 @@
+//! §5.3.3 balanced-panel estimation via the Appendix A Kronecker
+//! factorizations — the interaction block M₃ = M₁ ⊗ M₂ is *never
+//! materialized*; all moments assemble from M̃₁, M̃₂ and Matrix(y, T, C).
+//!
+//! Model parameterizations (see
+//! [`BalancedPanelCompressed::design_width_interacted`]):
+//!
+//! * [`PanelModel::Plain`] — design `[M₁ | M₂]`.
+//! * [`PanelModel::Interacted`] — design `[M₂ | M₁⊗M₂]`, the full-rank
+//!   reparameterization of the paper's `M₁β₁ + M₂β₂ + M₃β₃` (those three
+//!   blocks are collinear whenever M̃₂ carries an intercept column, since
+//!   M₁ ⊗ 1 = M₁).
+
+use super::fit::{cr1_factor, CovarianceKind, Fit};
+use crate::compress::BalancedPanelCompressed;
+use crate::error::{Result, YocoError};
+use crate::linalg::{gram, matmul, outer_product_accumulate, sandwich, Cholesky, Matrix};
+
+/// Which balanced-panel model to estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PanelModel {
+    /// y = M₁β₁ + M₂β₂ + ε (static + dynamic effects, no interactions).
+    Plain,
+    /// y = M₂β₂ + (M₁⊗M₂)β₃ + ε — per-static-profile time curves,
+    /// i.e. time-heterogeneous treatment effects (the paper's motivating
+    /// extension), without materializing the n × p₁p₂ interaction block.
+    Interacted,
+}
+
+/// Fit a balanced panel with cluster-robust (by cluster) covariance from
+/// the compressed form `{M̃₁, M̃₂, Matrix(y,T,C)}`.
+///
+/// Appendix A closed forms used here (G₁ = M̃₁ᵀM̃₁, G₂ = M̃₂ᵀM̃₂,
+/// s₂ = M̃₂ᵀ1, q_c = M̃₂ᵀy_c, B₃ = Matrix(β₃, p₂, p₁)):
+///
+/// * Σ_c K¹ blocks: `T·G₁ | (M̃₁ᵀ1)s₂ᵀ | G₁⊗s₂ᵀ | C·G₂ | (1ᵀM̃₁)⊗G₂ |
+///   G₁⊗G₂` — no per-cluster loop for the bread at all.
+/// * per-cluster score v_c assembled in O(p₁p₂ + p₂²):
+///   `d_c = q_c − s₂·a_c − G₂(β₂ + B₃m₁)` (a_c = m₁ᵀβ₁; the s₂·a_c term
+///   drops for [`PanelModel::Interacted`], which has no standalone M₁
+///   block), head `m₁(s_yc − r_c)` for the M₁ block, tail `m₁ ⊗ d_c`.
+pub fn fit_balanced_panel(
+    data: &BalancedPanelCompressed,
+    model: PanelModel,
+) -> Result<Fit> {
+    let c_n = data.num_clusters();
+    let t = data.t_len();
+    let (p1, p2) = (data.p1(), data.p2());
+    let p = match model {
+        PanelModel::Plain => p1 + p2,
+        PanelModel::Interacted => p2 + p1 * p2,
+    };
+    let n = (c_n * t) as u64;
+    if n as usize <= p {
+        return Err(YocoError::invalid(format!("n={n} <= p={p}")));
+    }
+
+    // Shared small moments.
+    let g1 = gram(&data.m1); // G₁ (p1×p1)
+    let g2 = gram(&data.m2); // G₂ (p2×p2)
+    let s2: Vec<f64> = (0..p2) // M̃₂ᵀ1
+        .map(|j| (0..t).map(|r| data.m2[(r, j)]).sum())
+        .collect();
+    let m1_colsum: Vec<f64> = (0..p1) // M̃₁ᵀ1
+        .map(|j| (0..c_n).map(|c| data.m1[(c, j)]).sum())
+        .collect();
+    // Q = M̃₂ᵀ Y (p2 × C): column c is q_c.
+    let q = matmul(&data.m2.transpose(), &data.y);
+    // s_y[c] = 1ᵀ y_c and total Σy².
+    let mut sy = vec![0.0; c_n];
+    let mut total_yy = 0.0;
+    for c in 0..c_n {
+        for r in 0..t {
+            let v = data.y[(r, c)];
+            sy[c] += v;
+            total_yy += v * v;
+        }
+    }
+
+    // ---- Assemble Σ K¹ (inverse bread) blockwise, in closed form. ----
+    let mut sum_k1 = Matrix::zeros(p, p);
+    match model {
+        PanelModel::Plain => {
+            // [ T·G₁        (M̃₁ᵀ1)s₂ᵀ ]
+            // [ s₂(1ᵀM̃₁)   C·G₂      ]
+            for a in 0..p1 {
+                for b in 0..p1 {
+                    sum_k1[(a, b)] = t as f64 * g1[(a, b)];
+                }
+            }
+            for a in 0..p1 {
+                for b in 0..p2 {
+                    let v = m1_colsum[a] * s2[b];
+                    sum_k1[(a, p1 + b)] = v;
+                    sum_k1[(p1 + b, a)] = v;
+                }
+            }
+            for a in 0..p2 {
+                for b in 0..p2 {
+                    sum_k1[(p1 + a, p1 + b)] = c_n as f64 * g2[(a, b)];
+                }
+            }
+        }
+        PanelModel::Interacted => {
+            // [ C·G₂          (1ᵀM̃₁)⊗G₂ ]
+            // [ (M̃₁ᵀ1)⊗G₂    G₁⊗G₂     ]
+            for a in 0..p2 {
+                for b in 0..p2 {
+                    sum_k1[(a, b)] = c_n as f64 * g2[(a, b)];
+                }
+            }
+            for a in 0..p2 {
+                for i in 0..p1 {
+                    for j in 0..p2 {
+                        let v = m1_colsum[i] * g2[(a, j)];
+                        sum_k1[(a, p2 + i * p2 + j)] = v;
+                        sum_k1[(p2 + i * p2 + j, a)] = v;
+                    }
+                }
+            }
+            for i in 0..p1 {
+                for ii in 0..p1 {
+                    for j in 0..p2 {
+                        for jj in 0..p2 {
+                            sum_k1[(p2 + i * p2 + j, p2 + ii * p2 + jj)] =
+                                g1[(i, ii)] * g2[(j, jj)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Σ K² ----
+    let mut sum_k2 = vec![0.0; p];
+    for c in 0..c_n {
+        let m1 = data.m1.row(c);
+        match model {
+            PanelModel::Plain => {
+                for a in 0..p1 {
+                    sum_k2[a] += m1[a] * sy[c];
+                }
+                for b in 0..p2 {
+                    sum_k2[p1 + b] += q[(b, c)];
+                }
+            }
+            PanelModel::Interacted => {
+                for b in 0..p2 {
+                    sum_k2[b] += q[(b, c)];
+                }
+                for i in 0..p1 {
+                    for j in 0..p2 {
+                        sum_k2[p2 + i * p2 + j] += m1[i] * q[(j, c)];
+                    }
+                }
+            }
+        }
+    }
+
+    let chol = Cholesky::new(&sum_k1)?;
+    let beta = chol.solve_vec(&sum_k2)?;
+    let bread = chol.inverse()?;
+
+    // β partitions per model.
+    let (beta1, beta2, beta3): (&[f64], &[f64], Option<&[f64]>) = match model {
+        PanelModel::Plain => (&beta[..p1], &beta[p1..p1 + p2], None),
+        PanelModel::Interacted => (&[], &beta[..p2], Some(&beta[p2..])),
+    };
+    // B₃ as (p2 × p1): B₃[j, i] = β₃[i*p2 + j].
+    let b3 = beta3.map(|b3v| {
+        let mut m = Matrix::zeros(p2, p1);
+        for i in 0..p1 {
+            for j in 0..p2 {
+                m[(j, i)] = b3v[i * p2 + j];
+            }
+        }
+        m
+    });
+    let s2t_b2: f64 = s2.iter().zip(beta2).map(|(a, b)| a * b).sum();
+
+    // ---- Meat: Σ_c v_c v_cᵀ with factored v_c. ----
+    let mut meat = Matrix::zeros(p, p);
+    let mut v = vec![0.0; p];
+    let mut g2_arg = vec![0.0; p2];
+    let mut d = vec![0.0; p2];
+    for c in 0..c_n {
+        let m1 = data.m1.row(c);
+        let a_c: f64 = m1.iter().zip(beta1).map(|(a, b)| a * b).sum();
+        // G₂(β₂ + B₃m₁)
+        for j in 0..p2 {
+            let b3m1: f64 = match &b3 {
+                Some(b3) => (0..p1).map(|i| b3[(j, i)] * m1[i]).sum(),
+                None => 0.0,
+            };
+            g2_arg[j] = beta2[j] + b3m1;
+        }
+        for a in 0..p2 {
+            let mut s = 0.0;
+            for j in 0..p2 {
+                s += g2[(a, j)] * g2_arg[j];
+            }
+            d[a] = q[(a, c)] - s2[a] * a_c - s;
+        }
+        match model {
+            PanelModel::Plain => {
+                // head: m₁(s_yc − r_c), r_c = T·a_c + s₂ᵀβ₂
+                let r_c = t as f64 * a_c + s2t_b2;
+                let head = sy[c] - r_c;
+                for a in 0..p1 {
+                    v[a] = m1[a] * head;
+                }
+                v[p1..p1 + p2].copy_from_slice(&d);
+            }
+            PanelModel::Interacted => {
+                v[..p2].copy_from_slice(&d);
+                for i in 0..p1 {
+                    for j in 0..p2 {
+                        v[p2 + i * p2 + j] = m1[i] * d[j];
+                    }
+                }
+            }
+        }
+        outer_product_accumulate(&mut meat, &v, 1.0);
+    }
+    let mut cov = sandwich(&bread, &meat);
+    cov.scale(cr1_factor(n as f64, p as f64, c_n as f64));
+
+    // Homoskedastic scale: RSS = Σy² − 2βᵀΣK² + βᵀΣK¹β.
+    let bt_k2: f64 = beta.iter().zip(&sum_k2).map(|(b, k)| b * k).sum();
+    let mut k1b = vec![0.0; p];
+    for a in 0..p {
+        for b in 0..p {
+            k1b[a] += sum_k1[(a, b)] * beta[b];
+        }
+    }
+    let bt_k1_b: f64 = beta.iter().zip(&k1b).map(|(b, k)| b * k).sum();
+    let rss = total_yy - 2.0 * bt_k2 + bt_k1_b;
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind: CovarianceKind::ClusterRobust,
+        sigma2: Some(rss / (n as f64 - p as f64)),
+        n,
+        p,
+        records_used: c_n,
+        clusters: Some(c_n),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::BalancedPanelCompressor;
+    use crate::estimator::fit_ols;
+
+    fn noise(i: usize) -> f64 {
+        ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+    }
+
+    /// Build a small balanced panel and its compressed form.
+    fn build(c_n: usize, t: usize) -> BalancedPanelCompressed {
+        // M̃₂: [1, t] time design (intercept lives here).
+        // M̃₁: [treat, x] static.
+        let m2 = Matrix::from_rows(
+            &(0..t).map(|tt| vec![1.0, tt as f64]).collect::<Vec<_>>(),
+        );
+        let mut comp = BalancedPanelCompressor::new(m2, 2);
+        for c in 0..c_n {
+            let treat = (c % 2) as f64;
+            let x = ((c % 3) as f64) - 1.0;
+            let ce = noise(c * 131) * 1.2;
+            let y: Vec<f64> = (0..t)
+                .map(|tt| {
+                    2.0 + 0.8 * treat - 0.3 * x
+                        + 0.15 * tt as f64
+                        + 0.2 * treat * tt as f64 // time-varying effect
+                        + ce
+                        + noise(c * t + tt)
+                })
+                .collect();
+            comp.push_cluster(&[treat, x], &y).unwrap();
+        }
+        comp.finish()
+    }
+
+    #[test]
+    fn plain_model_matches_materialized_oracle() {
+        let d = build(40, 6);
+        let (m, y) = d.materialize_plain();
+        let labels: Vec<f64> =
+            (0..40).flat_map(|c| std::iter::repeat(c as f64).take(6)).collect();
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let fit = fit_balanced_panel(&d, PanelModel::Plain).unwrap();
+        assert!(
+            fit.max_rel_diff(&oracle) < 1e-9,
+            "diff {}",
+            fit.max_rel_diff(&oracle)
+        );
+    }
+
+    #[test]
+    fn interacted_model_matches_materialized_oracle() {
+        let d = build(40, 6);
+        let (m, y) = d.materialize_interacted();
+        let labels: Vec<f64> =
+            (0..40).flat_map(|c| std::iter::repeat(c as f64).take(6)).collect();
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let fit = fit_balanced_panel(&d, PanelModel::Interacted).unwrap();
+        assert!(
+            fit.max_rel_diff(&oracle) < 1e-8,
+            "diff {}",
+            fit.max_rel_diff(&oracle)
+        );
+        // Design: [1, t | treat·1, treat·t, x·1, x·t].
+        // The treat×t slope ≈ 0.2 in the DGP.
+        let b_treat_t = fit.beta[2 + 1];
+        assert!((b_treat_t - 0.2).abs() < 0.1, "got {b_treat_t}");
+    }
+
+    #[test]
+    fn interacted_sigma2_matches_oracle() {
+        let d = build(30, 4);
+        let (m, y) = d.materialize_interacted();
+        let hom = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        let fit = fit_balanced_panel(&d, PanelModel::Interacted).unwrap();
+        assert!((fit.sigma2.unwrap() - hom.sigma2.unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn records_used_is_c_not_n() {
+        let d = build(25, 8);
+        let fit = fit_balanced_panel(&d, PanelModel::Plain).unwrap();
+        assert_eq!(fit.records_used, 25);
+        assert_eq!(fit.n, 200);
+    }
+}

@@ -1,0 +1,296 @@
+//! §5.3.2 / §5.3.3 — cluster-robust estimation from between-cluster and
+//! per-cluster-moment compressions.
+
+use super::fit::{cr1_factor, CovarianceKind, Fit};
+use crate::compress::{BetweenClusterCompressed, ClusterStaticCompressed};
+use crate::error::{Result, YocoError};
+use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
+
+/// Fit with cluster-robust covariance from §5.3.2 between-cluster
+/// compression.
+///
+/// Uses the paper's expansion of the meat over cluster-groups:
+///
+///   Ξ̂ = Σ_g M_gᵀ ( S_yy − s_y bᵀ − b s_yᵀ + n_g b bᵀ ) M_g
+///
+/// with b = M_g β̂, s_y = Σ_c y_c, S_yy = Σ_c y_c y_cᵀ.
+pub fn fit_between_cluster(data: &BetweenClusterCompressed) -> Result<Fit> {
+    let p = data.num_features();
+    let n = data.total_rows();
+    let c_total = data.total_clusters();
+    if n as usize <= p {
+        return Err(YocoError::invalid(format!("n={n} <= p={p}")));
+    }
+
+    // Gram = Σ_g n_g M_gᵀM_g ; xty = Σ_g M_gᵀ s_y.
+    let mut gram = Matrix::zeros(p, p);
+    let mut xty = vec![0.0; p];
+    for grp in data.groups() {
+        let mg = &grp.features;
+        let t = mg.rows();
+        for r in 0..t {
+            let row = mg.row(r);
+            for a in 0..p {
+                let va = grp.n_clusters * row[a];
+                if va == 0.0 {
+                    continue;
+                }
+                let grow = gram.row_mut(a);
+                for b in a..p {
+                    grow[b] += va * row[b];
+                }
+            }
+            let sy = grp.y_sum[r];
+            for a in 0..p {
+                xty[a] += row[a] * sy;
+            }
+        }
+    }
+    for a in 0..p {
+        for b in (a + 1)..p {
+            gram[(b, a)] = gram[(a, b)];
+        }
+    }
+    let chol = Cholesky::new(&gram)?;
+    let beta = chol.solve_vec(&xty)?;
+    let bread = chol.inverse()?;
+
+    // Meat per group.
+    let mut meat = Matrix::zeros(p, p);
+    let mut rss = 0.0;
+    for grp in data.groups() {
+        let mg = &grp.features;
+        let t = mg.rows();
+        // b = M_g β̂ (length T_g)
+        let mut bfit = vec![0.0; t];
+        for r in 0..t {
+            let row = mg.row(r);
+            let mut s = 0.0;
+            for a in 0..p {
+                s += row[a] * beta[a];
+            }
+            bfit[r] = s;
+        }
+        // Inner T×T matrix: S_yy − s_y bᵀ − b s_yᵀ + n_g b bᵀ.
+        // Contribution = M_gᵀ Inner M_g; compute W = Inner · M_g (T × p)
+        // then M_gᵀ W.
+        let mut w = Matrix::zeros(t, p);
+        for r in 0..t {
+            for s in 0..t {
+                let inner = grp.y_outer[(r, s)] - grp.y_sum[r] * bfit[s]
+                    - bfit[r] * grp.y_sum[s]
+                    + grp.n_clusters * bfit[r] * bfit[s];
+                if inner == 0.0 {
+                    continue;
+                }
+                let mrow = mg.row(s);
+                let wrow = w.row_mut(r);
+                for a in 0..p {
+                    wrow[a] += inner * mrow[a];
+                }
+            }
+        }
+        for r in 0..t {
+            let mrow = mg.row(r);
+            let wrow = w.row(r);
+            for a in 0..p {
+                let va = mrow[a];
+                if va == 0.0 {
+                    continue;
+                }
+                let meatrow = meat.row_mut(a);
+                for b in 0..p {
+                    meatrow[b] += va * wrow[b];
+                }
+            }
+        }
+        // Homoskedastic RSS from the same statistics:
+        // Σ_c |y_c − b|² = tr(S_yy) − 2 bᵀ s_y + n_g bᵀb.
+        for r in 0..t {
+            rss += grp.y_outer[(r, r)] - 2.0 * bfit[r] * grp.y_sum[r]
+                + grp.n_clusters * bfit[r] * bfit[r];
+        }
+    }
+    meat.symmetrize();
+    let mut cov = sandwich(&bread, &meat);
+    cov.scale(cr1_factor(n as f64, p as f64, c_total as f64));
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind: CovarianceKind::ClusterRobust,
+        sigma2: Some(rss / (n as f64 - p as f64)),
+        n,
+        p,
+        records_used: data.num_records(),
+        clusters: Some(c_total as usize),
+    })
+}
+
+/// Fit with cluster-robust covariance from §5.3.3 per-cluster moments.
+///
+///   Π = (Σ K¹)⁻¹ ,  β̂ = Π Σ K² ,
+///   Ξ̂ = Σ_c (K²_c − K¹_c β̂)(K²_c − K¹_c β̂)ᵀ .
+pub fn fit_cluster_static(data: &ClusterStaticCompressed) -> Result<Fit> {
+    let p = data.num_features();
+    let n = data.total_rows();
+    let c_count = data.num_clusters();
+    if n as usize <= p {
+        return Err(YocoError::invalid(format!("n={n} <= p={p}")));
+    }
+    let sum_k1 = data.sum_k1();
+    let sum_k2 = data.sum_k2();
+    let chol = Cholesky::new(&sum_k1)?;
+    let beta = chol.solve_vec(&sum_k2)?;
+    let bread = chol.inverse()?;
+
+    let mut meat = Matrix::zeros(p, p);
+    let mut k1b = vec![0.0; p];
+    let mut v = vec![0.0; p];
+    for c in 0..c_count {
+        data.k1_matvec(c, &beta, &mut k1b);
+        let k2 = &data.clusters()[c].k2;
+        for a in 0..p {
+            v[a] = k2[a] - k1b[a];
+        }
+        outer_product_accumulate(&mut meat, &v, 1.0);
+    }
+    let mut cov = sandwich(&bread, &meat);
+    cov.scale(cr1_factor(n as f64, p as f64, c_count as f64));
+
+    // Homoskedastic scale from Σy², β̂ᵀΣK², β̂ᵀΣK¹β̂.
+    let bt_k2: f64 = beta.iter().zip(&sum_k2).map(|(b, k)| b * k).sum();
+    let mut k1_beta = vec![0.0; p];
+    for a in 0..p {
+        for b in 0..p {
+            k1_beta[a] += sum_k1[(a, b)] * beta[b];
+        }
+    }
+    let bt_k1_b: f64 = beta.iter().zip(&k1_beta).map(|(b, k)| b * k).sum();
+    let rss = data.total_yy() - 2.0 * bt_k2 + bt_k1_b;
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind: CovarianceKind::ClusterRobust,
+        sigma2: Some(rss / (n as f64 - p as f64)),
+        n,
+        p,
+        records_used: c_count,
+        clusters: Some(c_count),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{BetweenClusterCompressor, ClusterStaticCompressor};
+    use crate::estimator::fit_ols;
+
+    fn noise(i: usize) -> f64 {
+        ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+    }
+
+    /// Balanced panel: n_u clusters × T rows, [const, treat, t] design.
+    fn panel(n_u: usize, t: usize) -> (Matrix, Vec<f64>, Vec<f64>) {
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        let mut labels = Vec::new();
+        for u in 0..n_u {
+            let treat = (u % 2) as f64;
+            let ce = noise(u * 7919) * 1.5;
+            for tt in 0..t {
+                rows.push(vec![1.0, treat, tt as f64]);
+                y.push(1.0 + 0.5 * treat + 0.1 * tt as f64 + ce + noise(u * t + tt));
+                labels.push(u as f64);
+            }
+        }
+        (Matrix::from_rows(&rows), y, labels)
+    }
+
+    #[test]
+    fn between_cluster_matches_oracle() {
+        let (m, y, labels) = panel(40, 5);
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let mut c = BetweenClusterCompressor::new(3);
+        for u in 0..40 {
+            let rows: Vec<Vec<f64>> =
+                (0..5).map(|tt| m.row(u * 5 + tt).to_vec()).collect();
+            let ys: Vec<f64> = (0..5).map(|tt| y[u * 5 + tt]).collect();
+            c.push_cluster(&Matrix::from_rows(&rows), &ys);
+        }
+        let d = c.finish();
+        // Only 2 unique cluster matrices (treat 0/1).
+        assert_eq!(d.num_groups(), 2);
+        let fit = fit_between_cluster(&d).unwrap();
+        assert!(
+            fit.max_rel_diff(&oracle) < 1e-9,
+            "diff {}",
+            fit.max_rel_diff(&oracle)
+        );
+        assert_eq!(fit.clusters, Some(40));
+    }
+
+    #[test]
+    fn cluster_static_matches_oracle() {
+        let (m, y, labels) = panel(30, 4);
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let mut c = ClusterStaticCompressor::new(3);
+        for i in 0..m.rows() {
+            c.push(m.row(i), y[i], labels[i]);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_clusters(), 30);
+        let fit = fit_cluster_static(&d).unwrap();
+        assert!(
+            fit.max_rel_diff(&oracle) < 1e-9,
+            "diff {}",
+            fit.max_rel_diff(&oracle)
+        );
+        // Also recovers the homoskedastic scale losslessly.
+        let hom = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        assert!((fit.sigma2.unwrap() - hom.sigma2.unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn between_cluster_sigma2_matches_oracle() {
+        let (m, y, _) = panel(20, 3);
+        let hom = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        let mut c = BetweenClusterCompressor::new(3);
+        for u in 0..20 {
+            let rows: Vec<Vec<f64>> =
+                (0..3).map(|tt| m.row(u * 3 + tt).to_vec()).collect();
+            let ys: Vec<f64> = (0..3).map(|tt| y[u * 3 + tt]).collect();
+            c.push_cluster(&Matrix::from_rows(&rows), &ys);
+        }
+        let fit = fit_between_cluster(&c.finish()).unwrap();
+        assert!((fit.sigma2.unwrap() - hom.sigma2.unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unbalanced_panel_static_still_works() {
+        // Cluster lengths vary: §5.3.3 is fully general.
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        let mut labels = Vec::new();
+        for u in 0..25 {
+            let len = 1 + (u % 5);
+            for tt in 0..len {
+                rows.push(vec![1.0, (u % 2) as f64, tt as f64]);
+                y.push(noise(u * 31 + tt) + (u % 2) as f64);
+                labels.push(u as f64);
+            }
+        }
+        let m = Matrix::from_rows(&rows);
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let mut c = ClusterStaticCompressor::new(3);
+        for i in 0..m.rows() {
+            c.push(m.row(i), y[i], labels[i]);
+        }
+        let fit = fit_cluster_static(&c.finish()).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! Fit results and covariance-estimator kinds.
+
+use crate::linalg::Matrix;
+
+/// Which structure of Ω the sandwich covariance assumes (§5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CovarianceKind {
+    /// §5.1 — Ω = σ²Iₙ; V(β̂) = σ̂²(MᵀM)⁻¹ with σ̂² = RSS/(n−p).
+    Homoskedastic,
+    /// §5.2 — Eicker-Huber-White HC0: meat = Mᵀdiag(e²)M.
+    Heteroskedastic,
+    /// §5.3 — cluster-robust (Liang-Zeger), CR1 small-sample factor
+    /// (C/(C−1))·((n−1)/(n−p)).
+    ClusterRobust,
+}
+
+/// How weights should be interpreted for degrees of freedom (§7.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightKind {
+    /// Frequency weights: dof denominator is Σw − p.
+    Frequency,
+    /// Analytic / probability / importance weights: denominator n − p.
+    Analytic,
+}
+
+/// A fitted linear model: coefficients + sandwich covariance.
+#[derive(Debug, Clone)]
+pub struct Fit {
+    /// Coefficient estimates β̂.
+    pub beta: Vec<f64>,
+    /// Covariance matrix V(β̂) under the requested [`CovarianceKind`].
+    pub cov: Matrix,
+    /// Which covariance estimator produced `cov`.
+    pub kind: CovarianceKind,
+    /// σ̂² (populated for homoskedastic fits; residual-variance scale).
+    pub sigma2: Option<f64>,
+    /// Original sample size n (uncompressed observation count).
+    pub n: u64,
+    /// Number of features p.
+    pub p: usize,
+    /// Number of compressed records the fit actually iterated over
+    /// (G, Gᶜ, or C depending on strategy; = n for uncompressed fits).
+    pub records_used: usize,
+    /// Number of clusters C (cluster-robust fits only).
+    pub clusters: Option<usize>,
+}
+
+impl Fit {
+    /// Standard errors: sqrt of the covariance diagonal.
+    pub fn se(&self) -> Vec<f64> {
+        self.cov.diagonal().iter().map(|v| v.max(0.0).sqrt()).collect()
+    }
+
+    /// t-statistics β̂ / se.
+    pub fn t_stats(&self) -> Vec<f64> {
+        self.beta.iter().zip(self.se()).map(|(b, s)| b / s).collect()
+    }
+
+    /// Residual degrees of freedom n − p.
+    pub fn dof(&self) -> f64 {
+        self.n as f64 - self.p as f64
+    }
+
+    /// Max relative difference in (β̂, se) against another fit — the
+    /// losslessness metric reported in EXPERIMENTS.md.
+    pub fn max_rel_diff(&self, other: &Fit) -> f64 {
+        let rel = |a: f64, b: f64| {
+            let denom = a.abs().max(b.abs()).max(1e-12);
+            (a - b).abs() / denom
+        };
+        let mut worst: f64 = 0.0;
+        for (a, b) in self.beta.iter().zip(&other.beta) {
+            worst = worst.max(rel(*a, *b));
+        }
+        for (a, b) in self.se().iter().zip(other.se()) {
+            worst = worst.max(rel(*a, b));
+        }
+        worst
+    }
+}
+
+/// CR1 small-sample correction factor for cluster-robust covariances:
+/// `(C/(C−1)) · ((n−1)/(n−p))`. Public because the PJRT runtime applies
+/// it to the graph's raw (CR0) sandwich.
+pub fn cr1_factor(n: f64, p: f64, c: f64) -> f64 {
+    if c <= 1.0 {
+        return 1.0;
+    }
+    (c / (c - 1.0)) * ((n - 1.0) / (n - p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_fit() -> Fit {
+        Fit {
+            beta: vec![2.0, -1.0],
+            cov: Matrix::from_vec(2, 2, vec![4.0, 0.0, 0.0, 9.0]),
+            kind: CovarianceKind::Homoskedastic,
+            sigma2: Some(1.0),
+            n: 100,
+            p: 2,
+            records_used: 10,
+            clusters: None,
+        }
+    }
+
+    #[test]
+    fn se_and_t() {
+        let f = dummy_fit();
+        assert_eq!(f.se(), vec![2.0, 3.0]);
+        assert_eq!(f.t_stats(), vec![1.0, -1.0 / 3.0]);
+        assert_eq!(f.dof(), 98.0);
+    }
+
+    #[test]
+    fn rel_diff_detects_divergence() {
+        let a = dummy_fit();
+        let mut b = dummy_fit();
+        assert!(a.max_rel_diff(&b) < 1e-15);
+        b.beta[0] = 2.2;
+        assert!(a.max_rel_diff(&b) > 0.05);
+    }
+
+    #[test]
+    fn cr1_sane() {
+        // Large C, large n: factor -> ~1.
+        assert!((cr1_factor(1e6, 5.0, 1e5) - 1.0).abs() < 1e-3);
+        // Small C inflates.
+        assert!(cr1_factor(100.0, 2.0, 10.0) > 1.1);
+        assert_eq!(cr1_factor(10.0, 1.0, 1.0), 1.0);
+    }
+}

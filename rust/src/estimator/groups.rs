@@ -1,0 +1,133 @@
+//! §3.4 — group regression on means: lossless β̂, **lossy** V(β̂).
+//!
+//! The baseline the sufficient-statistics strategy improves on. WLS on
+//! group means with group sizes as weights recovers the OLS coefficients
+//! exactly, but the variance estimator can only see between-group
+//! residual variation — the within-group variation (ỹ'') was discarded
+//! at compression time, so σ̂² (and every covariance built on it) is
+//! biased relative to the uncompressed fit. Table 2's "Lossy" cell; the
+//! integration tests assert this divergence quantitatively.
+
+use super::fit::{CovarianceKind, Fit};
+use crate::compress::GroupMeansCompressed;
+use crate::error::{Result, YocoError};
+use crate::linalg::{Cholesky, Matrix};
+
+/// Fit WLS on group means (the only option §3.4 data supports).
+///
+/// The returned covariance uses the group-level weighted RSS with the
+/// original-n degrees of freedom — the natural (and lossy) estimator a
+/// practitioner would compute from this compression.
+pub fn fit_group_means(data: &GroupMeansCompressed) -> Result<Fit> {
+    let g_count = data.num_groups();
+    let p = data.num_features();
+    let n = data.total_n();
+    if n as usize <= p {
+        return Err(YocoError::invalid(format!("n={n} <= p={p}")));
+    }
+    let counts = data.counts();
+    let means = data.means();
+
+    let mut gram = Matrix::zeros(p, p);
+    let mut xty = vec![0.0; p];
+    for g in 0..g_count {
+        let row = data.feature_row(g);
+        let ng = counts[g];
+        for a in 0..p {
+            let va = ng * row[a];
+            if va == 0.0 {
+                continue;
+            }
+            let grow = gram.row_mut(a);
+            for b in a..p {
+                grow[b] += va * row[b];
+            }
+            xty[a] += va * means[g];
+        }
+    }
+    for a in 0..p {
+        for b in (a + 1)..p {
+            gram[(b, a)] = gram[(a, b)];
+        }
+    }
+    let chol = Cholesky::new(&gram)?;
+    let beta = chol.solve_vec(&xty)?;
+    let bread = chol.inverse()?;
+
+    // Lossy σ̂²: weighted between-group RSS only.
+    let mut rss = 0.0;
+    for g in 0..g_count {
+        let row = data.feature_row(g);
+        let mut yh = 0.0;
+        for a in 0..p {
+            yh += row[a] * beta[a];
+        }
+        let e = means[g] - yh;
+        rss += counts[g] * e * e;
+    }
+    let s2 = rss / (n as f64 - p as f64);
+    let mut cov = bread;
+    cov.scale(s2);
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind: CovarianceKind::Homoskedastic,
+        sigma2: Some(s2),
+        n,
+        p,
+        records_used: g_count,
+        clusters: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{GroupMeansCompressor, SuffStatsCompressor};
+    use crate::estimator::{fit_wls_suffstats, CovarianceKind};
+
+    fn noise(i: usize) -> f64 {
+        ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+    }
+
+    #[test]
+    fn betas_lossless_variance_lossy() {
+        // The paper's §3.4 point, made quantitative.
+        let mut gm = GroupMeansCompressor::new(2);
+        let mut ss = SuffStatsCompressor::new(2, 1);
+        for i in 0..1000 {
+            let m = [1.0, (i % 4) as f64];
+            let y = 1.0 + 0.5 * m[1] + noise(i);
+            gm.push(&m, y);
+            ss.push(&m, &[y]);
+        }
+        let lossy = fit_group_means(&gm.finish()).unwrap();
+        let exact =
+            fit_wls_suffstats(&ss.finish(), 0, CovarianceKind::Homoskedastic).unwrap();
+        // β identical…
+        for (a, b) in lossy.beta.iter().zip(&exact.beta) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        // …variance not: within-group noise is invisible to group means.
+        let ratio = lossy.sigma2.unwrap() / exact.sigma2.unwrap();
+        assert!(
+            ratio < 0.5,
+            "lossy variance should understate here, got ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn saturated_model_sees_zero_variance() {
+        // With one parameter per group the between-group RSS is exactly 0
+        // — the degenerate case that makes §3.4 unusable, while the
+        // sufficient-statistics estimator still recovers σ̂² correctly.
+        let mut gm = GroupMeansCompressor::new(2);
+        for i in 0..100 {
+            let g = (i % 2) as f64;
+            gm.push(&[1.0 - g, g], 10.0 * g + noise(i));
+        }
+        let fit = fit_group_means(&gm.finish()).unwrap();
+        assert!(fit.sigma2.unwrap() < 1e-20);
+    }
+}

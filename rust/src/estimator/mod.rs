@@ -1,0 +1,37 @@
+//! Estimation engines.
+//!
+//! Every estimator here is *native Rust* over f64 — used both as the
+//! production fallback for arbitrary shapes and as the oracle that the
+//! PJRT/HLO runtime results are pinned against. The key pairs are:
+//!
+//! * [`fit_ols`] (uncompressed oracle) ⟷ [`fit_wls_suffstats`] (§4/§5):
+//!   bit-for-bit-identical estimates up to fp reassociation, at O(G)
+//!   instead of O(n) cost — the paper's headline claim.
+//! * [`fit_between_cluster`], [`fit_cluster_static`],
+//!   [`fit_balanced_panel`]: the three §5.3 cluster-robust compressions.
+//! * [`fit_logistic`] ⟷ [`fit_logistic_suffstats`] (§7.3).
+//! * [`fit_weighted_suffstats`] (§7.2) for analytic/frequency weights.
+//! * Baselines the paper discusses: [`ttest`] (§3.1), [`fit_sgd`] (§3.2),
+//!   [`fit_group_means`] (§3.4 — lossy variance).
+
+mod balanced_panel;
+mod cluster;
+mod fit;
+mod groups;
+mod logistic;
+mod ols;
+mod sgd;
+mod ttest;
+mod weights;
+mod wls;
+
+pub use balanced_panel::{fit_balanced_panel, PanelModel};
+pub use cluster::{fit_between_cluster, fit_cluster_static};
+pub use fit::{cr1_factor, CovarianceKind, Fit, WeightKind};
+pub use groups::fit_group_means;
+pub use logistic::{fit_logistic, fit_logistic_suffstats, LogisticFit, LogisticOptions};
+pub use ols::fit_ols;
+pub use sgd::{fit_sgd, fit_sgd_compressed, SgdOptions};
+pub use ttest::{ttest, TTestResult};
+pub use weights::fit_weighted_suffstats;
+pub use wls::{fit_all_outcomes, fit_wls_suffstats};

@@ -1,0 +1,212 @@
+//! Uncompressed OLS with sandwich covariances — the oracle every
+//! compressed estimator is pinned against, and the "uncompressed" arm of
+//! the Figure 1 benchmark.
+
+use super::fit::{cr1_factor, CovarianceKind, Fit};
+use crate::error::{Result, YocoError};
+use crate::linalg::{gram, matvec, outer_product_accumulate, sandwich, Cholesky, Matrix};
+
+/// Fit OLS on raw observations.
+///
+/// * `m` — n × p design matrix.
+/// * `y` — outcomes (length n).
+/// * `kind` — covariance estimator; `ClusterRobust` requires `clusters`
+///   (a per-row numeric cluster label).
+pub fn fit_ols(
+    m: &Matrix,
+    y: &[f64],
+    kind: CovarianceKind,
+    clusters: Option<&[f64]>,
+) -> Result<Fit> {
+    let (n, p) = (m.rows(), m.cols());
+    if y.len() != n {
+        return Err(YocoError::shape(format!("y has {} rows, M has {n}", y.len())));
+    }
+    if n <= p {
+        return Err(YocoError::invalid(format!("n={n} <= p={p}")));
+    }
+    // β̂ = (MᵀM)⁻¹ Mᵀy
+    let g = gram(m);
+    let chol = Cholesky::new(&g)?;
+    let mut xty = vec![0.0; p];
+    for i in 0..n {
+        let row = m.row(i);
+        let yi = y[i];
+        for j in 0..p {
+            xty[j] += row[j] * yi;
+        }
+    }
+    let beta = chol.solve_vec(&xty)?;
+    let bread = chol.inverse()?;
+
+    // Residuals.
+    let fitted = matvec(m, &beta);
+    let resid: Vec<f64> = y.iter().zip(&fitted).map(|(yi, fi)| yi - fi).collect();
+
+    let (cov, sigma2, clusters_used) = match kind {
+        CovarianceKind::Homoskedastic => {
+            let rss: f64 = resid.iter().map(|e| e * e).sum();
+            let s2 = rss / (n - p) as f64;
+            let mut cov = bread.clone();
+            cov.scale(s2);
+            (cov, Some(s2), None)
+        }
+        CovarianceKind::Heteroskedastic => {
+            // meat = Mᵀ diag(e²) M
+            let mut meat = Matrix::zeros(p, p);
+            for i in 0..n {
+                outer_product_accumulate(&mut meat, m.row(i), resid[i] * resid[i]);
+            }
+            (sandwich(&bread, &meat), None, None)
+        }
+        CovarianceKind::ClusterRobust => {
+            let labels = clusters.ok_or_else(|| {
+                YocoError::invalid("ClusterRobust requires cluster labels")
+            })?;
+            if labels.len() != n {
+                return Err(YocoError::shape("cluster labels length != n".to_string()));
+            }
+            // Per-cluster score sums v_c = Mcᵀ e_c, meat = Σ v_c v_cᵀ.
+            let mut scores: std::collections::HashMap<u64, Vec<f64>> =
+                std::collections::HashMap::new();
+            for i in 0..n {
+                let v = scores
+                    .entry(labels[i].to_bits())
+                    .or_insert_with(|| vec![0.0; p]);
+                let row = m.row(i);
+                let e = resid[i];
+                for j in 0..p {
+                    v[j] += row[j] * e;
+                }
+            }
+            let c = scores.len();
+            let mut meat = Matrix::zeros(p, p);
+            for v in scores.values() {
+                outer_product_accumulate(&mut meat, v, 1.0);
+            }
+            let mut cov = sandwich(&bread, &meat);
+            cov.scale(cr1_factor(n as f64, p as f64, c as f64));
+            (cov, None, Some(c))
+        }
+    };
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind,
+        sigma2,
+        n: n as u64,
+        p,
+        records_used: n,
+        clusters: clusters_used,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small dataset with known closed-form answers:
+    /// y = 1 + 2x fitted exactly -> residuals 0 except a perturbation.
+    fn simple() -> (Matrix, Vec<f64>) {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ]);
+        let y = vec![1.0, 3.1, 4.9, 7.0];
+        (m, y)
+    }
+
+    #[test]
+    fn ols_recovers_line() {
+        let (m, y) = simple();
+        let f = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        assert!((f.beta[0] - 1.0).abs() < 0.1);
+        assert!((f.beta[1] - 2.0).abs() < 0.1);
+        assert!(f.sigma2.unwrap() > 0.0);
+        assert_eq!(f.records_used, 4);
+    }
+
+    #[test]
+    fn hom_matches_textbook_formula() {
+        // Exactly verifiable case: orthogonal design.
+        let m = Matrix::from_rows(&[
+            vec![1.0, 1.0],
+            vec![1.0, -1.0],
+            vec![1.0, 1.0],
+            vec![1.0, -1.0],
+        ]);
+        let y = vec![2.0, 0.0, 4.0, 2.0];
+        let f = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        // MᵀM = 4I, β = [Σy/4, Σ±y/4] = [2, 1]
+        assert!((f.beta[0] - 2.0).abs() < 1e-12);
+        assert!((f.beta[1] - 1.0).abs() < 1e-12);
+        // residuals: [−1, −1, 1, 1] -> RSS=4, σ² = 4/2 = 2, V = 2/4 I
+        assert!((f.sigma2.unwrap() - 2.0).abs() < 1e-12);
+        assert!((f.cov[(0, 0)] - 0.5).abs() < 1e-12);
+        assert!((f.cov[(1, 1)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hc0_differs_from_hom_under_heteroskedasticity() {
+        // Scale noise with x.
+        let n = 400;
+        let rows: Vec<Vec<f64>> = (0..n).map(|i| vec![1.0, (i % 10) as f64]).collect();
+        let m = Matrix::from_rows(&rows);
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let x = (i % 10) as f64;
+                // deterministic "noise" growing with x
+                let e = ((i * 2654435761usize) % 1000) as f64 / 1000.0 - 0.5;
+                1.0 + 2.0 * x + e * (1.0 + x)
+            })
+            .collect();
+        let hom = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        let hc0 = fit_ols(&m, &y, CovarianceKind::Heteroskedastic, None).unwrap();
+        // Same betas, different covariance.
+        assert!((hom.beta[1] - hc0.beta[1]).abs() < 1e-12);
+        let rel = (hom.cov[(1, 1)] - hc0.cov[(1, 1)]).abs() / hom.cov[(1, 1)];
+        assert!(rel > 0.01, "HC0 should differ under heteroskedasticity ({rel})");
+    }
+
+    #[test]
+    fn cluster_robust_requires_labels() {
+        let (m, y) = simple();
+        assert!(fit_ols(&m, &y, CovarianceKind::ClusterRobust, None).is_err());
+    }
+
+    #[test]
+    fn cluster_robust_with_singleton_clusters_matches_hc0_up_to_cr1() {
+        let (m, y) = simple();
+        let labels = vec![0.0, 1.0, 2.0, 3.0];
+        let cl = fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let hc = fit_ols(&m, &y, CovarianceKind::Heteroskedastic, None).unwrap();
+        // With n=C singleton clusters: meat identical, cov differs by CR1.
+        let factor = (4.0 / 3.0) * (3.0 / 2.0);
+        for a in 0..2 {
+            for b in 0..2 {
+                assert!((cl.cov[(a, b)] - factor * hc.cov[(a, b)]).abs() < 1e-10);
+            }
+        }
+        assert_eq!(cl.clusters, Some(4));
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let m = Matrix::from_rows(&[vec![1.0, 0.0], vec![1.0, 1.0]]);
+        assert!(fit_ols(&m, &[1.0, 2.0], CovarianceKind::Homoskedastic, None).is_err());
+    }
+
+    #[test]
+    fn collinear_rejected() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 4.0],
+            vec![3.0, 6.0],
+        ]);
+        let r = fit_ols(&m, &[1.0, 2.0, 3.0], CovarianceKind::Homoskedastic, None);
+        assert!(matches!(r, Err(YocoError::Singular { .. })));
+    }
+}

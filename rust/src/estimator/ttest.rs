@@ -1,0 +1,101 @@
+//! §3.1 — the two-sample t-test baseline.
+//!
+//! A pooled-variance two-sample t-test computed from per-arm aggregates
+//! (mean, variance, n) is numerically identical to OLS with an intercept
+//! and a treatment indicator under homoskedastic covariance — the
+//! relationship ([22] in the paper) that motivates estimating richer OLS
+//! models from aggregates. The integration tests assert this equivalence
+//! against both the uncompressed OLS and the sufficient-statistics WLS.
+
+use crate::error::{Result, YocoError};
+
+/// Result of a two-sample pooled-variance t-test.
+#[derive(Debug, Clone)]
+pub struct TTestResult {
+    /// Mean difference (treatment − control) = the OLS treatment coefficient.
+    pub effect: f64,
+    /// Standard error of the difference (pooled variance).
+    pub se: f64,
+    /// t-statistic.
+    pub t: f64,
+    /// Control mean = the OLS intercept.
+    pub control_mean: f64,
+    /// Sample sizes (control, treatment).
+    pub n: (u64, u64),
+}
+
+/// Pooled two-sample t-test from per-arm sufficient statistics
+/// (sum, sum of squares, n) — i.e. directly from compressed records.
+pub fn ttest(
+    control: (f64, f64, u64),
+    treatment: (f64, f64, u64),
+) -> Result<TTestResult> {
+    let (s0, ss0, n0) = control;
+    let (s1, ss1, n1) = treatment;
+    if n0 < 2 || n1 < 2 {
+        return Err(YocoError::invalid("each arm needs at least 2 observations"));
+    }
+    let (n0f, n1f) = (n0 as f64, n1 as f64);
+    let m0 = s0 / n0f;
+    let m1 = s1 / n1f;
+    // Within-arm sums of squared deviations from the arm mean.
+    let dev0 = ss0 - s0 * s0 / n0f;
+    let dev1 = ss1 - s1 * s1 / n1f;
+    let pooled_var = (dev0 + dev1) / (n0f + n1f - 2.0);
+    let se = (pooled_var * (1.0 / n0f + 1.0 / n1f)).sqrt();
+    let effect = m1 - m0;
+    Ok(TTestResult { effect, se, t: effect / se, control_mean: m0, n: (n0, n1) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SuffStatsCompressor;
+    use crate::estimator::{fit_wls_suffstats, CovarianceKind};
+
+    fn noise(i: usize) -> f64 {
+        ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+    }
+
+    #[test]
+    fn ttest_equals_ols_with_treatment_dummy() {
+        // Paper §3.1: t-test == OLS [1, treat] with homoskedastic V.
+        let mut c = SuffStatsCompressor::new(2, 1);
+        let (mut s0, mut ss0, mut n0) = (0.0, 0.0, 0u64);
+        let (mut s1, mut ss1, mut n1) = (0.0, 0.0, 0u64);
+        for i in 0..500 {
+            let t = (i % 2) as f64;
+            let y = 1.0 + 0.3 * t + noise(i);
+            c.push(&[1.0, t], &[y]);
+            if t == 0.0 {
+                s0 += y;
+                ss0 += y * y;
+                n0 += 1;
+            } else {
+                s1 += y;
+                ss1 += y * y;
+                n1 += 1;
+            }
+        }
+        let tt = ttest((s0, ss0, n0), (s1, ss1, n1)).unwrap();
+        let ols =
+            fit_wls_suffstats(&c.finish(), 0, CovarianceKind::Homoskedastic).unwrap();
+        assert!((tt.effect - ols.beta[1]).abs() < 1e-10);
+        assert!((tt.control_mean - ols.beta[0]).abs() < 1e-10);
+        assert!((tt.se - ols.se()[1]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_example() {
+        // control: {1,2,3} => sum 6, ss 14; treatment: {3,4,5} => 12, 50.
+        let r = ttest((6.0, 14.0, 3), (12.0, 50.0, 3)).unwrap();
+        assert!((r.effect - 2.0).abs() < 1e-12);
+        // pooled var = (2 + 2) / 4 = 1; se = sqrt(1 * (1/3+1/3)) = sqrt(2/3)
+        assert!((r.se - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_arms_rejected() {
+        assert!(ttest((1.0, 1.0, 1), (4.0, 8.0, 2)).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! §7.2 — WLS when the original problem carries weights.
+//!
+//!   β̂ = (M̃ᵀdiag(w̃)M̃)⁻¹ M̃ᵀỹ'(w)
+//!   WSS = Σ_g ŷ²w̃_g − 2ŷ ỹ'_g(w) + ỹ''_g(w)          (homoskedastic)
+//!   W̃SS_g = ŷ²·w̃₂_g − 2ŷ·ỹ'_g(w²) + ỹ''_g(w²)        (EHW meat weights)
+//!
+//! dof: n − p for analytic/probability/importance weights,
+//! Σw − p for frequency weights (the paper's noted exception).
+
+use super::fit::{CovarianceKind, Fit, WeightKind};
+use crate::compress::WeightedCompressedData;
+use crate::error::{Result, YocoError};
+use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
+
+/// Fit weighted least squares from weighted sufficient statistics.
+pub fn fit_weighted_suffstats(
+    data: &WeightedCompressedData,
+    outcome: usize,
+    kind: CovarianceKind,
+    weight_kind: WeightKind,
+) -> Result<Fit> {
+    if outcome >= data.num_outcomes() {
+        return Err(YocoError::NotFound { what: format!("outcome {outcome}") });
+    }
+    let g_count = data.num_groups();
+    let p = data.num_features();
+    let n = data.total_n();
+    let dof = match weight_kind {
+        WeightKind::Frequency => data.total_weight() - p as f64,
+        WeightKind::Analytic => n as f64 - p as f64,
+    };
+    if dof <= 0.0 {
+        return Err(YocoError::invalid(format!("non-positive dof {dof}")));
+    }
+
+    let w = data.weights();
+    let mut gram = Matrix::zeros(p, p);
+    let mut xty = vec![0.0; p];
+    for g in 0..g_count {
+        let row = data.feature_row(g);
+        let wg = w[g];
+        if wg == 0.0 {
+            continue;
+        }
+        for a in 0..p {
+            let va = wg * row[a];
+            if va == 0.0 {
+                continue;
+            }
+            let grow = gram.row_mut(a);
+            for b in a..p {
+                grow[b] += va * row[b];
+            }
+        }
+        let s = data.wy(g, outcome);
+        for a in 0..p {
+            xty[a] += row[a] * s;
+        }
+    }
+    for a in 0..p {
+        for b in (a + 1)..p {
+            gram[(b, a)] = gram[(a, b)];
+        }
+    }
+    let chol = Cholesky::new(&gram)?;
+    let beta = chol.solve_vec(&xty)?;
+    let bread = chol.inverse()?;
+
+    let fitted: Vec<f64> = (0..g_count)
+        .map(|g| {
+            let row = data.feature_row(g);
+            row.iter().zip(&beta).map(|(a, b)| a * b).sum()
+        })
+        .collect();
+
+    let (cov, sigma2) = match kind {
+        CovarianceKind::Homoskedastic => {
+            let mut wss = 0.0;
+            for g in 0..g_count {
+                let yh = fitted[g];
+                wss += yh * yh * w[g] - 2.0 * yh * data.wy(g, outcome)
+                    + data.wy2(g, outcome);
+            }
+            let s2 = wss / dof;
+            let mut cov = bread.clone();
+            cov.scale(s2);
+            (cov, Some(s2))
+        }
+        CovarianceKind::Heteroskedastic => {
+            // Frequency weights: a record with weight k is k identical
+            // observations, each contributing e² to the meat ⇒ w-moments.
+            // Analytic weights: WLS scores are w·x·e ⇒ w²-moments (the
+            // paper's W̃SS formula).
+            let mut meat = Matrix::zeros(p, p);
+            match weight_kind {
+                WeightKind::Frequency => {
+                    for g in 0..g_count {
+                        let yh = fitted[g];
+                        let wss_g = yh * yh * w[g] - 2.0 * yh * data.wy(g, outcome)
+                            + data.wy2(g, outcome);
+                        outer_product_accumulate(&mut meat, data.feature_row(g), wss_g);
+                    }
+                }
+                WeightKind::Analytic => {
+                    let w2 = data.weights_sq();
+                    for g in 0..g_count {
+                        let yh = fitted[g];
+                        let wss_g = yh * yh * w2[g] - 2.0 * yh * data.w2y(g, outcome)
+                            + data.w2y2(g, outcome);
+                        outer_product_accumulate(&mut meat, data.feature_row(g), wss_g);
+                    }
+                }
+            }
+            (sandwich(&bread, &meat), None)
+        }
+        CovarianceKind::ClusterRobust => {
+            return Err(YocoError::invalid(
+                "weighted + cluster-robust: use ClusterStaticCompressor with \
+                 pre-scaled rows (√w·m, √w·y)",
+            ));
+        }
+    };
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind,
+        sigma2,
+        n,
+        p,
+        records_used: g_count,
+        clusters: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::WeightedSuffStatsCompressor;
+    use crate::estimator::{fit_ols, fit_wls_suffstats};
+    use crate::linalg::Matrix;
+
+    fn noise(i: usize) -> f64 {
+        ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+    }
+
+    /// Weighted OLS oracle by row replication: frequency weight k == the
+    /// row appearing k times.
+    #[test]
+    fn frequency_weights_match_replication_oracle() {
+        let mut wc = WeightedSuffStatsCompressor::new(2, 1);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..60 {
+            let m = [1.0, (i % 3) as f64];
+            let y = 1.0 + 2.0 * m[1] + noise(i);
+            let k = 1 + (i % 4); // frequency weight 1..4
+            wc.push(&m, &[y], k as f64);
+            for _ in 0..k {
+                rows.push(m.to_vec());
+                ys.push(y);
+            }
+        }
+        let d = wc.finish();
+        let fit = fit_weighted_suffstats(
+            &d,
+            0,
+            CovarianceKind::Homoskedastic,
+            WeightKind::Frequency,
+        )
+        .unwrap();
+        let oracle = fit_ols(
+            &Matrix::from_rows(&rows),
+            &ys,
+            CovarianceKind::Homoskedastic,
+            None,
+        )
+        .unwrap();
+        for (a, b) in fit.beta.iter().zip(&oracle.beta) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert!((fit.sigma2.unwrap() - oracle.sigma2.unwrap()).abs() < 1e-10);
+        for (a, b) in fit.se().iter().zip(oracle.se()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn hc0_with_frequency_weights_matches_replication() {
+        let mut wc = WeightedSuffStatsCompressor::new(2, 1);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..80 {
+            let m = [1.0, (i % 5) as f64];
+            let y = 0.5 - 0.3 * m[1] + noise(i) * (1.0 + m[1]);
+            let k = 1 + (i % 3);
+            wc.push(&m, &[y], k as f64);
+            for _ in 0..k {
+                rows.push(m.to_vec());
+                ys.push(y);
+            }
+        }
+        let fit = fit_weighted_suffstats(
+            &wc.finish(),
+            0,
+            CovarianceKind::Heteroskedastic,
+            WeightKind::Frequency,
+        )
+        .unwrap();
+        let oracle = fit_ols(
+            &Matrix::from_rows(&rows),
+            &ys,
+            CovarianceKind::Heteroskedastic,
+            None,
+        )
+        .unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+    }
+
+    #[test]
+    fn unit_weights_match_unweighted_estimator() {
+        let mut wc = WeightedSuffStatsCompressor::new(2, 1);
+        let mut uc = crate::compress::SuffStatsCompressor::new(2, 1);
+        for i in 0..200 {
+            let m = [1.0, (i % 4) as f64];
+            let y = [2.0 * m[1] + noise(i)];
+            wc.push(&m, &y, 1.0);
+            uc.push(&m, &y);
+        }
+        let wfit = fit_weighted_suffstats(
+            &wc.finish(),
+            0,
+            CovarianceKind::Homoskedastic,
+            WeightKind::Analytic,
+        )
+        .unwrap();
+        let ufit =
+            fit_wls_suffstats(&uc.finish(), 0, CovarianceKind::Homoskedastic).unwrap();
+        assert!(wfit.max_rel_diff(&ufit) < 1e-12);
+    }
+
+    #[test]
+    fn analytic_vs_frequency_dof_differ() {
+        let mut wc = WeightedSuffStatsCompressor::new(1, 1);
+        for i in 0..50 {
+            wc.push(&[1.0], &[noise(i)], 2.0);
+        }
+        let d = wc.finish();
+        let freq = fit_weighted_suffstats(
+            &d,
+            0,
+            CovarianceKind::Homoskedastic,
+            WeightKind::Frequency,
+        )
+        .unwrap();
+        let ana = fit_weighted_suffstats(
+            &d,
+            0,
+            CovarianceKind::Homoskedastic,
+            WeightKind::Analytic,
+        )
+        .unwrap();
+        // Same β, different σ² scaling (Σw−p = 99 vs n−p = 49).
+        assert!((freq.beta[0] - ana.beta[0]).abs() < 1e-14);
+        let ratio = ana.sigma2.unwrap() / freq.sigma2.unwrap();
+        assert!((ratio - 99.0 / 49.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_robust_unsupported() {
+        let mut wc = WeightedSuffStatsCompressor::new(1, 1);
+        wc.push(&[1.0], &[1.0], 1.0);
+        wc.push(&[1.0], &[2.0], 1.0);
+        let r = fit_weighted_suffstats(
+            &wc.finish(),
+            0,
+            CovarianceKind::ClusterRobust,
+            WeightKind::Analytic,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! §4/§5 — WLS on sufficient statistics: the paper's core estimator.
+//!
+//! Operates on G compressed records instead of n observations, recovering
+//! β̂ and all three sandwich covariances *exactly* (up to fp
+//! reassociation):
+//!
+//!   β̂   = (M̃ᵀdiag(ñ)M̃)⁻¹ M̃ᵀỹ'
+//!   RSS̃_g = ỹ''_g − 2ŷ̃_g ỹ'_g + ŷ̃_g² ñ_g                (§5.1)
+//!   Ξ̂_EHW = M̃ᵀ diag(RSS̃) M̃                              (§5.2)
+//!   Ξ̂_NW  = Σ_c v_c v_cᵀ, v_c = Σ_{g∈c} m̃_g ẽ'_g         (§5.3.1)
+//!     with ẽ'_g = ỹ'_g − ñ_g ŷ̃_g.
+
+use super::fit::{cr1_factor, CovarianceKind, Fit};
+use crate::compress::CompressedData;
+use crate::error::{Result, YocoError};
+use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
+
+/// Fit a linear model for outcome `outcome` from §4 sufficient
+/// statistics. `ClusterRobust` requires within-cluster compression
+/// ([`WithinClusterCompressor`](crate::compress::WithinClusterCompressor)).
+pub fn fit_wls_suffstats(
+    data: &CompressedData,
+    outcome: usize,
+    kind: CovarianceKind,
+) -> Result<Fit> {
+    let g_count = data.num_groups();
+    let p = data.num_features();
+    let n = data.total_n();
+    if outcome >= data.num_outcomes() {
+        return Err(YocoError::NotFound { what: format!("outcome {outcome}") });
+    }
+    if n as usize <= p {
+        return Err(YocoError::invalid(format!("n={n} <= p={p}")));
+    }
+
+    // Bread: M̃ᵀ diag(ñ) M̃ and cross-moment M̃ᵀ ỹ'.
+    let counts = data.counts();
+    let mut gram = Matrix::zeros(p, p);
+    let mut xty = vec![0.0; p];
+    for g in 0..g_count {
+        let row = data.feature_row(g);
+        let ng = counts[g];
+        if ng == 0.0 {
+            continue;
+        }
+        for a in 0..p {
+            let va = ng * row[a];
+            if va == 0.0 {
+                continue;
+            }
+            let grow = gram.row_mut(a);
+            for b in a..p {
+                grow[b] += va * row[b];
+            }
+        }
+        let s = data.sum(g, outcome);
+        for a in 0..p {
+            xty[a] += row[a] * s;
+        }
+    }
+    for a in 0..p {
+        for b in (a + 1)..p {
+            gram[(b, a)] = gram[(a, b)];
+        }
+    }
+
+    let chol = Cholesky::new(&gram)?;
+    let beta = chol.solve_vec(&xty)?;
+    let bread = chol.inverse()?;
+
+    // Per-group fitted values and residual statistics.
+    let mut fitted = vec![0.0; g_count];
+    for g in 0..g_count {
+        let row = data.feature_row(g);
+        let mut s = 0.0;
+        for a in 0..p {
+            s += row[a] * beta[a];
+        }
+        fitted[g] = s;
+    }
+
+    let (cov, sigma2, clusters_used) = match kind {
+        CovarianceKind::Homoskedastic => {
+            // RSS = Σ_g (ŷ² ñ − 2 ŷ ỹ' + ỹ'')
+            let mut rss = 0.0;
+            for g in 0..g_count {
+                let yh = fitted[g];
+                rss += yh * yh * counts[g] - 2.0 * yh * data.sum(g, outcome)
+                    + data.sumsq(g, outcome);
+            }
+            let s2 = rss / (n as f64 - p as f64);
+            let mut cov = bread.clone();
+            cov.scale(s2);
+            (cov, Some(s2), None)
+        }
+        CovarianceKind::Heteroskedastic => {
+            // meat = M̃ᵀ diag(RSS̃_g) M̃
+            let mut meat = Matrix::zeros(p, p);
+            for g in 0..g_count {
+                let yh = fitted[g];
+                let rss_g = yh * yh * counts[g] - 2.0 * yh * data.sum(g, outcome)
+                    + data.sumsq(g, outcome);
+                outer_product_accumulate(&mut meat, data.feature_row(g), rss_g);
+            }
+            (sandwich(&bread, &meat), None, None)
+        }
+        CovarianceKind::ClusterRobust => {
+            let tags = data.cluster_of().ok_or_else(|| {
+                YocoError::invalid(
+                    "ClusterRobust needs within-cluster compression (cluster tags)",
+                )
+            })?;
+            let c_count = data.num_clusters();
+            // v_c = Σ_{g ∈ c} m̃_g ẽ'_g with ẽ'_g = ỹ'_g − ñ_g ŷ_g.
+            let mut scores = vec![0.0; c_count * p];
+            for g in 0..g_count {
+                let e = data.sum(g, outcome) - counts[g] * fitted[g];
+                let c = tags[g] as usize;
+                let row = data.feature_row(g);
+                let v = &mut scores[c * p..(c + 1) * p];
+                for a in 0..p {
+                    v[a] += row[a] * e;
+                }
+            }
+            let mut meat = Matrix::zeros(p, p);
+            for c in 0..c_count {
+                outer_product_accumulate(&mut meat, &scores[c * p..(c + 1) * p], 1.0);
+            }
+            let mut cov = sandwich(&bread, &meat);
+            cov.scale(cr1_factor(n as f64, p as f64, c_count as f64));
+            (cov, None, Some(c_count))
+        }
+    };
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind,
+        sigma2,
+        n,
+        p,
+        records_used: g_count,
+        clusters: clusters_used,
+    })
+}
+
+/// YOCO in action: fit every outcome from the same compressed dataset,
+/// reusing the factorized bread (one Cholesky for o outcomes).
+pub fn fit_all_outcomes(
+    data: &CompressedData,
+    kind: CovarianceKind,
+) -> Result<Vec<Fit>> {
+    (0..data.num_outcomes())
+        .map(|k| fit_wls_suffstats(data, k, kind))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{SuffStatsCompressor, WithinClusterCompressor};
+    use crate::estimator::fit_ols;
+    use crate::linalg::Matrix;
+
+    /// Deterministic pseudo-random in [-0.5, 0.5).
+    fn noise(i: usize) -> f64 {
+        ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+    }
+
+    fn make_data(n: usize) -> (Matrix, Vec<f64>) {
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![1.0, (i % 2) as f64, (i % 5) as f64])
+            .collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = (i % 2) as f64;
+                let x = (i % 5) as f64;
+                0.5 + 1.5 * t - 0.7 * x + noise(i) * (1.0 + t)
+            })
+            .collect();
+        (Matrix::from_rows(&rows), y)
+    }
+
+    fn compress(m: &Matrix, y: &[f64]) -> crate::compress::CompressedData {
+        let mut c = SuffStatsCompressor::new(m.cols(), 1);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i]]);
+        }
+        c.finish()
+    }
+
+    #[test]
+    fn compressed_equals_uncompressed_homoskedastic() {
+        let (m, y) = make_data(500);
+        let oracle = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        let d = compress(&m, &y);
+        assert_eq!(d.num_groups(), 10); // 2 × 5 cells
+        let fit = fit_wls_suffstats(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-10, "diff {}", fit.max_rel_diff(&oracle));
+        assert!((fit.sigma2.unwrap() - oracle.sigma2.unwrap()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn compressed_equals_uncompressed_heteroskedastic() {
+        let (m, y) = make_data(500);
+        let oracle = fit_ols(&m, &y, CovarianceKind::Heteroskedastic, None).unwrap();
+        let d = compress(&m, &y);
+        let fit = fit_wls_suffstats(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-10, "diff {}", fit.max_rel_diff(&oracle));
+    }
+
+    #[test]
+    fn compressed_equals_uncompressed_clustered() {
+        // 50 clusters × 10 rows; features duplicate *within* clusters so
+        // §5.3.1 actually compresses (G = 100 < n = 500).
+        let n = 500;
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|i| vec![1.0, (i % 2) as f64]).collect();
+        let m = Matrix::from_rows(&rows);
+        let labels: Vec<f64> = (0..n).map(|i| (i / 10) as f64).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                1.0 + 0.8 * (i % 2) as f64 + noise(i) + noise(i / 10) * 2.0
+            })
+            .collect();
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let mut c = WithinClusterCompressor::new(m.cols(), 1);
+        for i in 0..n {
+            c.push(m.row(i), &[y[i]], labels[i]);
+        }
+        let d = c.finish();
+        assert!(d.num_groups() < n);
+        let fit = fit_wls_suffstats(&d, 0, CovarianceKind::ClusterRobust).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9, "diff {}", fit.max_rel_diff(&oracle));
+        assert_eq!(fit.clusters, Some(50));
+    }
+
+    #[test]
+    fn cluster_robust_without_tags_rejected() {
+        let (m, y) = make_data(100);
+        let d = compress(&m, &y);
+        assert!(fit_wls_suffstats(&d, 0, CovarianceKind::ClusterRobust).is_err());
+    }
+
+    #[test]
+    fn multi_outcome_fit_matches_individual() {
+        let (m, y) = make_data(300);
+        let y2: Vec<f64> = y.iter().map(|v| v * 2.0 + 1.0).collect();
+        let mut c = SuffStatsCompressor::new(m.cols(), 2);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i], y2[i]]);
+        }
+        let d = c.finish();
+        let fits = fit_all_outcomes(&d, CovarianceKind::Homoskedastic).unwrap();
+        assert_eq!(fits.len(), 2);
+        // Second outcome is affine in the first: slopes double.
+        assert!((fits[1].beta[1] - 2.0 * fits[0].beta[1]).abs() < 1e-9);
+        assert!((fits[1].beta[0] - (2.0 * fits[0].beta[0] + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_outcome_index_rejected() {
+        let (m, y) = make_data(100);
+        let d = compress(&m, &y);
+        assert!(fit_wls_suffstats(&d, 3, CovarianceKind::Homoskedastic).is_err());
+    }
+
+    #[test]
+    fn quickstart_doc_example_value() {
+        // Table 1: group A mean must be 4/3 (intercept-free one-hot fit).
+        let m = [
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 0.0, 1.0],
+        ];
+        let y = [1.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut c = SuffStatsCompressor::new(3, 1);
+        for (mi, yi) in m.iter().zip(y) {
+            c.push(mi, &[yi]);
+        }
+        let d = c.finish();
+        let fit = fit_wls_suffstats(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+        assert!((fit.beta[0] - 4.0 / 3.0).abs() < 1e-12);
+        assert!((fit.beta[1] - 3.5).abs() < 1e-12);
+        assert!((fit.beta[2] - 5.0).abs() < 1e-12);
+    }
+}

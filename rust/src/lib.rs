@@ -1,0 +1,73 @@
+//! # YOCO — You Only Compress Once
+//!
+//! A production-grade reproduction of *"You Only Compress Once: Optimal
+//! Data Compression for Estimating Linear Models"* (Wong, Forsell, Lewis,
+//! Mao, Wardrop — Netflix, 2021).
+//!
+//! The library implements **conditionally sufficient statistics**: a
+//! unified compression + estimation strategy that compresses raw
+//! observation-level data once and then estimates arbitrarily many linear
+//! models — OLS/WLS point estimates *and* homoskedastic,
+//! heteroskedasticity-consistent (EHW/HC0), and cluster-robust
+//! covariances — **losslessly** from the compressed records.
+//!
+//! ## Layers
+//!
+//! * [`linalg`] — dense f64 linear-algebra substrate (Cholesky, Gram,
+//!   triangular solves) used by the native estimation engine.
+//! * [`data`] — schemas, columnar batches, CSV I/O, and synthetic
+//!   experimentation-platform / panel workload generators.
+//! * [`compress`] — the paper's compression strategies: sufficient
+//!   statistics (§4), f-weights (§3.3), group means (§3.4), the three
+//!   cluster-robust compressions (§5.3.1–§5.3.3, incl. the balanced-panel
+//!   Kronecker path), binning for high-cardinality features (§6),
+//!   other-weight support (§7.2) and multi-outcome YOCO (§7.1).
+//! * [`estimator`] — native engines: WLS + sandwich covariances,
+//!   logistic regression via IRLS on compressed records (§7.3), and the
+//!   baselines the paper compares against (t-test, streaming SGD, lossy
+//!   group regression).
+//! * [`pipeline`] — streaming compression orchestrator: sharded workers,
+//!   bounded-channel backpressure, rebalancing, associative merges.
+//! * [`coordinator`] — the analysis service: request DSL, planner,
+//!   router, compressed-dataset cache (the YOCO store), metrics.
+//! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from the Rust
+//!   request path with exact zero-weight shape-bucket padding.
+//! * [`server`] — JSON-lines-over-TCP analysis frontend (tokio).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use yoco::compress::SuffStatsCompressor;
+//! use yoco::estimator::{fit_wls_suffstats, CovarianceKind};
+//!
+//! // Table 1's tiny dataset: intercept + indicators for levels B and C.
+//! let m = vec![
+//!     vec![1.0, 0.0, 0.0], vec![1.0, 0.0, 0.0], vec![1.0, 0.0, 0.0],
+//!     vec![1.0, 1.0, 0.0], vec![1.0, 1.0, 0.0],
+//!     vec![1.0, 0.0, 1.0],
+//! ];
+//! let y = vec![1.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+//! let mut c = SuffStatsCompressor::new(3, 1);
+//! for (mi, yi) in m.iter().zip(&y) {
+//!     c.push(mi, &[*yi]);
+//! }
+//! let compressed = c.finish();
+//! assert_eq!(compressed.num_groups(), 3); // 6 rows -> 3 compressed records
+//! let fit = fit_wls_suffstats(&compressed, 0, CovarianceKind::Homoskedastic).unwrap();
+//! assert!((fit.beta[0] - 4.0/3.0).abs() < 1e-12);
+//! ```
+#![deny(missing_docs)]
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod estimator;
+pub mod linalg;
+pub mod pipeline;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+pub use error::{Result, YocoError};

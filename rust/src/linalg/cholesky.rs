@@ -1,0 +1,200 @@
+//! Cholesky factorization, solves, and inverse for SPD matrices.
+
+use super::Matrix;
+use crate::error::{Result, YocoError};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+///
+/// Used for the bread matrix Π = (MᵀWM)⁻¹ and the IRLS Hessian. The
+/// factorization rejects non-SPD input (collinear features) with
+/// [`YocoError::Singular`] instead of producing NaNs.
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor the SPD matrix `a`. Only the lower triangle of `a` is read.
+    pub fn new(a: &Matrix) -> Result<Self> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(YocoError::shape(format!(
+                "Cholesky requires square input, got {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            // Diagonal element.
+            let mut d = a[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            // Relative tolerance guards against semi-definite Grams from
+            // exactly-collinear features (common with one-hot + intercept).
+            let tol = 1e-12 * a[(j, j)].abs().max(1.0);
+            if d <= tol {
+                return Err(YocoError::Singular { pivot: j });
+            }
+            let dsqrt = d.sqrt();
+            l[(j, j)] = dsqrt;
+            // Column below the diagonal.
+            for i in (j + 1)..n {
+                let mut s = a[(i, j)];
+                // Branch-free inner product over the already-computed columns.
+                let (ri, rj) = (l.row(i), l.row(j));
+                for k in 0..j {
+                    s -= ri[k] * rj[k];
+                }
+                l[(i, j)] = s / dsqrt;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The lower-triangular factor.
+    pub fn factor(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.l.rows();
+        if b.len() != n {
+            return Err(YocoError::shape(format!("solve_vec rhs len {} != {}", b.len(), n)));
+        }
+        let mut x = b.to_vec();
+        // Forward: L y = b
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = x[i];
+            for k in 0..i {
+                s -= row[k] * x[k];
+            }
+            x[i] = s / row[i];
+        }
+        // Backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Solve `A X = B` column by column.
+    pub fn solve_matrix(&self, b: &Matrix) -> Result<Matrix> {
+        let n = self.l.rows();
+        if b.rows() != n {
+            return Err(YocoError::shape(format!(
+                "solve_matrix rhs has {} rows, expected {}",
+                b.rows(),
+                n
+            )));
+        }
+        let mut out = Matrix::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve_vec(&col)?;
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// The inverse `A⁻¹` (symmetric).
+    pub fn inverse(&self) -> Result<Matrix> {
+        let n = self.l.rows();
+        let mut inv = self.solve_matrix(&Matrix::identity(n))?;
+        inv.symmetrize();
+        Ok(inv)
+    }
+
+    /// log|A| = 2·Σ log L_ii. Used by model-comparison diagnostics.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    fn spd_example() -> Matrix {
+        // A = B Bᵀ + I for a full-rank random-ish B.
+        let b = Matrix::from_vec(3, 3, vec![2., 1., 0., 1., 3., 1., 0., 1., 2.]);
+        let mut a = matmul(&b, &b.transpose());
+        for i in 0..3 {
+            a[(i, i)] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_roundtrip() {
+        let a = spd_example();
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor();
+        let re = matmul(l, &l.transpose());
+        assert!(re.max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn solve_vec_matches_direct() {
+        let a = spd_example();
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve_vec(&[1.0, 2.0, 3.0]).unwrap();
+        // A x should equal b.
+        for i in 0..3 {
+            let mut s = 0.0;
+            for j in 0..3 {
+                s += a[(i, j)] * x[j];
+            }
+            assert!((s - (i as f64 + 1.0)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd_example();
+        let inv = Cholesky::new(&a).unwrap().inverse().unwrap();
+        let prod = matmul(&a, &inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(3)) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        // Rank-deficient: third column = first + second.
+        let m = Matrix::from_rows(&[
+            vec![1., 0., 1.],
+            vec![0., 1., 1.],
+            vec![1., 1., 2.],
+        ]);
+        let gram = matmul(&m.transpose(), &m);
+        match Cholesky::new(&gram) {
+            Err(YocoError::Singular { .. }) => {}
+            other => panic!("expected Singular, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let m = Matrix::zeros(2, 3);
+        assert!(Cholesky::new(&m).is_err());
+    }
+
+    #[test]
+    fn log_det_matches_known() {
+        // diag(4, 9) -> log det = log 36
+        let a = Matrix::from_vec(2, 2, vec![4., 0., 0., 9.]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.log_det() - 36f64.ln()).abs() < 1e-12);
+    }
+}

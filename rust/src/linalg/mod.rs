@@ -1,0 +1,19 @@
+//! Dense f64 linear-algebra substrate for the native estimation engine.
+//!
+//! The paper's estimators only need a handful of dense operations on
+//! small-to-medium matrices (p ≤ a few thousand): Gram accumulation,
+//! Cholesky factorization/solve/inverse, matrix-vector and matrix-matrix
+//! products, and symmetric sandwich products. We implement these directly
+//! rather than pulling in a BLAS binding: the hot loops are blocked and
+//! branch-free, and having the substrate in-tree lets the perf pass tune
+//! it against the actual access patterns (tall-skinny Gram, tiny solves).
+
+mod cholesky;
+mod matrix;
+mod ops;
+
+pub use cholesky::Cholesky;
+pub use matrix::Matrix;
+pub use ops::{
+    gram, gram_weighted, matmul, matvec, outer_product_accumulate, sandwich, weighted_xty,
+};

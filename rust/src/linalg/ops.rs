@@ -1,0 +1,207 @@
+//! Dense kernels: matmul, Gram accumulation, sandwich products.
+//!
+//! These are the native-engine analogues of the L1 Pallas kernels; the
+//! Python `ref.py` oracle and the integration tests pin them against each
+//! other through the HLO runtime.
+
+use super::Matrix;
+
+/// `C = A · B`. Panics on inner-dimension mismatch.
+///
+/// ikj loop order keeps the inner loop contiguous over both `B`'s row and
+/// `C`'s row, which autovectorizes well for the small/medium shapes the
+/// estimators use.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul inner dimension mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for kk in 0..k {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue; // one-hot / padded inputs are mostly zeros
+            }
+            let brow = b.row(kk);
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `y = A · x`.
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "matvec dimension mismatch");
+    let mut y = vec![0.0; a.rows()];
+    for i in 0..a.rows() {
+        let row = a.row(i);
+        let mut s = 0.0;
+        for j in 0..row.len() {
+            s += row[j] * x[j];
+        }
+        y[i] = s;
+    }
+    y
+}
+
+/// Unweighted Gram `MᵀM`.
+pub fn gram(m: &Matrix) -> Matrix {
+    gram_weighted_impl(m, None)
+}
+
+/// Weighted Gram `Mᵀ diag(w) M` — the "bread⁻¹" of every estimator in the
+/// paper, computed over compressed records with ñ (or w̃) as weights.
+pub fn gram_weighted(m: &Matrix, w: &[f64]) -> Matrix {
+    assert_eq!(m.rows(), w.len(), "gram_weighted weight length mismatch");
+    gram_weighted_impl(m, Some(w))
+}
+
+fn gram_weighted_impl(m: &Matrix, w: Option<&[f64]>) -> Matrix {
+    let (n, p) = (m.rows(), m.cols());
+    let mut g = Matrix::zeros(p, p);
+    // Accumulate the upper triangle row-by-row: rank-1 update per record.
+    for i in 0..n {
+        let row = m.row(i);
+        let wi = w.map_or(1.0, |w| w[i]);
+        if wi == 0.0 {
+            continue; // zero-weight padding rows are exact no-ops
+        }
+        for a in 0..p {
+            let va = wi * row[a];
+            if va == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(a);
+            for b in a..p {
+                grow[b] += va * row[b];
+            }
+        }
+    }
+    // Mirror to the lower triangle.
+    for a in 0..p {
+        for b in (a + 1)..p {
+            g[(b, a)] = g[(a, b)];
+        }
+    }
+    g
+}
+
+/// `Mᵀ (w ⊙ y)` — the weighted cross-moment vector feeding β̂.
+pub fn weighted_xty(m: &Matrix, w: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(m.rows(), w.len());
+    assert_eq!(m.rows(), y.len());
+    let p = m.cols();
+    let mut out = vec![0.0; p];
+    for i in 0..m.rows() {
+        let wy = w[i] * y[i];
+        if wy == 0.0 {
+            continue;
+        }
+        let row = m.row(i);
+        for j in 0..p {
+            out[j] += wy * row[j];
+        }
+    }
+    out
+}
+
+/// Sandwich product `B Ξ B` for symmetric bread `B` and meat `Ξ`.
+pub fn sandwich(bread: &Matrix, meat: &Matrix) -> Matrix {
+    let mut v = matmul(&matmul(bread, meat), bread);
+    v.symmetrize();
+    v
+}
+
+/// Rank-1 update `A += s · v vᵀ` — the per-cluster meat contribution
+/// `Mcᵀ ec ecᵀ Mc` reduces to this with `v = Mcᵀ ec`.
+pub fn outer_product_accumulate(a: &mut Matrix, v: &[f64], s: f64) {
+    let p = v.len();
+    assert_eq!(a.rows(), p);
+    assert_eq!(a.cols(), p);
+    for i in 0..p {
+        let vi = s * v[i];
+        if vi == 0.0 {
+            continue;
+        }
+        let row = a.row_mut(i);
+        for j in 0..p {
+            row[j] += vi * v[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.as_slice(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Matrix::from_vec(2, 3, vec![1., 0., 2., 0., 1., 3.]);
+        assert_eq!(matvec(&a, &[1., 1., 1.]), vec![3., 4.]);
+    }
+
+    #[test]
+    fn gram_matches_explicit_transpose_product() {
+        let m = Matrix::from_vec(4, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let g = gram(&m);
+        let explicit = matmul(&m.transpose(), &m);
+        assert!(g.max_abs_diff(&explicit) < 1e-12);
+    }
+
+    #[test]
+    fn weighted_gram_equals_row_replication() {
+        // weight 3 on a row == replicating it 3 times.
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let g = gram_weighted(&m, &[3.0, 1.0]);
+        let rep = Matrix::from_rows(&[
+            vec![1., 2.],
+            vec![1., 2.],
+            vec![1., 2.],
+            vec![3., 4.],
+        ]);
+        assert!(g.max_abs_diff(&gram(&rep)) < 1e-12);
+    }
+
+    #[test]
+    fn zero_weight_rows_are_noops() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 9., 9., 3., 4.]);
+        let g = gram_weighted(&m, &[1.0, 0.0, 1.0]);
+        let m2 = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert!(g.max_abs_diff(&gram(&m2)) < 1e-12);
+    }
+
+    #[test]
+    fn weighted_xty_known() {
+        let m = Matrix::from_vec(2, 2, vec![1., 0., 0., 1.]);
+        let v = weighted_xty(&m, &[2.0, 3.0], &[10.0, 20.0]);
+        assert_eq!(v, vec![20.0, 60.0]);
+    }
+
+    #[test]
+    fn sandwich_is_symmetric() {
+        let b = Matrix::from_vec(2, 2, vec![2., 1., 1., 3.]);
+        let meat = Matrix::from_vec(2, 2, vec![1., 0.5, 0.5, 2.]);
+        let v = sandwich(&b, &meat);
+        assert_eq!(v[(0, 1)], v[(1, 0)]);
+    }
+
+    #[test]
+    fn outer_accumulate_matches_manual() {
+        let mut a = Matrix::zeros(2, 2);
+        outer_product_accumulate(&mut a, &[1., 2.], 2.0);
+        assert_eq!(a.as_slice(), &[2., 4., 4., 8.]);
+        outer_product_accumulate(&mut a, &[1., 0.], 1.0);
+        assert_eq!(a[(0, 0)], 3.0);
+    }
+}

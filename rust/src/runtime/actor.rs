@@ -1,0 +1,142 @@
+//! Runtime actor: a dedicated executor thread owning the PJRT client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and neither `Send` nor
+//! `Sync`, but the coordinator/server are multi-threaded. Instead of
+//! unsafe Send wrappers, the engine lives on one dedicated thread — an
+//! execution lane, as in inference servers — and callers submit jobs
+//! over a channel and block on the reply. Execution was serialized by a
+//! mutex anyway (one PJRT executable invocation at a time), so the lane
+//! costs nothing in throughput while making thread-safety structural.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use super::engine::RuntimeEngine;
+use crate::compress::CompressedData;
+use crate::error::{Result, YocoError};
+use crate::estimator::{CovarianceKind, Fit};
+use crate::linalg::Matrix;
+
+enum Job {
+    Fit {
+        data: CompressedData,
+        outcome: usize,
+        kind: CovarianceKind,
+        reply: mpsc::Sender<Result<Fit>>,
+    },
+    FitLogistic {
+        data: CompressedData,
+        outcome: usize,
+        reply: mpsc::Sender<Result<(Vec<f64>, Matrix)>>,
+    },
+    CompiledCount {
+        reply: mpsc::Sender<usize>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the runtime lane. Cloneable via `Arc`.
+pub struct RuntimeHandle {
+    tx: Mutex<mpsc::Sender<Job>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the lane and load the engine from `dir`. Fails fast (before
+    /// returning) if the manifest or PJRT client cannot be initialized.
+    pub fn load(dir: &Path) -> Result<RuntimeHandle> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir: PathBuf = dir.to_path_buf();
+        let thread = std::thread::Builder::new()
+            .name("yoco-pjrt-lane".into())
+            .spawn(move || {
+                let engine = match RuntimeEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Fit { data, outcome, kind, reply } => {
+                            let _ = reply.send(engine.fit(&data, outcome, kind));
+                        }
+                        Job::FitLogistic { data, outcome, reply } => {
+                            let _ = reply.send(engine.fit_logistic(&data, outcome));
+                        }
+                        Job::CompiledCount { reply } => {
+                            let _ = reply.send(engine.compiled_count());
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| YocoError::Runtime(format!("cannot spawn pjrt lane: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| YocoError::Runtime("pjrt lane died during init".into()))??;
+        Ok(RuntimeHandle { tx: Mutex::new(tx), thread: Some(thread) })
+    }
+
+    fn submit<T>(&self, build: impl FnOnce(mpsc::Sender<T>) -> Job) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(build(reply_tx))
+            .map_err(|_| YocoError::Runtime("pjrt lane is gone".into()))?;
+        reply_rx.recv().map_err(|_| YocoError::Runtime("pjrt lane dropped reply".into()))
+    }
+
+    /// Fit on the runtime lane (see [`RuntimeEngine::fit`]).
+    pub fn fit(
+        &self,
+        data: &CompressedData,
+        outcome: usize,
+        kind: CovarianceKind,
+    ) -> Result<Fit> {
+        self.submit(|reply| Job::Fit { data: data.clone(), outcome, kind, reply })?
+    }
+
+    /// Logistic fit on the runtime lane (see [`RuntimeEngine::fit_logistic`]).
+    pub fn fit_logistic(
+        &self,
+        data: &CompressedData,
+        outcome: usize,
+    ) -> Result<(Vec<f64>, Matrix)> {
+        self.submit(|reply| Job::FitLogistic { data: data.clone(), outcome, reply })?
+    }
+
+    /// Executables compiled so far on the lane.
+    pub fn compiled_count(&self) -> usize {
+        self.submit(|reply| Job::CompiledCount { reply }).unwrap_or(0)
+    }
+}
+
+impl Drop for RuntimeHandle {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Job::Shutdown);
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_failure_is_synchronous() {
+        let r = RuntimeHandle::load(Path::new("/nonexistent/artifacts"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! The PJRT execution engine: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::manifest::Manifest;
+use super::pad::PaddedSuffStats;
+use crate::compress::CompressedData;
+use crate::error::{Result, YocoError};
+use crate::estimator::{CovarianceKind, Fit};
+
+/// Which AOT graph to execute. Names match `python/compile/model.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphKind {
+    /// β̂ + homoskedastic covariance + σ̂².
+    WlsHom,
+    /// β̂ + EHW (HC0) covariance.
+    WlsEhw,
+    /// β̂ + cluster-robust covariance (CR0; CR1 applied Rust-side).
+    WlsCluster,
+    /// Logistic regression via fixed-iteration IRLS.
+    Logistic,
+}
+
+impl GraphKind {
+    /// Manifest graph name.
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphKind::WlsHom => "wls_hom",
+            GraphKind::WlsEhw => "wls_ehw",
+            GraphKind::WlsCluster => "wls_cluster",
+            GraphKind::Logistic => "logistic",
+        }
+    }
+
+    /// The graph for a covariance kind.
+    pub fn for_covariance(kind: CovarianceKind) -> GraphKind {
+        match kind {
+            CovarianceKind::Homoskedastic => GraphKind::WlsHom,
+            CovarianceKind::Heteroskedastic => GraphKind::WlsEhw,
+            CovarianceKind::ClusterRobust => GraphKind::WlsCluster,
+        }
+    }
+}
+
+fn rt(e: xla::Error) -> YocoError {
+    YocoError::Runtime(e.to_string())
+}
+
+/// PJRT CPU engine over the artifact manifest. Executables compile on
+/// first use and are cached for the life of the engine (compile-once,
+/// execute-many — the AOT analogue of the paper's "compress once").
+pub struct RuntimeEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl RuntimeEngine {
+    /// Load the manifest from `dir` and connect a PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<RuntimeEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt)?;
+        Ok(RuntimeEngine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (e.g. "cpu"), for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifacts known to the manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Fit a linear model for `outcome` on the PJRT runtime.
+    ///
+    /// Numerically equivalent to
+    /// [`fit_wls_suffstats`](crate::estimator::fit_wls_suffstats) — the
+    /// integration suite pins them against each other — but executes the
+    /// AOT-compiled JAX/Pallas graph instead of native Rust.
+    pub fn fit(
+        &self,
+        data: &CompressedData,
+        outcome: usize,
+        kind: CovarianceKind,
+    ) -> Result<Fit> {
+        let graph = GraphKind::for_covariance(kind);
+        if graph == GraphKind::WlsCluster && data.cluster_of().is_none() {
+            return Err(YocoError::invalid(
+                "ClusterRobust needs within-cluster compression (cluster tags)",
+            ));
+        }
+        let spec = self
+            .manifest
+            .pick(graph.name(), data.num_groups(), data.num_features())
+            .ok_or_else(|| {
+                YocoError::Runtime(format!(
+                    "no {} artifact fits G={}, p={}",
+                    graph.name(),
+                    data.num_groups(),
+                    data.num_features()
+                ))
+            })?;
+        let padded = PaddedSuffStats::pad_to(data, outcome, spec.g, spec.p)?;
+        let name = spec.name.clone();
+        let path = self.manifest.hlo_path(spec);
+        let outputs = self.execute(&name, &path, &padded, graph)?;
+
+        let p = padded.p_real;
+        let n = padded.n;
+        let beta = padded.unpad_vec(&outputs.beta);
+        let mut cov = padded.unpad_matrix(&outputs.cov);
+        let (sigma2, clusters) = match graph {
+            GraphKind::WlsHom => (Some(outputs.sigma2), None),
+            GraphKind::WlsEhw => (None, None),
+            GraphKind::WlsCluster => {
+                // Graph returns the CR0 sandwich; apply CR1 here.
+                let c = padded.num_clusters;
+                cov.scale(crate::estimator::cr1_factor(
+                    n as f64, p as f64, c as f64,
+                ));
+                (None, Some(c))
+            }
+            GraphKind::Logistic => (None, None),
+        };
+        Ok(Fit {
+            beta,
+            cov,
+            kind,
+            sigma2,
+            n,
+            p,
+            records_used: padded.g_real,
+            clusters,
+        })
+    }
+
+    /// Fit logistic regression for a binary `outcome` on the runtime.
+    /// Returns (β̂, covariance) unpadded.
+    pub fn fit_logistic(
+        &self,
+        data: &CompressedData,
+        outcome: usize,
+    ) -> Result<(Vec<f64>, crate::linalg::Matrix)> {
+        let spec = self
+            .manifest
+            .pick("logistic", data.num_groups(), data.num_features())
+            .ok_or_else(|| {
+                YocoError::Runtime(format!(
+                    "no logistic artifact fits G={}, p={}",
+                    data.num_groups(),
+                    data.num_features()
+                ))
+            })?;
+        let padded = PaddedSuffStats::pad_to(data, outcome, spec.g, spec.p)?;
+        let name = spec.name.clone();
+        let path = self.manifest.hlo_path(spec);
+        let outputs = self.execute(&name, &path, &padded, GraphKind::Logistic)?;
+        Ok((padded.unpad_vec(&outputs.beta), padded.unpad_matrix(&outputs.cov)))
+    }
+
+    /// Compile (cached) and execute one graph over padded inputs.
+    fn execute(
+        &self,
+        name: &str,
+        hlo_path: &Path,
+        padded: &PaddedSuffStats,
+        graph: GraphKind,
+    ) -> Result<GraphOutputs> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let proto =
+                xla::HloModuleProto::from_text_file(hlo_path).map_err(rt)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(rt)?;
+            cache.insert(name.to_string(), exe);
+        }
+        let exe = cache.get(name).expect("just inserted");
+
+        let (gb, pb) = (padded.g_bucket as i64, padded.p_bucket as i64);
+        let features = xla::Literal::vec1(&padded.features)
+            .reshape(&[gb, pb])
+            .map_err(rt)?;
+        let counts = xla::Literal::vec1(&padded.counts);
+        let ysum = xla::Literal::vec1(&padded.ysum);
+        let ysumsq = xla::Literal::vec1(&padded.ysumsq);
+        let colmask = xla::Literal::vec1(&padded.colmask);
+        let n = xla::Literal::from(padded.n as f64);
+        let p_true = xla::Literal::from(padded.p_real as f64);
+
+        // Input order must match the jitted signature in model.py.
+        let result = match graph {
+            GraphKind::WlsHom | GraphKind::WlsEhw => exe
+                .execute::<xla::Literal>(&[
+                    features, counts, ysum, ysumsq, colmask, n, p_true,
+                ])
+                .map_err(rt)?,
+            GraphKind::WlsCluster => {
+                let ids = xla::Literal::vec1(&padded.cluster_ids);
+                exe.execute::<xla::Literal>(&[
+                    features, counts, ysum, ysumsq, colmask, ids,
+                ])
+                .map_err(rt)?
+            }
+            GraphKind::Logistic => exe
+                .execute::<xla::Literal>(&[features, counts, ysum, colmask])
+                .map_err(rt)?,
+        };
+        let tuple = result[0][0].to_literal_sync().map_err(rt)?;
+        let parts = tuple.to_tuple().map_err(rt)?;
+        let expect = match graph {
+            GraphKind::WlsHom | GraphKind::WlsEhw | GraphKind::WlsCluster => 3,
+            GraphKind::Logistic => 2,
+        };
+        if parts.len() != expect {
+            return Err(YocoError::Runtime(format!(
+                "graph {name} returned {} outputs, expected {expect}",
+                parts.len()
+            )));
+        }
+        let mut it = parts.into_iter();
+        let beta = it.next().unwrap().to_vec::<f64>().map_err(rt)?;
+        let cov = it.next().unwrap().to_vec::<f64>().map_err(rt)?;
+        let sigma2 = match it.next() {
+            Some(lit) => lit.to_vec::<f64>().map_err(rt)?.first().copied().unwrap_or(0.0),
+            None => 0.0,
+        };
+        Ok(GraphOutputs { beta, cov, sigma2 })
+    }
+}
+
+struct GraphOutputs {
+    beta: Vec<f64>,
+    cov: Vec<f64>,
+    sigma2: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_names_match_manifest_convention() {
+        assert_eq!(GraphKind::WlsHom.name(), "wls_hom");
+        assert_eq!(
+            GraphKind::for_covariance(CovarianceKind::Heteroskedastic),
+            GraphKind::WlsEhw
+        );
+        assert_eq!(
+            GraphKind::for_covariance(CovarianceKind::ClusterRobust).name(),
+            "wls_cluster"
+        );
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_a_clean_error() {
+        let r = RuntimeEngine::load(Path::new("/nonexistent/artifacts"));
+        match r {
+            Err(YocoError::Runtime(msg)) => assert!(msg.contains("make artifacts")),
+            other => panic!("expected Runtime error, got {:?}", other.map(|_| ())),
+        }
+    }
+}

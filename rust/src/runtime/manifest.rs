@@ -1,0 +1,152 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, YocoError};
+use crate::util::json::{parse, Json};
+
+/// One AOT-compiled artifact (an HLO text file at a fixed shape bucket).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Unique artifact name, e.g. `wls_hom_g256_p8`.
+    pub name: String,
+    /// Graph kind: `wls_hom`, `wls_ehw`, `wls_cluster`, `logistic`.
+    pub graph: String,
+    /// Group-count bucket G.
+    pub g: usize,
+    /// Feature-count bucket P.
+    pub p: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory holding the manifest (artifact paths resolve under it).
+    pub dir: PathBuf,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            YocoError::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse_str(&text, dir)
+    }
+
+    /// Parse manifest JSON text (separated for testing).
+    pub fn parse_str(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = parse(text)?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| YocoError::Parse("manifest: missing 'artifacts' array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let field = |k: &str| -> Result<&Json> {
+                a.get(k).ok_or_else(|| {
+                    YocoError::Parse(format!("manifest artifact missing '{k}'"))
+                })
+            };
+            artifacts.push(ArtifactSpec {
+                name: field("name")?
+                    .as_str()
+                    .ok_or_else(|| YocoError::Parse("artifact name not a string".into()))?
+                    .to_string(),
+                graph: field("graph")?
+                    .as_str()
+                    .ok_or_else(|| YocoError::Parse("artifact graph not a string".into()))?
+                    .to_string(),
+                g: field("g")?
+                    .as_usize()
+                    .ok_or_else(|| YocoError::Parse("artifact g not an int".into()))?,
+                p: field("p")?
+                    .as_usize()
+                    .ok_or_else(|| YocoError::Parse("artifact p not an int".into()))?,
+                path: PathBuf::from(
+                    field("path")?
+                        .as_str()
+                        .ok_or_else(|| YocoError::Parse("artifact path not a string".into()))?,
+                ),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// All artifacts of a graph kind, sorted by (g, p) ascending — the
+    /// bucket ladder.
+    pub fn ladder(&self, graph: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> =
+            self.artifacts.iter().filter(|a| a.graph == graph).collect();
+        v.sort_by_key(|a| (a.g, a.p));
+        v
+    }
+
+    /// Smallest bucket fitting (g, p) for the graph kind.
+    pub fn pick(&self, graph: &str, g: usize, p: usize) -> Option<&ArtifactSpec> {
+        self.ladder(graph)
+            .into_iter()
+            .filter(|a| a.g >= g && a.p >= p)
+            .min_by_key(|a| (a.g, a.p))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name":"wls_hom_g256_p8","graph":"wls_hom","g":256,"p":8,"path":"a.hlo.txt"},
+        {"name":"wls_hom_g4096_p8","graph":"wls_hom","g":4096,"p":8,"path":"b.hlo.txt"},
+        {"name":"wls_hom_g256_p32","graph":"wls_hom","g":256,"p":32,"path":"c.hlo.txt"},
+        {"name":"wls_ehw_g256_p8","graph":"wls_ehw","g":256,"p":8,"path":"d.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_picks_buckets() {
+        let m = Manifest::parse_str(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.ladder("wls_hom").len(), 3);
+        // Exact fit.
+        assert_eq!(m.pick("wls_hom", 256, 8).unwrap().name, "wls_hom_g256_p8");
+        // Needs bigger G.
+        assert_eq!(m.pick("wls_hom", 300, 5).unwrap().name, "wls_hom_g4096_p8");
+        // Needs bigger P.
+        assert_eq!(m.pick("wls_hom", 100, 9).unwrap().name, "wls_hom_g256_p32");
+        // Too big for any bucket.
+        assert!(m.pick("wls_hom", 100_000, 8).is_none());
+        // Unknown graph.
+        assert!(m.pick("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse_str(r#"{"artifacts":[{"name":"x"}]}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse_str(r#"{}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse_str("not json", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = Manifest::parse_str(SAMPLE, Path::new("/x/y")).unwrap();
+        assert_eq!(
+            m.hlo_path(&m.artifacts[0]),
+            PathBuf::from("/x/y/a.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and run them on
+//! the Rust request path.
+//!
+//! Python is **build-time only**: `make artifacts` lowers the L2 graphs
+//! (which call the L1 Pallas kernels) to HLO *text* under `artifacts/`,
+//! plus a `manifest.json` describing each artifact's graph kind and
+//! shape bucket. This module loads the manifest, compiles executables on
+//! the PJRT CPU client (cached per artifact), pads compressed datasets
+//! up to the next shape bucket, executes, and unpads the results.
+//!
+//! Padding is *exact*: rows with ñ = 0 contribute zero to every moment,
+//! and padded feature columns are masked via the graph's `colmask` input
+//! (the graph adds `diag(1 − colmask)` to the Gram, so padded dimensions
+//! solve to β = 0 and are dropped on unpack). See
+//! `python/compile/model.py` for the graph-side contract.
+
+mod actor;
+mod engine;
+mod manifest;
+mod pad;
+
+pub use actor::RuntimeHandle;
+pub use engine::{GraphKind, RuntimeEngine};
+pub use manifest::{ArtifactSpec, Manifest};
+pub use pad::{pick_bucket, PaddedSuffStats};

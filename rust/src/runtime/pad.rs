@@ -1,0 +1,209 @@
+//! Exact zero-weight padding of compressed datasets to shape buckets.
+
+use crate::compress::CompressedData;
+use crate::error::{Result, YocoError};
+
+/// The standard bucket ladders compiled by `python/compile/aot.py`.
+pub const G_BUCKETS: &[usize] = &[256, 1024, 4096, 16384, 65536];
+/// Feature-count buckets.
+pub const P_BUCKETS: &[usize] = &[8, 16, 32];
+
+/// Smallest (G, P) bucket that fits (g, p), if any.
+pub fn pick_bucket(g: usize, p: usize) -> Option<(usize, usize)> {
+    let gb = G_BUCKETS.iter().copied().find(|&b| b >= g)?;
+    let pb = P_BUCKETS.iter().copied().find(|&b| b >= p)?;
+    Some((gb, pb))
+}
+
+/// A compressed dataset padded to a (G, P) bucket, flattened for the
+/// PJRT executable's inputs.
+#[derive(Debug, Clone)]
+pub struct PaddedSuffStats {
+    /// Bucket group count.
+    pub g_bucket: usize,
+    /// Bucket feature count.
+    pub p_bucket: usize,
+    /// True group count.
+    pub g_real: usize,
+    /// True feature count.
+    pub p_real: usize,
+    /// features, row-major (g_bucket × p_bucket); padded entries 0.
+    pub features: Vec<f64>,
+    /// ñ per group; padded rows 0 (exact no-ops in every moment sum).
+    pub counts: Vec<f64>,
+    /// ỹ' for the chosen outcome; padded rows 0.
+    pub ysum: Vec<f64>,
+    /// ỹ'' for the chosen outcome; padded rows 0.
+    pub ysumsq: Vec<f64>,
+    /// 1.0 for real feature columns, 0.0 for padded (graph masks the
+    /// Gram diagonal with `1 − colmask` so padded dims stay invertible).
+    pub colmask: Vec<f64>,
+    /// Cluster id per group (dense, < C) — 0 on padded rows; only
+    /// meaningful for cluster graphs.
+    pub cluster_ids: Vec<i32>,
+    /// Number of clusters C (0 when untagged).
+    pub num_clusters: usize,
+    /// Original sample size n.
+    pub n: u64,
+}
+
+impl PaddedSuffStats {
+    /// Pad `data`'s outcome `outcome` into the smallest fitting bucket
+    /// from the standard ladder.
+    pub fn from_compressed(data: &CompressedData, outcome: usize) -> Result<Self> {
+        let g = data.num_groups();
+        let p = data.num_features();
+        let (gb, pb) = pick_bucket(g, p).ok_or_else(|| {
+            YocoError::Runtime(format!(
+                "no artifact bucket fits G={g}, p={p} (max {} × {}); \
+                 use the native engine",
+                G_BUCKETS.last().unwrap(),
+                P_BUCKETS.last().unwrap()
+            ))
+        })?;
+        Self::pad_to(data, outcome, gb, pb)
+    }
+
+    /// Pad into an explicit (G, P) bucket (must fit).
+    pub fn pad_to(
+        data: &CompressedData,
+        outcome: usize,
+        gb: usize,
+        pb: usize,
+    ) -> Result<Self> {
+        let g = data.num_groups();
+        let p = data.num_features();
+        if outcome >= data.num_outcomes() {
+            return Err(YocoError::NotFound { what: format!("outcome {outcome}") });
+        }
+        if gb < g || pb < p {
+            return Err(YocoError::shape(format!(
+                "bucket ({gb}, {pb}) too small for data ({g}, {p})"
+            )));
+        }
+        let mut features = vec![0.0; gb * pb];
+        for gi in 0..g {
+            let row = data.feature_row(gi);
+            features[gi * pb..gi * pb + p].copy_from_slice(row);
+        }
+        let mut counts = vec![0.0; gb];
+        counts[..g].copy_from_slice(data.counts());
+        let mut ysum = vec![0.0; gb];
+        let mut ysumsq = vec![0.0; gb];
+        for gi in 0..g {
+            ysum[gi] = data.sum(gi, outcome);
+            ysumsq[gi] = data.sumsq(gi, outcome);
+        }
+        let mut colmask = vec![0.0; pb];
+        colmask[..p].iter_mut().for_each(|v| *v = 1.0);
+        let mut cluster_ids = vec![0i32; gb];
+        if let Some(tags) = data.cluster_of() {
+            for gi in 0..g {
+                cluster_ids[gi] = tags[gi] as i32;
+            }
+        }
+        Ok(PaddedSuffStats {
+            g_bucket: gb,
+            p_bucket: pb,
+            g_real: g,
+            p_real: p,
+            features,
+            counts,
+            ysum,
+            ysumsq,
+            colmask,
+            cluster_ids,
+            num_clusters: data.num_clusters(),
+            n: data.total_n(),
+        })
+    }
+
+    /// Drop padded dimensions from a padded β (length p_bucket).
+    pub fn unpad_vec(&self, padded: &[f64]) -> Vec<f64> {
+        padded[..self.p_real].to_vec()
+    }
+
+    /// Drop padded rows/cols from a padded covariance (p_bucket²).
+    pub fn unpad_matrix(&self, padded: &[f64]) -> crate::linalg::Matrix {
+        let p = self.p_real;
+        let pb = self.p_bucket;
+        let mut m = crate::linalg::Matrix::zeros(p, p);
+        for a in 0..p {
+            for b in 0..p {
+                m[(a, b)] = padded[a * pb + b];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SuffStatsCompressor;
+
+    fn sample(p: usize, groups: usize) -> CompressedData {
+        let mut c = SuffStatsCompressor::new(p, 1);
+        for i in 0..groups * 3 {
+            let mut f = vec![0.0; p];
+            f[0] = 1.0;
+            if p > 1 {
+                f[1] = (i % groups) as f64;
+            }
+            c.push(&f, &[i as f64]);
+        }
+        c.finish()
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(pick_bucket(1, 1), Some((256, 8)));
+        assert_eq!(pick_bucket(256, 8), Some((256, 8)));
+        assert_eq!(pick_bucket(257, 8), Some((1024, 8)));
+        assert_eq!(pick_bucket(256, 9), Some((256, 16)));
+        assert_eq!(pick_bucket(100_000, 8), None);
+        assert_eq!(pick_bucket(10, 64), None);
+    }
+
+    #[test]
+    fn padding_layout() {
+        let d = sample(2, 5);
+        let p = PaddedSuffStats::from_compressed(&d, 0).unwrap();
+        assert_eq!(p.g_bucket, 256);
+        assert_eq!(p.p_bucket, 8);
+        assert_eq!(p.g_real, 5);
+        assert_eq!(p.p_real, 2);
+        // Real row 0 occupies the first p_real slots of its padded row.
+        assert_eq!(p.features[0], d.feature_row(0)[0]);
+        assert_eq!(p.features[1], d.feature_row(0)[1]);
+        assert_eq!(p.features[2], 0.0);
+        // Padded rows all zero counts.
+        assert!(p.counts[5..].iter().all(|&v| v == 0.0));
+        assert_eq!(p.colmask[..2], [1.0, 1.0]);
+        assert!(p.colmask[2..].iter().all(|&v| v == 0.0));
+        assert_eq!(p.n, d.total_n());
+    }
+
+    #[test]
+    fn unpad_roundtrip() {
+        let d = sample(3, 4);
+        let p = PaddedSuffStats::from_compressed(&d, 0).unwrap();
+        let mut padded_beta = vec![0.0; p.p_bucket];
+        padded_beta[0] = 1.5;
+        padded_beta[2] = -0.5;
+        assert_eq!(p.unpad_vec(&padded_beta), vec![1.5, 0.0, -0.5]);
+        let mut cov = vec![0.0; p.p_bucket * p.p_bucket];
+        cov[0] = 9.0;
+        cov[2 * p.p_bucket + 2] = 4.0;
+        let m = p.unpad_matrix(&cov);
+        assert_eq!(m[(0, 0)], 9.0);
+        assert_eq!(m[(2, 2)], 4.0);
+        assert_eq!(m.rows(), 3);
+    }
+
+    #[test]
+    fn bad_outcome_rejected() {
+        let d = sample(2, 3);
+        assert!(PaddedSuffStats::from_compressed(&d, 5).is_err());
+    }
+}

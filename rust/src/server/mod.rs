@@ -1,0 +1,26 @@
+//! JSON-lines-over-TCP analysis frontend.
+//!
+//! One request per line, one JSON response per line — trivially
+//! scriptable (`nc localhost 7878`) and language-agnostic. Thread per
+//! connection over `std::net` (tokio is not vendored in this build
+//! environment; see DESIGN.md §2 substitutions).
+//!
+//! Protocol (`op` discriminates):
+//!
+//! ```json
+//! {"op":"ping"}
+//! {"op":"register_xp","name":"xp","n":100000,"arms":2,"covariates":3,"levels":4,"outcomes":2}
+//! {"op":"register_csv","name":"d","path":"/data/d.csv","roles":["feature","outcome"]}
+//! {"op":"analyze","dataset":"xp","outcome":"y0","features":["const","treat1"],
+//!  "covariance":"hom|hc0|cluster","estimator":"wls|logistic","engine":"auto|native|pjrt"}
+//! {"op":"datasets"}
+//! {"op":"metrics"}
+//! ```
+//!
+//! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+
+mod proto;
+mod tcp;
+
+pub use proto::{handle_line, parse_request, Request};
+pub use tcp::{serve, ServerHandle};

@@ -1,0 +1,299 @@
+//! Wire protocol: JSON line → [`Request`] → coordinator call → JSON line.
+
+use crate::coordinator::{AnalysisRequest, Coordinator, EnginePref, EstimatorKind};
+use crate::data::gen::{generate_xp, XpConfig};
+use crate::data::{read_csv, ColumnRole};
+use crate::error::{Result, YocoError};
+use crate::estimator::CovarianceKind;
+use crate::util::json::{parse, Json};
+
+/// A decoded wire request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// Generate + register a synthetic XP dataset.
+    RegisterXp {
+        /// Dataset name.
+        name: String,
+        /// Generator config.
+        config: XpConfig,
+    },
+    /// Register a dataset from a CSV file on the server's filesystem.
+    RegisterCsv {
+        /// Dataset name.
+        name: String,
+        /// CSV path.
+        path: String,
+        /// Column roles, one per CSV column.
+        roles: Vec<ColumnRole>,
+    },
+    /// Run an analysis.
+    Analyze(AnalysisRequest),
+    /// List registered datasets.
+    Datasets,
+    /// Service metrics.
+    Metrics,
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| YocoError::Parse(format!("missing string field '{key}'")))
+}
+
+fn usize_field(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).and_then(Json::as_usize).unwrap_or(default)
+}
+
+/// Parse one JSON line into a [`Request`].
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = parse(line)?;
+    let op = str_field(&j, "op")?;
+    match op.as_str() {
+        "ping" => Ok(Request::Ping),
+        "register_xp" => Ok(Request::RegisterXp {
+            name: str_field(&j, "name")?,
+            config: XpConfig {
+                n: usize_field(&j, "n", 10_000),
+                arms: usize_field(&j, "arms", 2),
+                covariates: usize_field(&j, "covariates", 3),
+                levels: usize_field(&j, "levels", 4),
+                outcomes: usize_field(&j, "outcomes", 2),
+                binary_first_outcome: j
+                    .get("binary_first_outcome")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                skew: j.get("skew").and_then(Json::as_f64).unwrap_or(0.0),
+                seed: j.get("seed").and_then(Json::as_f64).unwrap_or(7.0) as u64,
+            },
+        }),
+        "register_csv" => {
+            let roles_json = j
+                .get("roles")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| YocoError::Parse("missing 'roles' array".into()))?;
+            let mut roles = Vec::with_capacity(roles_json.len());
+            for r in roles_json {
+                roles.push(match r.as_str() {
+                    Some("feature") => ColumnRole::Feature,
+                    Some("outcome") => ColumnRole::Outcome,
+                    Some("cluster") => ColumnRole::Cluster,
+                    Some("weight") => ColumnRole::Weight,
+                    Some("metadata") => ColumnRole::Metadata,
+                    other => {
+                        return Err(YocoError::Parse(format!("bad role {other:?}")))
+                    }
+                });
+            }
+            Ok(Request::RegisterCsv {
+                name: str_field(&j, "name")?,
+                path: str_field(&j, "path")?,
+                roles,
+            })
+        }
+        "analyze" => {
+            let covariance = match j.get("covariance").and_then(Json::as_str) {
+                None | Some("hom") => CovarianceKind::Homoskedastic,
+                Some("hc0") | Some("ehw") => CovarianceKind::Heteroskedastic,
+                Some("cluster") => CovarianceKind::ClusterRobust,
+                Some(other) => {
+                    return Err(YocoError::Parse(format!("bad covariance '{other}'")))
+                }
+            };
+            let estimator = match j.get("estimator").and_then(Json::as_str) {
+                None | Some("wls") => EstimatorKind::Wls,
+                Some("logistic") => EstimatorKind::Logistic,
+                Some(other) => {
+                    return Err(YocoError::Parse(format!("bad estimator '{other}'")))
+                }
+            };
+            let engine = match j.get("engine").and_then(Json::as_str) {
+                None | Some("auto") => EnginePref::Auto,
+                Some("native") => EnginePref::Native,
+                Some("pjrt") => EnginePref::Pjrt,
+                Some(other) => {
+                    return Err(YocoError::Parse(format!("bad engine '{other}'")))
+                }
+            };
+            let features = match j.get("features").and_then(Json::as_arr) {
+                None => Vec::new(),
+                Some(arr) => {
+                    let mut v = Vec::with_capacity(arr.len());
+                    for f in arr {
+                        v.push(
+                            f.as_str()
+                                .ok_or_else(|| {
+                                    YocoError::Parse("features must be strings".into())
+                                })?
+                                .to_string(),
+                        );
+                    }
+                    v
+                }
+            };
+            Ok(Request::Analyze(AnalysisRequest {
+                dataset: str_field(&j, "dataset")?,
+                outcome: str_field(&j, "outcome")?,
+                features,
+                covariance,
+                estimator,
+                engine,
+            }))
+        }
+        "datasets" => Ok(Request::Datasets),
+        "metrics" => Ok(Request::Metrics),
+        other => Err(YocoError::Parse(format!("unknown op '{other}'"))),
+    }
+}
+
+fn ok(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields)
+}
+
+fn err(e: &YocoError) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(e.to_string()))])
+}
+
+/// Serve one JSON line against the coordinator, returning the JSON reply.
+pub fn handle_line(coordinator: &Coordinator, line: &str) -> Json {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return err(&e),
+    };
+    match handle(coordinator, req) {
+        Ok(j) => j,
+        Err(e) => err(&e),
+    }
+}
+
+fn handle(c: &Coordinator, req: Request) -> Result<Json> {
+    match req {
+        Request::Ping => Ok(ok(vec![("pong", Json::Bool(true))])),
+        Request::RegisterXp { name, config } => {
+            let (batch, _) = generate_xp(&config);
+            let rows = batch.num_rows();
+            c.store().register(&name, batch);
+            Ok(ok(vec![
+                ("dataset", Json::Str(name)),
+                ("rows", Json::Num(rows as f64)),
+            ]))
+        }
+        Request::RegisterCsv { name, path, roles } => {
+            let batch = read_csv(std::path::Path::new(&path), &roles)?;
+            let rows = batch.num_rows();
+            c.store().register(&name, batch);
+            Ok(ok(vec![
+                ("dataset", Json::Str(name)),
+                ("rows", Json::Num(rows as f64)),
+            ]))
+        }
+        Request::Analyze(a) => {
+            let resp = c.analyze(&a)?;
+            let mut j = resp.to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert("ok".into(), Json::Bool(true));
+            }
+            Ok(j)
+        }
+        Request::Datasets => Ok(ok(vec![(
+            "datasets",
+            Json::Arr(
+                c.store().dataset_names().into_iter().map(Json::Str).collect(),
+            ),
+        )])),
+        Request::Metrics => {
+            let m = c.metrics();
+            let (hits, misses) = c.store().cache_stats();
+            Ok(ok(vec![
+                ("requests", Json::Num(m.requests as f64)),
+                ("errors", Json::Num(m.errors as f64)),
+                ("native_fits", Json::Num(m.native_fits as f64)),
+                ("pjrt_fits", Json::Num(m.pjrt_fits as f64)),
+                ("mean_latency_us", Json::Num(m.mean_latency_us)),
+                ("cache_hits", Json::Num(hits as f64)),
+                ("cache_misses", Json::Num(misses as f64)),
+                ("runtime_available", Json::Bool(c.runtime_available())),
+            ]))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::PipelineConfig;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::native_only(PipelineConfig {
+            workers: 2,
+            virtual_shards: 8,
+            queue_capacity: 2,
+            chunk_rows: 512,
+            rebalance_every: 0,
+        })
+    }
+
+    #[test]
+    fn ping() {
+        let c = coordinator();
+        let r = handle_line(&c, r#"{"op":"ping"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn register_and_analyze_roundtrip() {
+        let c = coordinator();
+        let r = handle_line(
+            &c,
+            r#"{"op":"register_xp","name":"xp","n":2000,"outcomes":2}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("rows").unwrap().as_usize(), Some(2000));
+        let r = handle_line(
+            &c,
+            r#"{"op":"analyze","dataset":"xp","outcome":"y1","covariance":"hc0"}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert!(r.get("beta").unwrap().as_arr().unwrap().len() > 1);
+        assert_eq!(r.get("engine_used").unwrap().as_str(), Some("native"));
+        let r = handle_line(&c, r#"{"op":"datasets"}"#);
+        assert_eq!(r.get("datasets").unwrap().as_arr().unwrap().len(), 1);
+        let r = handle_line(&c, r#"{"op":"metrics"}"#);
+        assert_eq!(r.get("requests").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn malformed_requests_return_errors() {
+        let c = coordinator();
+        for bad in [
+            "not json",
+            r#"{"op":"nope"}"#,
+            r#"{"op":"analyze"}"#,
+            r#"{"op":"analyze","dataset":"ghost","outcome":"y0"}"#,
+            r#"{"op":"analyze","dataset":"x","outcome":"y0","covariance":"weird"}"#,
+        ] {
+            let r = handle_line(&c, bad);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+            assert!(r.get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn csv_registration() {
+        let c = coordinator();
+        let path = std::env::temp_dir().join(format!("yoco_proto_{}.csv", std::process::id()));
+        std::fs::write(&path, "x0,y0\n1,2\n1,3\n0,1\n").unwrap();
+        let line = format!(
+            r#"{{"op":"register_csv","name":"d","path":"{}","roles":["feature","outcome"]}}"#,
+            path.display()
+        );
+        let r = handle_line(&c, &line);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("rows").unwrap().as_usize(), Some(3));
+    }
+}

@@ -1,0 +1,156 @@
+//! TCP listener: thread per connection, JSON line in, JSON line out.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::Coordinator;
+use crate::error::Result;
+
+use super::proto::handle_line;
+
+/// Handle to a running server (for tests and graceful shutdown).
+pub struct ServerHandle {
+    /// Bound local address (useful with port 0).
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    connections: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    /// Total connections accepted so far.
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join the accept loop. In-flight connections
+    /// finish their current line.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so accept() returns.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `coordinator` on `addr` (e.g. "127.0.0.1:7878"; use
+/// port 0 to let the OS pick). Returns immediately with a handle.
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let connections = Arc::new(AtomicU64::new(0));
+    let stop2 = stop.clone();
+    let conns2 = connections.clone();
+    let accept_thread = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            conns2.fetch_add(1, Ordering::Relaxed);
+            let coord = coordinator.clone();
+            std::thread::spawn(move || {
+                let _ = client_loop(&coord, stream);
+            });
+        }
+    });
+    Ok(ServerHandle { addr: local, stop, accept_thread: Some(accept_thread), connections })
+}
+
+fn client_loop(coordinator: &Coordinator, stream: TcpStream) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(coordinator, &line);
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    let _ = peer; // quiet until we add per-peer logging
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::PipelineConfig;
+
+    fn coordinator() -> Arc<Coordinator> {
+        Arc::new(Coordinator::native_only(PipelineConfig {
+            workers: 2,
+            virtual_shards: 8,
+            queue_capacity: 2,
+            chunk_rows: 512,
+            rebalance_every: 0,
+        }))
+    }
+
+    fn roundtrip(stream: &mut TcpStream, line: &str) -> String {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let handle = serve(coordinator(), "127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        let reply = roundtrip(&mut stream, r#"{"op":"ping"}"#);
+        assert!(reply.contains(r#""pong":true"#), "{reply}");
+        let reply = roundtrip(
+            &mut stream,
+            r#"{"op":"register_xp","name":"xp","n":1000}"#,
+        );
+        assert!(reply.contains(r#""rows":1000"#), "{reply}");
+        let reply = roundtrip(
+            &mut stream,
+            r#"{"op":"analyze","dataset":"xp","outcome":"y0"}"#,
+        );
+        assert!(reply.contains(r#""ok":true"#), "{reply}");
+        assert!(reply.contains("beta"), "{reply}");
+        drop(stream);
+        assert_eq!(handle.connections(), 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let handle = serve(coordinator(), "127.0.0.1:0").unwrap();
+        let addr = handle.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    let reply = roundtrip(
+                        &mut s,
+                        &format!(r#"{{"op":"register_xp","name":"d{i}","n":500}}"#),
+                    );
+                    assert!(reply.contains(r#""ok":true"#));
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mut s = TcpStream::connect(addr).unwrap();
+        let reply = roundtrip(&mut s, r#"{"op":"datasets"}"#);
+        for i in 0..4 {
+            assert!(reply.contains(&format!("d{i}")), "{reply}");
+        }
+        handle.shutdown();
+    }
+}

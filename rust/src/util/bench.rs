@@ -1,0 +1,115 @@
+//! Tiny timing harness for the `cargo bench` targets (criterion is not
+//! vendored in this environment). Warmup + N timed iterations, reporting
+//! min/median/mean — enough to regenerate the paper's relative
+//! comparisons, which are about orders of magnitude, not microseconds.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Per-iteration wall time: minimum.
+    pub min: Duration,
+    /// Per-iteration wall time: median.
+    pub median: Duration,
+    /// Per-iteration wall time: mean.
+    pub mean: Duration,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Median in fractional milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` repeatedly and time it. `f` should return something observable
+/// (its result is black-boxed) so the optimizer cannot delete the work.
+pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    // Warmup: run until ~50 ms spent or 3 iterations, whichever is later.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0;
+    while warm_iters < 3 || warm_start.elapsed() < Duration::from_millis(50) {
+        black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1000 {
+            break;
+        }
+    }
+    // Choose iteration count targeting ~0.4 s of measurement, capped.
+    let per = warm_start.elapsed() / warm_iters as u32;
+    let iters = ((Duration::from_millis(400).as_nanos() / per.as_nanos().max(1)) as usize)
+        .clamp(5, 200);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult { name: name.to_string(), min, median, mean, iters }
+}
+
+/// Print one result row in a fixed-width table format.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<48} {:>12.4} ms (min {:>10.4}, mean {:>10.4}, n={})",
+        r.name,
+        r.median.as_secs_f64() * 1e3,
+        r.min.as_secs_f64() * 1e3,
+        r.mean.as_secs_f64() * 1e3,
+        r.iters
+    );
+}
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.min > Duration::ZERO);
+        assert!(r.median >= r.min);
+        assert!(r.iters >= 5);
+        assert!(r.median_ms() > 0.0);
+    }
+
+    #[test]
+    fn faster_work_is_faster() {
+        let small = bench("small", || {
+            let mut s = 0u64;
+            for i in 0..1_000 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        let big = bench("big", || {
+            let mut s = 0u64;
+            for i in 0..400_000 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(big.median > small.median);
+    }
+}

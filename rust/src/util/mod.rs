@@ -1,0 +1,14 @@
+//! In-tree substitutes for unavailable third-party crates (this build
+//! environment only vendors the `xla` closure — see DESIGN.md §2):
+//!
+//! * [`rng`] — splitmix/xoshiro PRNG + normal sampling (vs `rand`).
+//! * [`json`] — minimal JSON value model, writer, and parser (vs `serde`),
+//!   enough for the artifact manifest and the wire protocol.
+//! * [`bench`] — timing harness used by the `cargo bench` targets
+//!   (vs `criterion`): warmup, repeated timed runs, median/mean report.
+//! * [`testing`] — seeded random-input property-test loop (vs `proptest`).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod testing;

@@ -1,0 +1,67 @@
+//! Seeded property-testing helper (proptest is not vendored here).
+//!
+//! `for_all_seeds(n, |rng| { ... })` runs a property across `n`
+//! independently seeded RNGs and reports the failing seed on panic, so a
+//! failure reproduces with `check_seed(seed, prop)`.
+
+use super::rng::Rng;
+
+/// Run `prop` for seeds `0..cases`. On panic, re-raises with the seed in
+/// the message so the case can be replayed.
+pub fn for_all_seeds<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed for seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (for debugging a reported failure).
+pub fn check_seed<F: Fn(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::seed_from_u64(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        for_all_seeds(20, |rng| {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            for_all_seeds(5, |rng| {
+                // Fails for every seed.
+                assert!(rng.f64() > 2.0);
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("seed 0"), "{msg}");
+    }
+
+    #[test]
+    fn check_seed_replays() {
+        check_seed(3, |rng| {
+            let _ = rng.next_u64();
+        });
+    }
+}

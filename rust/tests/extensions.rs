@@ -1,0 +1,213 @@
+//! §6/§7 extensions as integration tests: binning consistency, weighted
+//! OLS, logistic equivalence, t-test equivalence, SGD complementarity.
+
+use yoco::compress::binning::Binner;
+use yoco::compress::{SuffStatsCompressor, WeightedSuffStatsCompressor};
+use yoco::data::gen::generate_high_cardinality;
+use yoco::estimator::{
+    fit_logistic, fit_logistic_suffstats, fit_ols, fit_sgd_compressed,
+    fit_weighted_suffstats, fit_wls_suffstats, ttest, CovarianceKind, LogisticOptions,
+    SgdOptions, WeightKind,
+};
+use yoco::linalg::Matrix;
+
+/// §6 — binning X keeps the treatment-effect estimator consistent: the
+/// binned model's treatment coefficient must be close to the true effect
+/// (0.7 in the generator) even though the covariate surface is coarsened,
+/// while compression improves by orders of magnitude.
+#[test]
+fn binning_preserves_treatment_effect_and_restores_compression() {
+    let n = 40_000;
+    let batch = generate_high_cardinality(n, 2, 17);
+    let f_idx = batch.schema().feature_indices();
+    let y = batch.column_by_name("y0").unwrap();
+    let binners: Vec<Binner> = (0..2)
+        .map(|c| Binner::fit_quantiles(batch.column_by_name(&format!("x{c}")).unwrap(), 10))
+        .collect();
+
+    // Binned design: const, treat, then decile dummies per covariate.
+    let p = 2 + 2 * 9;
+    let mut c = SuffStatsCompressor::new(p, 1);
+    let mut feats = vec![0.0; f_idx.len()];
+    let mut row = vec![0.0; p];
+    for i in 0..n {
+        batch.read_features(i, &f_idx, &mut feats);
+        row.iter_mut().for_each(|v| *v = 0.0);
+        row[0] = 1.0;
+        row[1] = feats[1];
+        for (k, binner) in binners.iter().enumerate() {
+            let b = binner.bin(feats[2 + k]);
+            if b > 0 {
+                row[2 + k * 9 + (b - 1)] = 1.0;
+            }
+        }
+        c.push(&row, &[y[i]]);
+    }
+    let d = c.finish();
+    assert!(
+        d.compression_ratio() > 10.0,
+        "binning must restore compression, got {:.1}",
+        d.compression_ratio()
+    );
+    let fit = fit_wls_suffstats(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+    // True effect is 0.7; binned estimator stays consistent.
+    assert!(
+        (fit.beta[1] - 0.7).abs() < 3.0 * fit.se()[1] + 0.02,
+        "effect {} (se {})",
+        fit.beta[1],
+        fit.se()[1]
+    );
+}
+
+/// §7.2 — weighted compression end to end with both dof conventions.
+#[test]
+fn weighted_ols_frequency_equivalence() {
+    let mut wc = WeightedSuffStatsCompressor::new(2, 1);
+    let mut raw_rows = Vec::new();
+    let mut raw_y = Vec::new();
+    for i in 0..500 {
+        let x = (i % 5) as f64;
+        let yv = 2.0 + 0.5 * x + (((i * 48271) % 100) as f64 / 100.0 - 0.5);
+        let w = 1 + i % 3;
+        wc.push(&[1.0, x], &[yv], w as f64);
+        for _ in 0..w {
+            raw_rows.push(vec![1.0, x]);
+            raw_y.push(yv);
+        }
+    }
+    let d = wc.finish();
+    let oracle = fit_ols(
+        &Matrix::from_rows(&raw_rows),
+        &raw_y,
+        CovarianceKind::Homoskedastic,
+        None,
+    )
+    .unwrap();
+    let fit = fit_weighted_suffstats(
+        &d,
+        0,
+        CovarianceKind::Homoskedastic,
+        WeightKind::Frequency,
+    )
+    .unwrap();
+    assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+}
+
+/// §7.2 — analytic weights: equivalent to OLS on √w-scaled rows (HC0).
+#[test]
+fn weighted_ols_analytic_equivalence() {
+    let mut wc = WeightedSuffStatsCompressor::new(2, 1);
+    let mut scaled_rows = Vec::new();
+    let mut scaled_y = Vec::new();
+    for i in 0..600 {
+        let x = (i % 4) as f64;
+        let yv = 1.0 - 0.3 * x + (((i * 69621) % 100) as f64 / 100.0 - 0.5);
+        let w = 0.25 + (i % 7) as f64 * 0.5;
+        wc.push(&[1.0, x], &[yv], w);
+        let s = w.sqrt();
+        scaled_rows.push(vec![s, s * x]);
+        scaled_y.push(s * yv);
+    }
+    let d = wc.finish();
+    let fit = fit_weighted_suffstats(
+        &d,
+        0,
+        CovarianceKind::Heteroskedastic,
+        WeightKind::Analytic,
+    )
+    .unwrap();
+    let oracle = fit_ols(
+        &Matrix::from_rows(&scaled_rows),
+        &scaled_y,
+        CovarianceKind::Heteroskedastic,
+        None,
+    )
+    .unwrap();
+    for (a, b) in fit.beta.iter().zip(&oracle.beta) {
+        assert!((a - b).abs() < 1e-9);
+    }
+    for (a, b) in fit.se().iter().zip(oracle.se()) {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+}
+
+/// §3.1 — the t-test from aggregates equals compressed OLS [1, treat].
+#[test]
+fn ttest_is_compressed_ols() {
+    let mut c = SuffStatsCompressor::new(2, 1);
+    let (mut s0, mut ss0, mut n0) = (0.0, 0.0, 0u64);
+    let (mut s1, mut ss1, mut n1) = (0.0, 0.0, 0u64);
+    for i in 0..900 {
+        let t = (i % 3 == 0) as u64 as f64; // unbalanced arms
+        let yv = 2.0 + 0.4 * t + (((i * 16807) % 100) as f64 / 100.0 - 0.5);
+        c.push(&[1.0, t], &[yv]);
+        if t == 0.0 {
+            s0 += yv;
+            ss0 += yv * yv;
+            n0 += 1;
+        } else {
+            s1 += yv;
+            ss1 += yv * yv;
+            n1 += 1;
+        }
+    }
+    let tt = ttest((s0, ss0, n0), (s1, ss1, n1)).unwrap();
+    let ols = fit_wls_suffstats(&c.finish(), 0, CovarianceKind::Homoskedastic).unwrap();
+    assert!((tt.effect - ols.beta[1]).abs() < 1e-10);
+    assert!((tt.se - ols.se()[1]).abs() < 1e-10);
+    assert!((tt.t - ols.t_stats()[1]).abs() < 1e-10);
+}
+
+/// §7.3 — logistic regression: compressed == uncompressed, and the
+/// LPM (linear probability model) on the same compression points the
+/// same direction.
+#[test]
+fn logistic_compressed_equals_raw_and_lpm_direction() {
+    let n = 4_000;
+    let mut c = SuffStatsCompressor::new(2, 1);
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = (i % 2) as f64;
+        let p = 1.0 / (1.0 + (-(-0.8 + 1.0 * t) as f64).exp());
+        let u = ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0;
+        let yv = f64::from(u < p);
+        c.push(&[1.0, t], &[yv]);
+        rows.push(vec![1.0, t]);
+        y.push(yv);
+    }
+    let d = c.finish();
+    assert_eq!(d.num_groups(), 2);
+    let comp = fit_logistic_suffstats(&d, 0, &LogisticOptions::default()).unwrap();
+    let raw =
+        fit_logistic(&Matrix::from_rows(&rows), &y, &LogisticOptions::default()).unwrap();
+    for (a, b) in comp.beta.iter().zip(&raw.beta) {
+        assert!((a - b).abs() < 1e-8);
+    }
+    let lpm = fit_wls_suffstats(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+    assert_eq!(comp.beta[1].signum(), lpm.beta[1].signum());
+    assert!(comp.beta[1] > 0.5, "log-odds ≈ 1.0, got {}", comp.beta[1]);
+}
+
+/// §3.2 — SGD runs on compressed records and converges to the WLS
+/// solution (complementarity of streaming and compression).
+#[test]
+fn sgd_on_compressed_records_converges() {
+    let mut c = SuffStatsCompressor::new(2, 1);
+    for i in 0..10_000 {
+        let x = (i % 8) as f64 / 7.0;
+        let yv = 1.0 + 2.0 * x + (((i * 31) % 100) as f64 / 100.0 - 0.5) * 0.2;
+        c.push(&[1.0, x], &[yv]);
+    }
+    let d = c.finish();
+    assert_eq!(d.num_groups(), 8);
+    let exact = fit_wls_suffstats(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+    let sgd = fit_sgd_compressed(
+        &d,
+        0,
+        &SgdOptions { epochs: 3000, lr: 0.1, decay: 1e-4, average: true },
+    )
+    .unwrap();
+    assert!((sgd[0] - exact.beta[0]).abs() < 0.05, "{sgd:?} vs {:?}", exact.beta);
+    assert!((sgd[1] - exact.beta[1]).abs() < 0.08);
+}

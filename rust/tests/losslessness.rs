@@ -1,0 +1,249 @@
+//! The paper's central claim, asserted as a test matrix: every
+//! sufficient-statistics strategy recovers β̂ AND V(β̂) identical to the
+//! uncompressed fit, across workload shapes, covariance structures, and
+//! outcome counts — while group-means (§3.4) provably does not.
+
+use yoco::compress::{
+    compress_batch, BetweenClusterCompressor, ClusterStaticCompressor,
+    GroupMeansCompressor, SuffStatsCompressor, WithinClusterCompressor,
+};
+use yoco::data::gen::{generate_panel, generate_xp, PanelConfig, XpConfig};
+use yoco::data::Batch;
+use yoco::estimator::{
+    fit_all_outcomes, fit_between_cluster, fit_cluster_static, fit_group_means, fit_ols,
+    fit_wls_suffstats, CovarianceKind,
+};
+use yoco::linalg::Matrix;
+
+const TOL: f64 = 1e-8;
+
+fn batch_to_matrix(batch: &Batch) -> (Matrix, Vec<Vec<f64>>) {
+    let f_idx = batch.schema().feature_indices();
+    let rows: Vec<Vec<f64>> = (0..batch.num_rows())
+        .map(|i| {
+            let mut r = vec![0.0; f_idx.len()];
+            batch.read_features(i, &f_idx, &mut r);
+            r
+        })
+        .collect();
+    let ys: Vec<Vec<f64>> = batch
+        .schema()
+        .outcome_indices()
+        .into_iter()
+        .map(|j| batch.column(j).to_vec())
+        .collect();
+    (Matrix::from_rows(&rows), ys)
+}
+
+#[test]
+fn hom_and_ehw_lossless_across_workload_shapes() {
+    for (n, covariates, levels, skew) in
+        [(2_000, 2, 3, 0.0), (5_000, 4, 4, 1.5), (1_000, 1, 8, 3.0)]
+    {
+        let (batch, _) = generate_xp(&XpConfig {
+            n,
+            covariates,
+            levels,
+            skew,
+            outcomes: 1,
+            ..Default::default()
+        });
+        let (m, ys) = batch_to_matrix(&batch);
+        let d = compress_batch(&batch);
+        assert!(d.num_groups() < n, "workload must actually compress");
+        for kind in [CovarianceKind::Homoskedastic, CovarianceKind::Heteroskedastic] {
+            let oracle = fit_ols(&m, &ys[0], kind, None).unwrap();
+            let fit = fit_wls_suffstats(&d, 0, kind).unwrap();
+            assert!(
+                fit.max_rel_diff(&oracle) < TOL,
+                "n={n} cov={covariates} kind={kind:?}: diff {}",
+                fit.max_rel_diff(&oracle)
+            );
+        }
+    }
+}
+
+#[test]
+fn yoco_multi_outcome_lossless() {
+    let (batch, _) =
+        generate_xp(&XpConfig { n: 3_000, outcomes: 3, ..Default::default() });
+    let (m, ys) = batch_to_matrix(&batch);
+    let d = compress_batch(&batch);
+    assert_eq!(d.num_outcomes(), 3);
+    let fits = fit_all_outcomes(&d, CovarianceKind::Heteroskedastic).unwrap();
+    for (k, fit) in fits.iter().enumerate() {
+        let oracle =
+            fit_ols(&m, &ys[k], CovarianceKind::Heteroskedastic, None).unwrap();
+        assert!(
+            fit.max_rel_diff(&oracle) < TOL,
+            "outcome {k}: {}",
+            fit.max_rel_diff(&oracle)
+        );
+    }
+}
+
+#[test]
+fn all_three_cluster_strategies_agree_with_oracle_balanced() {
+    let cfg = PanelConfig {
+        clusters: 100,
+        t: 6,
+        balanced: true,
+        static_covariates: 1,
+        levels: 2,
+        time_trend: true,
+        rho: 0.6,
+        seed: 3,
+    };
+    let batch = generate_panel(&cfg);
+    let (m, ys) = batch_to_matrix(&batch);
+    let labels = batch.column_by_name("user").unwrap();
+    let oracle =
+        fit_ols(&m, &ys[0], CovarianceKind::ClusterRobust, Some(labels)).unwrap();
+
+    // §5.3.1 — within-cluster (time trend means G = n here; still exact).
+    let mut wc = WithinClusterCompressor::new(m.cols(), 1);
+    for i in 0..m.rows() {
+        wc.push(m.row(i), &[ys[0][i]], labels[i]);
+    }
+    let f1 = fit_wls_suffstats(&wc.finish(), 0, CovarianceKind::ClusterRobust).unwrap();
+    assert!(f1.max_rel_diff(&oracle) < TOL, "within: {}", f1.max_rel_diff(&oracle));
+
+    // §5.3.2 — between-cluster.
+    let mut bc = BetweenClusterCompressor::new(m.cols());
+    let t = cfg.t;
+    for c in 0..cfg.clusters {
+        let rows: Vec<Vec<f64>> = (0..t).map(|d| m.row(c * t + d).to_vec()).collect();
+        let y: Vec<f64> = (0..t).map(|d| ys[0][c * t + d]).collect();
+        bc.push_cluster(&Matrix::from_rows(&rows), &y);
+    }
+    let bc = bc.finish();
+    assert!(bc.num_groups() < cfg.clusters, "static features should group clusters");
+    let f2 = fit_between_cluster(&bc).unwrap();
+    assert!(f2.max_rel_diff(&oracle) < TOL, "between: {}", f2.max_rel_diff(&oracle));
+
+    // §5.3.3 — K¹/K².
+    let mut ck = ClusterStaticCompressor::new(m.cols());
+    for i in 0..m.rows() {
+        ck.push(m.row(i), ys[0][i], labels[i]);
+    }
+    let ck = ck.finish();
+    assert_eq!(ck.num_clusters(), cfg.clusters);
+    let f3 = fit_cluster_static(&ck).unwrap();
+    assert!(f3.max_rel_diff(&oracle) < TOL, "static: {}", f3.max_rel_diff(&oracle));
+}
+
+#[test]
+fn cluster_strategies_agree_unbalanced() {
+    let cfg = PanelConfig {
+        clusters: 80,
+        t: 7,
+        balanced: false,
+        time_trend: true,
+        ..Default::default()
+    };
+    let batch = generate_panel(&cfg);
+    let (m, ys) = batch_to_matrix(&batch);
+    let labels = batch.column_by_name("user").unwrap();
+    let oracle =
+        fit_ols(&m, &ys[0], CovarianceKind::ClusterRobust, Some(labels)).unwrap();
+    let mut ck = ClusterStaticCompressor::new(m.cols());
+    for i in 0..m.rows() {
+        ck.push(m.row(i), ys[0][i], labels[i]);
+    }
+    let fit = fit_cluster_static(&ck.finish()).unwrap();
+    assert!(fit.max_rel_diff(&oracle) < TOL, "{}", fit.max_rel_diff(&oracle));
+}
+
+#[test]
+fn group_means_variance_is_lossy_but_beta_exact() {
+    // Table 2's (c) row: the contrast that motivates sufficient stats.
+    let (batch, _) = generate_xp(&XpConfig { n: 4_000, ..Default::default() });
+    let (m, ys) = batch_to_matrix(&batch);
+    let oracle = fit_ols(&m, &ys[0], CovarianceKind::Homoskedastic, None).unwrap();
+    let mut gm = GroupMeansCompressor::new(m.cols());
+    for i in 0..m.rows() {
+        gm.push(m.row(i), ys[0][i]);
+    }
+    let lossy = fit_group_means(&gm.finish()).unwrap();
+    for (a, b) in lossy.beta.iter().zip(&oracle.beta) {
+        assert!((a - b).abs() < 1e-9, "betas must still be exact");
+    }
+    let ratio = lossy.sigma2.unwrap() / oracle.sigma2.unwrap();
+    assert!(
+        ratio < 0.9,
+        "group-means σ̂² should be visibly biased, got ratio {ratio}"
+    );
+}
+
+#[test]
+fn interactive_refit_after_projection_is_lossless() {
+    // §4.1: drop a feature from the compressed data and refit — must
+    // equal the uncompressed fit of the smaller model.
+    let (batch, _) =
+        generate_xp(&XpConfig { n: 2_000, covariates: 2, ..Default::default() });
+    let (m, ys) = batch_to_matrix(&batch);
+    let d = compress_batch(&batch);
+    let keep = [0usize, 1]; // const + treat
+    let proj = d.project_features(&keep).unwrap();
+    let small_rows: Vec<Vec<f64>> =
+        (0..m.rows()).map(|i| vec![m.row(i)[0], m.row(i)[1]]).collect();
+    let m_small = Matrix::from_rows(&small_rows);
+    let oracle =
+        fit_ols(&m_small, &ys[0], CovarianceKind::Heteroskedastic, None).unwrap();
+    let fit = fit_wls_suffstats(&proj, 0, CovarianceKind::Heteroskedastic).unwrap();
+    assert!(fit.max_rel_diff(&oracle) < TOL, "{}", fit.max_rel_diff(&oracle));
+    assert!(proj.num_groups() < d.num_groups());
+}
+
+#[test]
+fn interaction_feature_added_on_compressed_data_is_lossless() {
+    // §4.1 "new features based on M̃ can be generated": treat×covariate.
+    let (batch, _) =
+        generate_xp(&XpConfig { n: 3_000, covariates: 1, levels: 3, ..Default::default() });
+    let (m, ys) = batch_to_matrix(&batch);
+    let d = compress_batch(&batch);
+    let with_int = d.add_feature(|row| row[1] * row[2]);
+    // Oracle with the same interaction materialized row-wise.
+    let rows: Vec<Vec<f64>> = (0..m.rows())
+        .map(|i| {
+            let mut r = m.row(i).to_vec();
+            r.push(r[1] * r[2]);
+            r
+        })
+        .collect();
+    let oracle = fit_ols(
+        &Matrix::from_rows(&rows),
+        &ys[0],
+        CovarianceKind::Homoskedastic,
+        None,
+    )
+    .unwrap();
+    let fit =
+        fit_wls_suffstats(&with_int, 0, CovarianceKind::Homoskedastic).unwrap();
+    assert!(fit.max_rel_diff(&oracle) < TOL, "{}", fit.max_rel_diff(&oracle));
+}
+
+#[test]
+fn shard_merge_order_does_not_change_estimates() {
+    // Associativity under arbitrary shard splits (the pipeline's
+    // correctness precondition).
+    let (batch, _) = generate_xp(&XpConfig { n: 2_400, ..Default::default() });
+    let (m, ys) = batch_to_matrix(&batch);
+    let reference = compress_batch(&batch);
+    let ref_fit =
+        fit_wls_suffstats(&reference, 0, CovarianceKind::Heteroskedastic).unwrap();
+    for shards in [2usize, 3, 7] {
+        let mut parts: Vec<SuffStatsCompressor> =
+            (0..shards).map(|_| SuffStatsCompressor::new(m.cols(), 2)).collect();
+        for i in 0..m.rows() {
+            parts[i % shards].push(m.row(i), &[ys[0][i], ys[1][i]]);
+        }
+        let mut merged = parts.pop().unwrap().finish();
+        for p in parts {
+            merged.merge(&p.finish()).unwrap();
+        }
+        let fit =
+            fit_wls_suffstats(&merged, 0, CovarianceKind::Heteroskedastic).unwrap();
+        assert!(fit.max_rel_diff(&ref_fit) < TOL, "shards={shards}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Property-based tests over randomized workloads (seeded in-tree
+//! harness — see `yoco::util::testing`). Each property runs across many
+//! independently seeded generators; failures report the seed.
+
+use yoco::compress::{compress_batch, SuffStatsCompressor, WithinClusterCompressor};
+use yoco::data::gen::{generate_xp, XpConfig};
+use yoco::estimator::{fit_ols, fit_wls_suffstats, CovarianceKind};
+use yoco::linalg::Matrix;
+use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
+use yoco::util::rng::Rng;
+use yoco::util::testing::for_all_seeds;
+
+/// Random small design with duplicated feature cells + heteroskedastic y.
+fn random_workload(rng: &mut Rng) -> (Matrix, Vec<f64>, Vec<f64>) {
+    let n = 200 + rng.below(600);
+    let cells_a = 2 + rng.below(4);
+    let cells_b = 2 + rng.below(2); // ≥2 levels so the column has variation
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let a = rng.below(cells_a) as f64;
+        let b = rng.below(cells_b) as f64;
+        let row = vec![1.0, a, b];
+        let noise = rng.normal() * (0.5 + 0.3 * a);
+        y.push(0.7 - 0.4 * a + 0.9 * b + noise);
+        rows.push(row);
+        labels.push((i % 20) as f64);
+    }
+    (Matrix::from_rows(&rows), y, labels)
+}
+
+#[test]
+fn prop_compression_is_lossless_hom_and_ehw() {
+    for_all_seeds(25, |rng| {
+        let (m, y, _) = random_workload(rng);
+        let mut c = SuffStatsCompressor::new(m.cols(), 1);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i]]);
+        }
+        let d = c.finish();
+        for kind in [CovarianceKind::Homoskedastic, CovarianceKind::Heteroskedastic] {
+            let oracle = fit_ols(&m, &y, kind, None).unwrap();
+            let fit = fit_wls_suffstats(&d, 0, kind).unwrap();
+            assert!(
+                fit.max_rel_diff(&oracle) < 1e-7,
+                "kind={kind:?} diff={}",
+                fit.max_rel_diff(&oracle)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_robust_lossless() {
+    for_all_seeds(20, |rng| {
+        let (m, y, labels) = random_workload(rng);
+        let oracle =
+            fit_ols(&m, &y, CovarianceKind::ClusterRobust, Some(&labels)).unwrap();
+        let mut c = WithinClusterCompressor::new(m.cols(), 1);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i]], labels[i]);
+        }
+        let fit =
+            fit_wls_suffstats(&c.finish(), 0, CovarianceKind::ClusterRobust).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-7, "{}", fit.max_rel_diff(&oracle));
+    });
+}
+
+#[test]
+fn prop_merge_is_associative_and_commutative() {
+    for_all_seeds(25, |rng| {
+        let (m, y, _) = random_workload(rng);
+        let n = m.rows();
+        // Three shards in two different association orders + a permuted
+        // feed order.
+        let mut shard = |lo: usize, hi: usize| {
+            let mut c = SuffStatsCompressor::new(m.cols(), 1);
+            for i in lo..hi {
+                c.push(m.row(i), &[y[i]]);
+            }
+            c.finish()
+        };
+        let (a, b, c3) = (shard(0, n / 3), shard(n / 3, 2 * n / 3), shard(2 * n / 3, n));
+        let mut left = a.clone();
+        left.merge(&b).unwrap();
+        left.merge(&c3).unwrap();
+        let mut right = c3.clone();
+        right.merge(&a).unwrap();
+        right.merge(&b).unwrap();
+        assert_eq!(left.total_n(), right.total_n());
+        assert_eq!(left.num_groups(), right.num_groups());
+        let f1 = fit_wls_suffstats(&left, 0, CovarianceKind::Heteroskedastic).unwrap();
+        let f2 = fit_wls_suffstats(&right, 0, CovarianceKind::Heteroskedastic).unwrap();
+        assert!(f1.max_rel_diff(&f2) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_group_invariants() {
+    // Structural invariants of the compressed form:
+    //   Σ ñ_g = n; ñ_g ≥ 1; ỹ''_g ≥ ỹ'_g²/ñ_g (Cauchy-Schwarz);
+    //   groups have distinct feature keys.
+    for_all_seeds(30, |rng| {
+        let (m, y, _) = random_workload(rng);
+        let mut c = SuffStatsCompressor::new(m.cols(), 1);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i]]);
+        }
+        let d = c.finish();
+        let total: f64 = d.counts().iter().sum();
+        assert_eq!(total as u64, d.total_n());
+        let mut seen = std::collections::HashSet::new();
+        for g in 0..d.num_groups() {
+            let ng = d.counts()[g];
+            assert!(ng >= 1.0);
+            let (s, ss) = (d.sum(g, 0), d.sumsq(g, 0));
+            assert!(
+                ss + 1e-9 >= s * s / ng,
+                "Cauchy-Schwarz violated: ss={ss} s={s} n={ng}"
+            );
+            let key: Vec<u64> = d.feature_row(g).iter().map(|v| v.to_bits()).collect();
+            assert!(seen.insert(key), "duplicate group key at {g}");
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_equals_direct_compression() {
+    for_all_seeds(10, |rng| {
+        let n = 1_000 + rng.below(3_000);
+        let (batch, _) = generate_xp(&XpConfig {
+            n,
+            covariates: 1 + rng.below(3),
+            levels: 2 + rng.below(4),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let direct = compress_batch(&batch);
+        let cfg = PipelineConfig {
+            workers: 1 + rng.below(4),
+            virtual_shards: 16,
+            queue_capacity: 1 + rng.below(3),
+            chunk_rows: 64 + rng.below(512),
+            rebalance_every: rng.below(16) as u64,
+        };
+        let pipe = Pipeline::new(cfg, PipelineMode::SuffStats);
+        let piped = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();
+        assert_eq!(piped.total_n(), direct.total_n());
+        assert_eq!(piped.num_groups(), direct.num_groups());
+        let f1 = fit_wls_suffstats(&piped, 0, CovarianceKind::Homoskedastic).unwrap();
+        let f2 = fit_wls_suffstats(&direct, 0, CovarianceKind::Homoskedastic).unwrap();
+        assert!(f1.max_rel_diff(&f2) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_projection_never_increases_groups() {
+    for_all_seeds(20, |rng| {
+        let (m, y, _) = random_workload(rng);
+        let mut c = SuffStatsCompressor::new(m.cols(), 1);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i]]);
+        }
+        let d = c.finish();
+        let keep: Vec<usize> = (0..m.cols()).filter(|_| rng.bool(0.7)).collect();
+        if keep.is_empty() {
+            return;
+        }
+        let proj = d.project_features(&keep).unwrap();
+        assert!(proj.num_groups() <= d.num_groups());
+        assert_eq!(proj.total_n(), d.total_n());
+    });
+}

@@ -1,0 +1,150 @@
+//! End-to-end runtime integration: AOT artifacts (JAX/Pallas → HLO text)
+//! executed on the PJRT CPU client must agree with the native Rust
+//! engine to fp tolerance for every covariance kind.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees it).
+
+use std::path::Path;
+
+use yoco::compress::{SuffStatsCompressor, WithinClusterCompressor};
+use yoco::estimator::{
+    fit_logistic_suffstats, fit_wls_suffstats, CovarianceKind, LogisticOptions,
+};
+use yoco::runtime::RuntimeEngine;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn noise(i: usize) -> f64 {
+    ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0 - 0.5
+}
+
+fn xp_compressed(n: usize, p_extra: usize) -> yoco::compress::CompressedData {
+    // const + treat + p_extra covariate dummies.
+    let p = 2 + p_extra;
+    let mut c = SuffStatsCompressor::new(p, 1);
+    let mut row = vec![0.0; p];
+    for i in 0..n {
+        row.iter_mut().for_each(|v| *v = 0.0);
+        row[0] = 1.0;
+        let t = (i % 2) as f64;
+        row[1] = t;
+        if p_extra > 0 {
+            // (i/2) cycles independently of treat = i%2, so the dummies
+            // never become collinear with the treatment column.
+            let lvl = (i / 2) % (p_extra + 1);
+            if lvl > 0 {
+                row[1 + lvl] = 1.0;
+            }
+        }
+        let y = 1.0 + 0.5 * t + 0.2 * row.iter().skip(2).sum::<f64>()
+            + noise(i) * (1.0 + t);
+        c.push(&row, &[y]);
+    }
+    c.finish()
+}
+
+#[test]
+fn hom_matches_native_engine() {
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("run `make artifacts`");
+    let d = xp_compressed(4000, 3);
+    let native = fit_wls_suffstats(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+    let hlo = engine.fit(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+    assert!(
+        hlo.max_rel_diff(&native) < 1e-8,
+        "hom diff {}",
+        hlo.max_rel_diff(&native)
+    );
+    assert!((hlo.sigma2.unwrap() - native.sigma2.unwrap()).abs() < 1e-8);
+    assert_eq!(hlo.n, native.n);
+}
+
+#[test]
+fn ehw_matches_native_engine() {
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("run `make artifacts`");
+    let d = xp_compressed(4000, 3);
+    let native = fit_wls_suffstats(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+    let hlo = engine.fit(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+    assert!(
+        hlo.max_rel_diff(&native) < 1e-8,
+        "ehw diff {}",
+        hlo.max_rel_diff(&native)
+    );
+}
+
+#[test]
+fn cluster_matches_native_engine() {
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("run `make artifacts`");
+    // Panel: 80 clusters × 6 rows, features duplicate within clusters.
+    let mut c = WithinClusterCompressor::new(2, 1);
+    for u in 0..80 {
+        let treat = (u % 2) as f64;
+        let ce = noise(u * 997) * 1.5;
+        for t in 0..6 {
+            let y = 1.0 + 0.7 * treat + ce + noise(u * 6 + t);
+            c.push(&[1.0, treat], &[y], u as f64);
+        }
+    }
+    let d = c.finish();
+    let native = fit_wls_suffstats(&d, 0, CovarianceKind::ClusterRobust).unwrap();
+    let hlo = engine.fit(&d, 0, CovarianceKind::ClusterRobust).unwrap();
+    assert!(
+        hlo.max_rel_diff(&native) < 1e-8,
+        "cluster diff {}",
+        hlo.max_rel_diff(&native)
+    );
+    assert_eq!(hlo.clusters, Some(80));
+}
+
+#[test]
+fn logistic_matches_native_engine() {
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("run `make artifacts`");
+    let mut c = SuffStatsCompressor::new(3, 1);
+    for i in 0..3000 {
+        let t = (i % 2) as f64;
+        let x = (i % 4) as f64 / 3.0;
+        let z = -0.4 + 1.1 * t + 0.6 * x;
+        let y = f64::from(noise(i) + 0.5 < 1.0 / (1.0 + (-z as f64).exp()));
+        c.push(&[1.0, t, x], &[y]);
+    }
+    let d = c.finish();
+    let native = fit_logistic_suffstats(&d, 0, &LogisticOptions::default()).unwrap();
+    let (beta, cov) = engine.fit_logistic(&d, 0).unwrap();
+    for (a, b) in beta.iter().zip(&native.beta) {
+        assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+    }
+    for (a, b) in cov.diagonal().iter().zip(native.cov.diagonal()) {
+        assert!((a - b).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("run `make artifacts`");
+    let d = xp_compressed(500, 1);
+    assert_eq!(engine.compiled_count(), 0);
+    engine.fit(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+    assert_eq!(engine.compiled_count(), 1);
+    engine.fit(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+    assert_eq!(engine.compiled_count(), 1, "second fit must reuse the executable");
+    engine.fit(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+    assert_eq!(engine.compiled_count(), 2);
+}
+
+#[test]
+fn bucket_padding_is_exact_across_sizes() {
+    // Same logical dataset at different paddings (via group counts that
+    // straddle bucket edges) must give identical estimates.
+    let engine = RuntimeEngine::load(&artifacts_dir()).expect("run `make artifacts`");
+    let small = xp_compressed(600, 2); // G = 2 × 3 cells -> g buckets 256
+    let native = fit_wls_suffstats(&small, 0, CovarianceKind::Homoskedastic).unwrap();
+    let hlo = engine.fit(&small, 0, CovarianceKind::Homoskedastic).unwrap();
+    assert!(hlo.max_rel_diff(&native) < 1e-9);
+    // Many more groups -> larger bucket, same math.
+    let big = xp_compressed(20_000, 7);
+    let native_b = fit_wls_suffstats(&big, 0, CovarianceKind::Homoskedastic).unwrap();
+    let hlo_b = engine.fit(&big, 0, CovarianceKind::Homoskedastic).unwrap();
+    assert!(hlo_b.max_rel_diff(&native_b) < 1e-8);
+}
