@@ -25,6 +25,7 @@ fn main() {
             queue_capacity: 4,
             chunk_rows: 8192,
             rebalance_every: 64,
+            retry: yoco::fault::RetryPolicy::default(),
         };
         let r = bench(&format!("workers={workers}"), || {
             let pipe = Pipeline::new(cfg.clone(), PipelineMode::SuffStats);
@@ -45,6 +46,7 @@ fn main() {
             queue_capacity: 4,
             chunk_rows: chunk,
             rebalance_every: 64,
+            retry: yoco::fault::RetryPolicy::default(),
         };
         let r = bench(&format!("chunk={chunk}"), || {
             let pipe = Pipeline::new(cfg.clone(), PipelineMode::SuffStats);
@@ -60,6 +62,7 @@ fn main() {
         queue_capacity: 1,
         chunk_rows: 1024,
         rebalance_every: 0,
+            retry: yoco::fault::RetryPolicy::default(),
     };
     let pipe = Pipeline::new(cfg, PipelineMode::SuffStats);
     let result = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();

@@ -173,6 +173,7 @@ mod tests {
             queue_capacity: 2,
             chunk_rows: 512,
             rebalance_every: 0,
+            retry: crate::fault::RetryPolicy::default(),
         })
     }
 

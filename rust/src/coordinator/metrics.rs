@@ -9,6 +9,8 @@ pub struct CoordinatorMetrics {
     errors: AtomicU64,
     native_fits: AtomicU64,
     pjrt_fits: AtomicU64,
+    runtime_retries: AtomicU64,
+    runtime_fallbacks: AtomicU64,
     total_us: AtomicU64,
 }
 
@@ -28,6 +30,16 @@ impl CoordinatorMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one retried engine dispatch (transient `Runtime` error).
+    pub fn add_runtime_retry(&self) {
+        self.runtime_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one PJRT→native fallback after repeated runtime errors.
+    pub fn add_runtime_fallback(&self) {
+        self.runtime_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot.
     pub fn snapshot(&self) -> CoordinatorMetricsSnapshot {
         let req = self.requests.load(Ordering::Relaxed);
@@ -37,6 +49,8 @@ impl CoordinatorMetrics {
             errors: self.errors.load(Ordering::Relaxed),
             native_fits: self.native_fits.load(Ordering::Relaxed),
             pjrt_fits: self.pjrt_fits.load(Ordering::Relaxed),
+            runtime_retries: self.runtime_retries.load(Ordering::Relaxed),
+            runtime_fallbacks: self.runtime_fallbacks.load(Ordering::Relaxed),
             mean_latency_us: if req > 0 { total as f64 / req as f64 } else { 0.0 },
         }
     }
@@ -53,6 +67,10 @@ pub struct CoordinatorMetricsSnapshot {
     pub native_fits: u64,
     /// Fits on the PJRT runtime.
     pub pjrt_fits: u64,
+    /// Engine dispatches retried after a transient runtime error.
+    pub runtime_retries: u64,
+    /// Requests that fell back from PJRT to the native engine.
+    pub runtime_fallbacks: u64,
     /// Mean service latency (µs).
     pub mean_latency_us: f64,
 }
@@ -67,11 +85,16 @@ mod tests {
         m.record("native", 100);
         m.record("pjrt", 300);
         m.record_error();
+        m.add_runtime_retry();
+        m.add_runtime_retry();
+        m.add_runtime_fallback();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.errors, 1);
         assert_eq!(s.native_fits, 1);
         assert_eq!(s.pjrt_fits, 1);
+        assert_eq!(s.runtime_retries, 2);
+        assert_eq!(s.runtime_fallbacks, 1);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
     }
 }

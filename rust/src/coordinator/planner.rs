@@ -114,8 +114,8 @@ pub fn plan(
         EnginePref::Native => PlannedEngine::Native,
         EnginePref::Pjrt => {
             if !runtime_available {
-                return Err(YocoError::Runtime(
-                    "PJRT engine requested but no artifacts loaded".into(),
+                return Err(YocoError::runtime(
+                    "PJRT engine requested but no artifacts loaded",
                 ));
             }
             PlannedEngine::Pjrt

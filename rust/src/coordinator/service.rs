@@ -1,13 +1,24 @@
 //! The coordinator service: validate → plan → (cached) compress →
 //! dispatch → respond.
+//!
+//! Engine dispatch is resilient: transient [`YocoError::Runtime`] /
+//! [`YocoError::Timeout`] failures are retried under the coordinator's
+//! [`RetryPolicy`], and a PJRT dispatch whose retries are exhausted
+//! falls back to the native estimator (recorded in
+//! [`CoordinatorMetricsSnapshot::runtime_fallbacks`]) unless the
+//! request *forced* the PJRT engine, in which case the runtime's own
+//! error surfaces.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::{Result, YocoError};
 use crate::estimator::{
     fit_logistic_suffstats, fit_wls_suffstats, CovarianceKind, LogisticOptions,
 };
+use crate::fault::{self, FaultInjector, InjectionPoint, RetryPolicy};
 use crate::pipeline::PipelineConfig;
 use crate::runtime::RuntimeHandle;
 
@@ -21,6 +32,10 @@ pub struct Coordinator {
     store: YocoStore,
     runtime: Option<RuntimeHandle>,
     metrics: CoordinatorMetrics,
+    retry: RetryPolicy,
+    fault: Option<Arc<FaultInjector>>,
+    /// Monotonic engine-dispatch counter; keys deterministic fault draws.
+    dispatches: AtomicU64,
 }
 
 impl Coordinator {
@@ -30,6 +45,9 @@ impl Coordinator {
             store: YocoStore::new(pipeline_cfg),
             runtime: None,
             metrics: CoordinatorMetrics::default(),
+            retry: RetryPolicy::default(),
+            fault: None,
+            dispatches: AtomicU64::new(0),
         }
     }
 
@@ -49,6 +67,62 @@ impl Coordinator {
             store: YocoStore::new(pipeline_cfg),
             runtime,
             metrics: CoordinatorMetrics::default(),
+            retry: RetryPolicy::default(),
+            fault: None,
+            dispatches: AtomicU64::new(0),
+        }
+    }
+
+    /// Override the engine retry policy (builder style).
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Attach a fault injector (chaos testing; a no-op outside
+    /// `--features fault-injection` builds).
+    pub fn with_fault_injector(mut self, injector: Arc<FaultInjector>) -> Self {
+        self.fault = Some(injector);
+        self
+    }
+
+    /// Run one engine dispatch with retry-with-backoff on transient
+    /// errors. An injected `EngineError` fault replaces the call with a
+    /// synthetic `Runtime` error, exercising the same recovery path the
+    /// real runtime would on a flaky PJRT client.
+    fn call_engine_resilient<T>(
+        &self,
+        what: &str,
+        mut call: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let seq = self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let mut attempt: u32 = 0;
+        loop {
+            let key = (seq << 8) | u64::from(attempt & 0xff);
+            let result = if fault::fire_keyed(&self.fault, InjectionPoint::EngineError, key) {
+                Err(YocoError::runtime(format!("injected engine error ({what})")))
+            } else {
+                call()
+            };
+            match result {
+                Ok(v) => return Ok(v),
+                Err(e) if e.is_retryable() && attempt < self.retry.max_retries => {
+                    attempt += 1;
+                    self.metrics.add_runtime_retry();
+                    std::thread::sleep(self.retry.backoff(attempt));
+                }
+                Err(e) => {
+                    return Err(if attempt > 0 {
+                        YocoError::pipeline_exhausted(
+                            format!("engine dispatch '{what}' failed"),
+                            attempt,
+                            Some(e),
+                        )
+                    } else {
+                        e
+                    });
+                }
+            }
         }
     }
 
@@ -99,21 +173,35 @@ impl Coordinator {
         // Engine dispatch. Auto falls back to native when the *actual* G
         // misses every bucket; a forced Pjrt preference is honored so the
         // runtime's own error surfaces instead of being masked.
+        let forced_pjrt = req.engine == super::planner::EnginePref::Pjrt;
         let use_pjrt = plan.engine == PlannedEngine::Pjrt
-            && (req.engine == super::planner::EnginePref::Pjrt
+            && (forced_pjrt
                 || crate::runtime::pick_bucket(data.num_groups(), data.num_features())
                     .is_some());
+        // A PJRT dispatch that exhausts its retries on transient errors
+        // degrades to the native estimator — unless the client forced
+        // the engine, in which case masking the failure would lie about
+        // which engine produced the numbers.
+        let fall_back = |e: &YocoError| !forced_pjrt && (e.is_retryable() || e.retries() > 0);
 
         let (fit_beta, fit_se, fit_t, sigma2, n, records, clusters, engine_used) =
             match req.estimator {
                 EstimatorKind::Wls => {
-                    let fit = if use_pjrt {
-                        self.runtime
-                            .as_ref()
-                            .expect("planner guarantees runtime")
-                            .fit(&data, outcome_idx, req.covariance)?
+                    let native = || fit_wls_suffstats(&data, outcome_idx, req.covariance);
+                    let (fit, engine_used) = if use_pjrt {
+                        let rt = self.runtime.as_ref().expect("planner guarantees runtime");
+                        match self.call_engine_resilient("pjrt wls", || {
+                            rt.fit(&data, outcome_idx, req.covariance)
+                        }) {
+                            Ok(fit) => (fit, "pjrt"),
+                            Err(e) if fall_back(&e) => {
+                                self.metrics.add_runtime_fallback();
+                                (self.call_engine_resilient("native wls", native)?, "native")
+                            }
+                            Err(e) => return Err(e),
+                        }
                     } else {
-                        fit_wls_suffstats(&data, outcome_idx, req.covariance)?
+                        (self.call_engine_resilient("native wls", native)?, "native")
                     };
                     (
                         fit.beta.clone(),
@@ -123,46 +211,64 @@ impl Coordinator {
                         fit.n,
                         fit.records_used,
                         fit.clusters,
-                        if use_pjrt { "pjrt" } else { "native" },
+                        engine_used,
                     )
                 }
                 EstimatorKind::Logistic => {
-                    if use_pjrt {
+                    let pjrt_out = if use_pjrt {
                         let rt = self.runtime.as_ref().expect("planner guarantees runtime");
-                        let (beta, cov) = rt.fit_logistic(&data, outcome_idx)?;
-                        let se: Vec<f64> =
-                            cov.diagonal().iter().map(|v| v.max(0.0).sqrt()).collect();
-                        let t: Vec<f64> =
-                            beta.iter().zip(&se).map(|(b, s)| b / s).collect();
-                        (
-                            beta,
-                            se,
-                            t,
-                            None,
-                            data.total_n(),
-                            data.num_groups(),
-                            None,
-                            "pjrt",
-                        )
+                        match self.call_engine_resilient("pjrt logistic", || {
+                            rt.fit_logistic(&data, outcome_idx)
+                        }) {
+                            Ok(out) => Some(out),
+                            Err(e) if fall_back(&e) => {
+                                self.metrics.add_runtime_fallback();
+                                None
+                            }
+                            Err(e) => return Err(e),
+                        }
                     } else {
-                        let fit = fit_logistic_suffstats(
-                            &data,
-                            outcome_idx,
-                            &LogisticOptions::default(),
-                        )?;
-                        let se = fit.se();
-                        let t: Vec<f64> =
-                            fit.beta.iter().zip(&se).map(|(b, s)| b / s).collect();
-                        (
-                            fit.beta,
-                            se,
-                            t,
-                            None,
-                            fit.n,
-                            fit.records_used,
-                            None,
-                            "native",
-                        )
+                        None
+                    };
+                    match pjrt_out {
+                        Some((beta, cov)) => {
+                            let se: Vec<f64> =
+                                cov.diagonal().iter().map(|v| v.max(0.0).sqrt()).collect();
+                            let t: Vec<f64> =
+                                beta.iter().zip(&se).map(|(b, s)| b / s).collect();
+                            (
+                                beta,
+                                se,
+                                t,
+                                None,
+                                data.total_n(),
+                                data.num_groups(),
+                                None,
+                                "pjrt",
+                            )
+                        }
+                        None => {
+                            let fit = self.call_engine_resilient("native logistic", || {
+                                fit_logistic_suffstats(
+                                    &data,
+                                    outcome_idx,
+                                    &LogisticOptions::default(),
+                                )
+                            })?;
+                            let se = fit.se();
+                            let t: Vec<f64> =
+                                fit.beta.iter().zip(&se).map(|(b, s)| b / s).collect();
+                            (
+                                fit.beta,
+                                se,
+                                t,
+                                None,
+                                fit.n,
+                                fit.records_used,
+                                None,
+                                "native",
+                            )
+                        }
                     }
                 }
             };
@@ -205,6 +311,7 @@ mod tests {
             queue_capacity: 2,
             chunk_rows: 512,
             rebalance_every: 0,
+            retry: crate::fault::RetryPolicy::default(),
         })
     }
 
@@ -278,6 +385,44 @@ mod tests {
         c.store().register("xp", batch);
         let req = AnalysisRequest::wls("xp", "y0").with_engine(EnginePref::Pjrt);
         assert!(c.analyze(&req).is_err());
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn injected_engine_errors_retry_then_recover() {
+        use crate::fault::{FaultPlan, InjectionPoint};
+        // Two injected failures, then the dispatch goes through. The
+        // request must succeed with retries recorded, not error out.
+        let c = coordinator().with_fault_injector(
+            FaultPlan::new(11)
+                .with(InjectionPoint::EngineError, 1.0)
+                .with_limit(InjectionPoint::EngineError, 2)
+                .build(),
+        );
+        let (batch, _) = generate_xp(&XpConfig { n: 1000, ..Default::default() });
+        c.store().register("xp", batch);
+        let resp = c.analyze(&AnalysisRequest::wls("xp", "y0")).unwrap();
+        assert_eq!(resp.engine_used, "native");
+        let m = c.metrics();
+        assert_eq!(m.runtime_retries, 2);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn unrelenting_engine_errors_surface_with_retry_count() {
+        use crate::fault::{FaultPlan, InjectionPoint};
+        let c = coordinator()
+            .with_retry_policy(RetryPolicy { max_retries: 3, ..RetryPolicy::default() })
+            .with_fault_injector(
+                FaultPlan::new(12).with(InjectionPoint::EngineError, 1.0).build(),
+            );
+        let (batch, _) = generate_xp(&XpConfig { n: 500, ..Default::default() });
+        c.store().register("xp", batch);
+        let err = c.analyze(&AnalysisRequest::wls("xp", "y0")).unwrap_err();
+        assert_eq!(err.retries(), 3);
+        assert!(std::error::Error::source(&err).is_some(), "cause must chain");
+        assert_eq!(c.metrics().errors, 1);
     }
 
     #[test]

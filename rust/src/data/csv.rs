@@ -22,10 +22,10 @@ pub fn read_csv_from<R: Read>(reader: R, roles: &[ColumnRole]) -> Result<Batch> 
     let mut lines = BufReader::new(reader).lines();
     let header = lines
         .next()
-        .ok_or_else(|| YocoError::Parse("empty csv".into()))??;
+        .ok_or_else(|| YocoError::parse("empty csv"))??;
     let names: Vec<&str> = header.split(',').map(str::trim).collect();
     if names.len() != roles.len() {
-        return Err(YocoError::Parse(format!(
+        return Err(YocoError::parse(format!(
             "csv has {} columns but {} roles supplied",
             names.len(),
             roles.len()
@@ -45,15 +45,15 @@ pub fn read_csv_from<R: Read>(reader: R, roles: &[ColumnRole]) -> Result<Batch> 
         let mut count = 0;
         for (k, field) in line.split(',').enumerate() {
             if k >= ncols {
-                return Err(YocoError::Parse(format!("line {}: too many fields", lineno + 2)));
+                return Err(YocoError::parse(format!("line {}: too many fields", lineno + 2)));
             }
             row[k] = field.trim().parse::<f64>().map_err(|e| {
-                YocoError::Parse(format!("line {}: field {k}: {e}", lineno + 2))
+                YocoError::parse(format!("line {}: field {k}: {e}", lineno + 2))
             })?;
             count += 1;
         }
         if count != ncols {
-            return Err(YocoError::Parse(format!(
+            return Err(YocoError::parse(format!(
                 "line {}: expected {ncols} fields, got {count}",
                 lineno + 2
             )));

@@ -1,4 +1,16 @@
 //! Error types shared across the YOCO library.
+//!
+//! The resilience layers (pipeline supervision, runtime retry, server
+//! deadlines) lean on two properties of [`YocoError`]:
+//!
+//! * **Source chaining** — `Runtime`, `Parse`, and `Pipeline` carry an
+//!   optional boxed cause, so a "native fallback failed" error can still
+//!   expose the runtime error that triggered the fallback through
+//!   [`std::error::Error::source`].
+//! * **Structured retry/deadline data** — `Pipeline` carries the retry
+//!   count at which a shard was declared exhausted, and `Timeout`
+//!   carries what timed out and after how long, so callers can make
+//!   policy decisions without parsing message strings.
 
 use std::fmt;
 
@@ -37,13 +49,38 @@ pub enum YocoError {
         delta: f64,
     },
     /// PJRT runtime failure (artifact load, compile, or execute).
-    Runtime(String),
+    Runtime {
+        /// What failed.
+        msg: String,
+        /// The error that caused this one, if any.
+        source: Option<Box<YocoError>>,
+    },
     /// Underlying I/O failure.
     Io(std::io::Error),
     /// Malformed input data (CSV parse, manifest parse, wire protocol).
-    Parse(String),
-    /// The streaming pipeline was shut down or a worker panicked.
-    Pipeline(String),
+    Parse {
+        /// What failed to parse.
+        msg: String,
+        /// The error that caused this one, if any.
+        source: Option<Box<YocoError>>,
+    },
+    /// The streaming pipeline was shut down, a worker panicked, or a
+    /// shard exhausted its retry budget.
+    Pipeline {
+        /// What failed.
+        msg: String,
+        /// Retries performed before giving up (0 when not a retry failure).
+        retries: u32,
+        /// The error that caused this one, if any.
+        source: Option<Box<YocoError>>,
+    },
+    /// A deadline elapsed (socket read/write, drain, lane reply, ...).
+    Timeout {
+        /// What was being waited on.
+        what: String,
+        /// How long we waited, in milliseconds.
+        after_ms: u64,
+    },
 }
 
 impl fmt::Display for YocoError {
@@ -58,10 +95,19 @@ impl fmt::Display for YocoError {
             YocoError::NoConvergence { iters, delta } => {
                 write!(f, "solver did not converge after {iters} iterations (delta={delta:.3e})")
             }
-            YocoError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            YocoError::Runtime { msg, .. } => write!(f, "runtime error: {msg}"),
             YocoError::Io(e) => write!(f, "io error: {e}"),
-            YocoError::Parse(msg) => write!(f, "parse error: {msg}"),
-            YocoError::Pipeline(msg) => write!(f, "pipeline error: {msg}"),
+            YocoError::Parse { msg, .. } => write!(f, "parse error: {msg}"),
+            YocoError::Pipeline { msg, retries, .. } => {
+                if *retries > 0 {
+                    write!(f, "pipeline error: {msg} (after {retries} retries)")
+                } else {
+                    write!(f, "pipeline error: {msg}")
+                }
+            }
+            YocoError::Timeout { what, after_ms } => {
+                write!(f, "timeout: {what} did not complete within {after_ms} ms")
+            }
         }
     }
 }
@@ -70,6 +116,11 @@ impl std::error::Error for YocoError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             YocoError::Io(e) => Some(e),
+            YocoError::Runtime { source, .. }
+            | YocoError::Parse { source, .. }
+            | YocoError::Pipeline { source, .. } => {
+                source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+            }
             _ => None,
         }
     }
@@ -91,11 +142,67 @@ impl YocoError {
     pub fn invalid(reason: impl Into<String>) -> Self {
         YocoError::InvalidRequest { reason: reason.into() }
     }
+
+    /// Runtime error with no cause.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        YocoError::Runtime { msg: msg.into(), source: None }
+    }
+
+    /// Parse error with no cause.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        YocoError::Parse { msg: msg.into(), source: None }
+    }
+
+    /// Pipeline error with no cause and no retries.
+    pub fn pipeline(msg: impl Into<String>) -> Self {
+        YocoError::Pipeline { msg: msg.into(), retries: 0, source: None }
+    }
+
+    /// Pipeline error for a shard that exhausted its retry budget.
+    pub fn pipeline_exhausted(
+        msg: impl Into<String>,
+        retries: u32,
+        source: Option<YocoError>,
+    ) -> Self {
+        YocoError::Pipeline { msg: msg.into(), retries, source: source.map(Box::new) }
+    }
+
+    /// Timeout error.
+    pub fn timeout(what: impl Into<String>, after_ms: u64) -> Self {
+        YocoError::Timeout { what: what.into(), after_ms }
+    }
+
+    /// Attach a causal error to variants that support chaining
+    /// (`Runtime`, `Parse`, `Pipeline`); a no-op for the rest.
+    pub fn with_source(mut self, cause: YocoError) -> Self {
+        match &mut self {
+            YocoError::Runtime { source, .. }
+            | YocoError::Parse { source, .. }
+            | YocoError::Pipeline { source, .. } => *source = Some(Box::new(cause)),
+            _ => {}
+        }
+        self
+    }
+
+    /// Retry count carried by a `Pipeline` error (0 for other variants).
+    pub fn retries(&self) -> u32 {
+        match self {
+            YocoError::Pipeline { retries, .. } => *retries,
+            _ => 0,
+        }
+    }
+
+    /// True for errors that a retry-with-backoff policy may retry:
+    /// transient runtime/engine failures and deadline expiries.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, YocoError::Runtime { .. } | YocoError::Timeout { .. } | YocoError::Io(_))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::error::Error;
 
     #[test]
     fn display_messages_are_informative() {
@@ -105,6 +212,8 @@ mod tests {
         assert!(e.to_string().contains("4 cols"));
         let e = YocoError::NoConvergence { iters: 25, delta: 1e-3 };
         assert!(e.to_string().contains("25 iterations"));
+        let e = YocoError::timeout("connection drain", 250);
+        assert!(e.to_string().contains("250 ms"), "{e}");
     }
 
     #[test]
@@ -112,6 +221,47 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: YocoError = io.into();
         assert!(matches!(e, YocoError::Io(_)));
-        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn runtime_parse_pipeline_chain_sources() {
+        let root = YocoError::timeout("pjrt lane reply", 100);
+        let mid = YocoError::runtime("engine call failed").with_source(root);
+        let top = YocoError::pipeline_exhausted("shard 3 gave up", 3, Some(mid));
+        assert_eq!(top.retries(), 3);
+        let mid_ref = top.source().expect("pipeline chains");
+        assert!(mid_ref.to_string().contains("engine call failed"));
+        let root_ref = mid_ref.source().expect("runtime chains");
+        assert!(root_ref.to_string().contains("pjrt lane reply"));
+        assert!(root_ref.source().is_none());
+    }
+
+    #[test]
+    fn parse_chains_too() {
+        let e = YocoError::parse("bad manifest").with_source(YocoError::parse("bad json"));
+        assert!(e.source().unwrap().to_string().contains("bad json"));
+    }
+
+    #[test]
+    fn with_source_is_noop_on_unchainable_variants() {
+        let e = YocoError::Singular { pivot: 1 }.with_source(YocoError::parse("x"));
+        assert!(e.source().is_none());
+    }
+
+    #[test]
+    fn retryability() {
+        assert!(YocoError::runtime("flaky").is_retryable());
+        assert!(YocoError::timeout("x", 1).is_retryable());
+        assert!(!YocoError::invalid("nope").is_retryable());
+        assert!(!YocoError::Singular { pivot: 0 }.is_retryable());
+    }
+
+    #[test]
+    fn pipeline_display_includes_retry_count() {
+        let e = YocoError::pipeline_exhausted("chunk 7 kept panicking", 3, None);
+        assert!(e.to_string().contains("after 3 retries"), "{e}");
+        let e = YocoError::pipeline("queue closed early");
+        assert!(!e.to_string().contains("retries"), "{e}");
     }
 }

@@ -1,0 +1,487 @@
+//! Fault injection and resilience policy — the chaos-engineering
+//! substrate for the pipeline, coordinator, and server layers.
+//!
+//! # Injection-point taxonomy
+//!
+//! Five faults cover the failure modes the system is supervised
+//! against; each maps to a concrete call site:
+//!
+//! | Point           | Fires where                        | Simulates                       |
+//! |-----------------|------------------------------------|---------------------------------|
+//! | `WorkerPanic`   | pipeline worker, at a chunk boundary | a worker thread panicking     |
+//! | `ChunkDrop`     | pipeline feeder, before enqueue    | a chunk lost in transit         |
+//! | `SlowWorker`    | pipeline worker / server handler   | a straggler (injected sleep)    |
+//! | `EngineError`   | coordinator → runtime dispatch     | a flaky PJRT engine             |
+//! | `IoError`       | server connection read path        | a connection dying mid-request  |
+//!
+//! `WorkerPanic` fires **before** any row of the chunk is folded, so a
+//! retried chunk is lossless by construction: the supervised pipeline
+//! with injected panics produces bit-for-bit the same compressed
+//! dataset as a fault-free run (asserted in `tests/chaos.rs`).
+//!
+//! # Determinism guarantees
+//!
+//! All randomness flows from the plan's seed through
+//! [`util::rng`](crate::util::rng):
+//!
+//! * **Keyed draws** ([`FaultInjector::should_fire_keyed`]) are pure
+//!   functions of `(seed, point, key)` — typically `key` encodes a
+//!   chunk id and attempt number. They are *independent of thread
+//!   scheduling*: the same plan over the same workload makes the same
+//!   decisions no matter how workers interleave. All concurrent
+//!   injection sites use keyed draws.
+//! * **Sequential draws** ([`FaultInjector::should_fire`]) consume a
+//!   per-point xoshiro stream behind a mutex: deterministic in the
+//!   *sequence of calls to that point*, used for single-threaded sites.
+//!
+//! Per-point fire limits ([`FaultPlan::with_limit`]) cap the blast
+//! radius; counters ([`FaultInjector::fired`]) let tests assert faults
+//! actually happened.
+//!
+//! # Zero cost when disabled
+//!
+//! Without the `fault-injection` cargo feature every `should_fire*`
+//! call is an inlined `false` — no RNG draw, no atomic, no branch on
+//! plan state — so production builds pay nothing for the hooks.
+//! [`RetryPolicy`] (supervision, not injection) is always compiled.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+#[cfg(feature = "fault-injection")]
+use std::sync::atomic::{AtomicU64, Ordering};
+#[cfg(feature = "fault-injection")]
+use std::sync::Mutex;
+
+#[cfg(feature = "fault-injection")]
+use crate::util::rng::Rng;
+
+/// Number of distinct injection points.
+pub const NUM_POINTS: usize = 5;
+
+/// Where a fault can be injected. See the module docs for the taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InjectionPoint {
+    /// Pipeline worker panics at a chunk boundary (before folding).
+    WorkerPanic,
+    /// Pipeline feeder "loses" a chunk before enqueueing it.
+    ChunkDrop,
+    /// A worker / handler sleeps for the plan's `slow_ms` first.
+    SlowWorker,
+    /// The runtime engine returns a transient `Runtime` error.
+    EngineError,
+    /// A server connection read fails mid-request.
+    IoError,
+}
+
+impl InjectionPoint {
+    /// All points, in index order.
+    pub const ALL: [InjectionPoint; NUM_POINTS] = [
+        InjectionPoint::WorkerPanic,
+        InjectionPoint::ChunkDrop,
+        InjectionPoint::SlowWorker,
+        InjectionPoint::EngineError,
+        InjectionPoint::IoError,
+    ];
+
+    /// Dense index for table lookups.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            InjectionPoint::WorkerPanic => 0,
+            InjectionPoint::ChunkDrop => 1,
+            InjectionPoint::SlowWorker => 2,
+            InjectionPoint::EngineError => 3,
+            InjectionPoint::IoError => 4,
+        }
+    }
+
+    /// Stable snake_case name (used in logs and metrics).
+    pub fn name(self) -> &'static str {
+        match self {
+            InjectionPoint::WorkerPanic => "worker_panic",
+            InjectionPoint::ChunkDrop => "chunk_drop",
+            InjectionPoint::SlowWorker => "slow_worker",
+            InjectionPoint::EngineError => "engine_error",
+            InjectionPoint::IoError => "io_error",
+        }
+    }
+}
+
+/// A deterministic fault schedule: per-point probabilities and limits,
+/// all derived from one seed. Build one with the fluent API and freeze
+/// it into a [`FaultInjector`]:
+///
+/// ```
+/// use yoco::fault::{FaultPlan, InjectionPoint};
+/// let inj = FaultPlan::new(42)
+///     .with(InjectionPoint::WorkerPanic, 0.2)
+///     .with_limit(InjectionPoint::WorkerPanic, 16)
+///     .build();
+/// // Without the `fault-injection` feature this never fires.
+/// let _ = inj.should_fire_keyed(InjectionPoint::WorkerPanic, 7);
+/// ```
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for every draw this plan makes.
+    pub seed: u64,
+    probs: [f64; NUM_POINTS],
+    limits: [Option<u64>; NUM_POINTS],
+    /// Sleep injected by `SlowWorker`, in milliseconds.
+    pub slow_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (all probabilities zero).
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, probs: [0.0; NUM_POINTS], limits: [None; NUM_POINTS], slow_ms: 20 }
+    }
+
+    /// Set the firing probability for one point (clamped to [0, 1]).
+    pub fn with(mut self, point: InjectionPoint, prob: f64) -> Self {
+        self.probs[point.index()] = prob.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Cap the total number of fires for one point.
+    pub fn with_limit(mut self, point: InjectionPoint, limit: u64) -> Self {
+        self.limits[point.index()] = Some(limit);
+        self
+    }
+
+    /// Set the `SlowWorker` sleep duration.
+    pub fn with_slow_ms(mut self, ms: u64) -> Self {
+        self.slow_ms = ms;
+        self
+    }
+
+    /// Probability configured for `point`.
+    pub fn prob(&self, point: InjectionPoint) -> f64 {
+        self.probs[point.index()]
+    }
+
+    /// Freeze the plan into a thread-safe injector.
+    pub fn build(self) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector::new(self))
+    }
+}
+
+/// splitmix64 — the same mixer `util::rng` uses for seeding; here it
+/// turns `(seed, point, key)` into one well-mixed draw.
+#[cfg(feature = "fault-injection")]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Thread-safe decision engine for a [`FaultPlan`].
+///
+/// All state is internal; sites ask `should_fire*` and the injector
+/// accounts fires against per-point limits and counters.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    #[cfg(feature = "fault-injection")]
+    streams: [Mutex<Rng>; NUM_POINTS],
+    #[cfg(feature = "fault-injection")]
+    fired_counts: [AtomicU64; NUM_POINTS],
+}
+
+impl FaultInjector {
+    fn new(plan: FaultPlan) -> Self {
+        #[cfg(feature = "fault-injection")]
+        {
+            let streams = std::array::from_fn(|i| {
+                // Independent stream per point: interleaving across
+                // points cannot perturb a point's decision sequence.
+                Mutex::new(Rng::seed_from_u64(plan.seed ^ ((i as u64 + 1) << 32)))
+            });
+            FaultInjector { plan, streams, fired_counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+        }
+        #[cfg(not(feature = "fault-injection"))]
+        FaultInjector { plan }
+    }
+
+    /// The plan this injector executes.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Keyed draw: fire iff `hash(seed, point, key)` lands under the
+    /// point's probability (and the point's limit is not exhausted).
+    /// Pure in `(seed, point, key)` — safe for concurrent sites.
+    #[inline]
+    pub fn should_fire_keyed(&self, point: InjectionPoint, key: u64) -> bool {
+        #[cfg(not(feature = "fault-injection"))]
+        {
+            let _ = (point, key);
+            false
+        }
+        #[cfg(feature = "fault-injection")]
+        {
+            let p = self.plan.probs[point.index()];
+            if p <= 0.0 {
+                return false;
+            }
+            let h = splitmix64(
+                self.plan.seed
+                    ^ ((point.index() as u64 + 1).wrapping_mul(0xa076_1d64_78bd_642f))
+                    ^ key.wrapping_mul(0xe703_7ed1_a0b4_28db),
+            );
+            let draw = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            draw < p && self.account(point)
+        }
+    }
+
+    /// Sequential draw from the point's own seeded stream. Deterministic
+    /// in the sequence of calls to this point (single-threaded sites).
+    #[inline]
+    pub fn should_fire(&self, point: InjectionPoint) -> bool {
+        #[cfg(not(feature = "fault-injection"))]
+        {
+            let _ = point;
+            false
+        }
+        #[cfg(feature = "fault-injection")]
+        {
+            let p = self.plan.probs[point.index()];
+            if p <= 0.0 {
+                return false;
+            }
+            let fire = self.streams[point.index()].lock().unwrap().bool(p);
+            fire && self.account(point)
+        }
+    }
+
+    /// Sleep duration to inject if `SlowWorker` fires for `key`, else `None`.
+    #[inline]
+    pub fn slow_duration_keyed(&self, key: u64) -> Option<Duration> {
+        if self.should_fire_keyed(InjectionPoint::SlowWorker, key) {
+            Some(Duration::from_millis(self.plan.slow_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Count a fire against the limit; false when the limit is exhausted.
+    #[cfg(feature = "fault-injection")]
+    fn account(&self, point: InjectionPoint) -> bool {
+        let i = point.index();
+        match self.plan.limits[i] {
+            None => {
+                self.fired_counts[i].fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Some(limit) => {
+                // Reserve a slot; roll back on overshoot so `fired()`
+                // never exceeds the limit.
+                let prev = self.fired_counts[i].fetch_add(1, Ordering::Relaxed);
+                if prev < limit {
+                    true
+                } else {
+                    self.fired_counts[i].fetch_sub(1, Ordering::Relaxed);
+                    false
+                }
+            }
+        }
+    }
+
+    /// Fires recorded for `point` so far (always 0 when the
+    /// `fault-injection` feature is off).
+    pub fn fired(&self, point: InjectionPoint) -> u64 {
+        #[cfg(not(feature = "fault-injection"))]
+        {
+            let _ = point;
+            0
+        }
+        #[cfg(feature = "fault-injection")]
+        self.fired_counts[point.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total fires across all points.
+    pub fn total_fired(&self) -> u64 {
+        InjectionPoint::ALL.iter().map(|&p| self.fired(p)).sum()
+    }
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector").field("plan", &self.plan).finish()
+    }
+}
+
+/// Keyed fire through an optional injector (the idiom at call sites:
+/// resilience layers carry `Option<Arc<FaultInjector>>` and this is
+/// `false` on `None`, on zero probability, or without the feature).
+#[inline]
+pub fn fire_keyed(inj: &Option<Arc<FaultInjector>>, point: InjectionPoint, key: u64) -> bool {
+    inj.as_ref().is_some_and(|i| i.should_fire_keyed(point, key))
+}
+
+/// Sequential fire through an optional injector.
+#[inline]
+pub fn fire(inj: &Option<Arc<FaultInjector>>, point: InjectionPoint) -> bool {
+    inj.as_ref().is_some_and(|i| i.should_fire(point))
+}
+
+/// Injected sleep through an optional injector.
+#[inline]
+pub fn slow_keyed(inj: &Option<Arc<FaultInjector>>, key: u64) -> Option<Duration> {
+    inj.as_ref().and_then(|i| i.slow_duration_keyed(key))
+}
+
+/// Retry-with-exponential-backoff policy shared by the pipeline
+/// supervisor and the coordinator's runtime dispatch. This is
+/// *supervision* configuration, not injection: it is always compiled
+/// and active, with or without the `fault-injection` feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries allowed after the first attempt (so `max_retries = 3`
+    /// means up to 4 attempts total).
+    pub max_retries: u32,
+    /// Backoff before retry `k` is `base · 2^(k-1)`, capped below.
+    pub backoff_base_ms: u64,
+    /// Upper bound on a single backoff sleep.
+    pub backoff_max_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, backoff_base_ms: 1, backoff_max_ms: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries.
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, backoff_base_ms: 0, backoff_max_ms: 0 }
+    }
+
+    /// Backoff to sleep before attempt number `attempt` (1-based retry
+    /// index). Exponential with cap: `base · 2^(attempt-1)`, ≤ max.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        if self.backoff_base_ms == 0 || attempt == 0 {
+            return Duration::ZERO;
+        }
+        let exp = attempt.saturating_sub(1).min(16);
+        let ms = self.backoff_base_ms.saturating_mul(1u64 << exp).min(self.backoff_max_ms);
+        Duration::from_millis(ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy { max_retries: 5, backoff_base_ms: 2, backoff_max_ms: 9 };
+        assert_eq!(p.backoff(0), Duration::ZERO);
+        assert_eq!(p.backoff(1), Duration::from_millis(2));
+        assert_eq!(p.backoff(2), Duration::from_millis(4));
+        assert_eq!(p.backoff(3), Duration::from_millis(8));
+        assert_eq!(p.backoff(4), Duration::from_millis(9)); // capped
+        assert_eq!(RetryPolicy::none().backoff(3), Duration::ZERO);
+    }
+
+    #[test]
+    fn zero_probability_never_fires() {
+        let inj = FaultPlan::new(7).build();
+        for point in InjectionPoint::ALL {
+            for key in 0..200 {
+                assert!(!inj.should_fire_keyed(point, key));
+            }
+            assert!(!inj.should_fire(point));
+            assert_eq!(inj.fired(point), 0);
+        }
+        assert_eq!(inj.total_fired(), 0);
+    }
+
+    #[test]
+    fn optional_injector_helpers_accept_none() {
+        let none: Option<Arc<FaultInjector>> = None;
+        assert!(!fire_keyed(&none, InjectionPoint::WorkerPanic, 1));
+        assert!(!fire(&none, InjectionPoint::IoError));
+        assert!(slow_keyed(&none, 1).is_none());
+    }
+
+    #[test]
+    fn point_names_are_stable() {
+        let names: Vec<_> = InjectionPoint::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            ["worker_panic", "chunk_drop", "slow_worker", "engine_error", "io_error"]
+        );
+        for (i, p) in InjectionPoint::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+    }
+
+    #[cfg(feature = "fault-injection")]
+    mod enabled {
+        use super::*;
+
+        #[test]
+        fn keyed_draws_are_deterministic_and_scheduling_independent() {
+            let a = FaultPlan::new(99).with(InjectionPoint::WorkerPanic, 0.5).build();
+            let b = FaultPlan::new(99).with(InjectionPoint::WorkerPanic, 0.5).build();
+            // Query b in reverse order: decisions must match a's anyway.
+            let from_a: Vec<bool> = (0..256)
+                .map(|k| a.should_fire_keyed(InjectionPoint::WorkerPanic, k))
+                .collect();
+            let mut from_b: Vec<bool> = (0..256)
+                .rev()
+                .map(|k| b.should_fire_keyed(InjectionPoint::WorkerPanic, k))
+                .collect();
+            from_b.reverse();
+            assert_eq!(from_a, from_b);
+            let fires = from_a.iter().filter(|&&f| f).count();
+            assert!((64..192).contains(&fires), "p=0.5 should fire about half: {fires}");
+        }
+
+        #[test]
+        fn different_seeds_differ() {
+            let a = FaultPlan::new(1).with(InjectionPoint::ChunkDrop, 0.5).build();
+            let b = FaultPlan::new(2).with(InjectionPoint::ChunkDrop, 0.5).build();
+            let va: Vec<bool> =
+                (0..128).map(|k| a.should_fire_keyed(InjectionPoint::ChunkDrop, k)).collect();
+            let vb: Vec<bool> =
+                (0..128).map(|k| b.should_fire_keyed(InjectionPoint::ChunkDrop, k)).collect();
+            assert_ne!(va, vb);
+        }
+
+        #[test]
+        fn limits_cap_fires() {
+            let inj = FaultPlan::new(5)
+                .with(InjectionPoint::EngineError, 1.0)
+                .with_limit(InjectionPoint::EngineError, 3)
+                .build();
+            let fires =
+                (0..50).filter(|&k| inj.should_fire_keyed(InjectionPoint::EngineError, k)).count();
+            assert_eq!(fires, 3);
+            assert_eq!(inj.fired(InjectionPoint::EngineError), 3);
+        }
+
+        #[test]
+        fn sequential_stream_is_reproducible() {
+            let a = FaultPlan::new(11).with(InjectionPoint::IoError, 0.3).build();
+            let b = FaultPlan::new(11).with(InjectionPoint::IoError, 0.3).build();
+            let va: Vec<bool> = (0..100).map(|_| a.should_fire(InjectionPoint::IoError)).collect();
+            let vb: Vec<bool> = (0..100).map(|_| b.should_fire(InjectionPoint::IoError)).collect();
+            assert_eq!(va, vb);
+            assert!(va.iter().any(|&f| f));
+            assert!(!va.iter().all(|&f| f));
+        }
+
+        #[test]
+        fn slow_duration_uses_plan_ms() {
+            let inj = FaultPlan::new(3)
+                .with(InjectionPoint::SlowWorker, 1.0)
+                .with_slow_ms(7)
+                .build();
+            assert_eq!(inj.slow_duration_keyed(0), Some(Duration::from_millis(7)));
+        }
+    }
+}

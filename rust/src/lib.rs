@@ -27,13 +27,27 @@
 //!   baselines the paper compares against (t-test, streaming SGD, lossy
 //!   group regression).
 //! * [`pipeline`] — streaming compression orchestrator: sharded workers,
-//!   bounded-channel backpressure, rebalancing, associative merges.
+//!   bounded-channel backpressure, rebalancing, associative merges, and
+//!   supervised chunk execution (catch_unwind + retry with backoff).
+//! * [`fault`] — deterministic fault injection (seeded, keyed draws;
+//!   no-op unless built with `--features fault-injection`) plus the
+//!   [`RetryPolicy`](fault::RetryPolicy) the resilience layers share.
 //! * [`coordinator`] — the analysis service: request DSL, planner,
 //!   router, compressed-dataset cache (the YOCO store), metrics.
 //! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from the Rust
 //!   request path with exact zero-weight shape-bucket padding.
-//! * [`server`] — JSON-lines-over-TCP analysis frontend (tokio).
+//! * [`server`] — JSON-lines-over-TCP analysis frontend (std::net,
+//!   thread per connection) hardened with timeouts, load shedding,
+//!   line-length limits, and draining shutdown.
+//!
+//! ## Features
+//!
+//! * `fault-injection` — compiles the [`fault`] injection sites in
+//!   (chaos tests); without it every probe is an inlined `false`.
+//! * `pjrt` — compiles the real PJRT engine (needs the unvendored
+//!   `xla` crate); without it a stub engine reports the runtime absent
+//!   and the coordinator serves natively.
 //!
 //! ## Quickstart
 //!
@@ -64,6 +78,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod estimator;
+pub mod fault;
 pub mod linalg;
 pub mod pipeline;
 pub mod runtime;

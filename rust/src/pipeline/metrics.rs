@@ -11,6 +11,9 @@ pub struct Metrics {
     rows_compressed: AtomicU64,
     producer_stalls: AtomicU64,
     rebalances: AtomicU64,
+    worker_panics: AtomicU64,
+    chunk_retries: AtomicU64,
+    worker_respawns: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -29,6 +32,9 @@ impl Metrics {
             rows_compressed: AtomicU64::new(0),
             producer_stalls: AtomicU64::new(0),
             rebalances: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            chunk_retries: AtomicU64::new(0),
+            worker_respawns: AtomicU64::new(0),
         }
     }
 
@@ -53,6 +59,21 @@ impl Metrics {
         self.rebalances.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a caught worker panic (injected or genuine).
+    pub fn add_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a chunk retry (requeue after a panic or a dropped enqueue).
+    pub fn add_chunk_retry(&self) {
+        self.chunk_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a worker respawn (a fresh incarnation after a panic).
+    pub fn add_worker_respawn(&self) {
+        self.worker_respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let elapsed = self.started.elapsed().as_secs_f64();
@@ -63,6 +84,9 @@ impl Metrics {
             rows_compressed: self.rows_compressed.load(Ordering::Relaxed),
             producer_stalls: self.producer_stalls.load(Ordering::Relaxed),
             rebalances: self.rebalances.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            chunk_retries: self.chunk_retries.load(Ordering::Relaxed),
+            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
             elapsed_secs: elapsed,
             rows_per_sec: if elapsed > 0.0 { rows as f64 / elapsed } else { 0.0 },
         }
@@ -82,6 +106,12 @@ pub struct MetricsSnapshot {
     pub producer_stalls: u64,
     /// Rebalance passes that moved at least one virtual shard.
     pub rebalances: u64,
+    /// Worker panics caught by the supervisor.
+    pub worker_panics: u64,
+    /// Chunk retries (requeues) performed by the supervisor / feeder.
+    pub chunk_retries: u64,
+    /// Worker respawns (new incarnations after a caught panic).
+    pub worker_respawns: u64,
     /// Wall-clock seconds since pipeline start.
     pub elapsed_secs: f64,
     /// Ingest throughput.
@@ -100,12 +130,19 @@ mod tests {
         m.add_compressed(150);
         m.set_stalls(3);
         m.add_rebalance();
+        m.add_worker_panic();
+        m.add_worker_panic();
+        m.add_chunk_retry();
+        m.add_worker_respawn();
         let s = m.snapshot();
         assert_eq!(s.rows_in, 150);
         assert_eq!(s.chunks_in, 2);
         assert_eq!(s.rows_compressed, 150);
         assert_eq!(s.producer_stalls, 3);
         assert_eq!(s.rebalances, 1);
+        assert_eq!(s.worker_panics, 2);
+        assert_eq!(s.chunk_retries, 1);
+        assert_eq!(s.worker_respawns, 1);
         assert!(s.elapsed_secs >= 0.0);
     }
 }

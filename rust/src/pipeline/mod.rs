@@ -12,12 +12,17 @@
 //! * **virtual-shard rebalancing** — routing goes through a
 //!   virtual→physical map whose hot shards can migrate between workers
 //!   mid-stream without affecting correctness ([`ShardMap`]);
-//! * **metrics** — rows/chunks/stall/rebalance counters ([`Metrics`]).
+//! * **metrics** — rows/chunks/stall/rebalance counters plus the
+//!   supervision counters (panics, retries, respawns) ([`Metrics`]);
+//! * **supervision** — chunks fold under `catch_unwind` with respawn +
+//!   bounded retry, so a panicking worker degrades to a structured
+//!   error instead of a poisoned run (see `supervisor`).
 
 mod backpressure;
 mod metrics;
 mod orchestrator;
 mod rebalance;
+mod supervisor;
 
 pub use backpressure::BoundedQueue;
 pub use metrics::{Metrics, MetricsSnapshot};

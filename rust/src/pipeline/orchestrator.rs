@@ -1,17 +1,29 @@
-//! The pipeline orchestrator: feeder → bounded queues → worker folds →
-//! associative merge.
+//! The pipeline orchestrator: feeder → bounded queues → supervised
+//! worker folds → associative merge.
+//!
+//! Fault tolerance: chunks execute under the supervision harness in
+//! [`super::supervisor`] — worker panics are caught, the worker is
+//! respawned, and the in-flight chunk is requeued with exponential
+//! backoff up to [`RetryPolicy::max_retries`]; the feeder applies the
+//! same budget to chunks "dropped" before enqueue. A shard that
+//! exhausts its budget fails the run with a structured
+//! [`YocoError::Pipeline`] carrying the retry count, and a worker that
+//! dies closes its own queue so the feeder can never deadlock against
+//! a dead consumer.
 
 use std::sync::Arc;
 
 use super::backpressure::BoundedQueue;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::rebalance::ShardMap;
+use super::supervisor::{supervise_chunk, ChunkOutcome, ChunkTask};
 use crate::compress::{
     ClusterStaticCompressed, ClusterStaticCompressor, CompressedData, SuffStatsCompressor,
 };
 use crate::compress::hash_row;
 use crate::data::Batch;
 use crate::error::{Result, YocoError};
+use crate::fault::{self, FaultInjector, InjectionPoint, RetryPolicy};
 
 /// Pipeline tuning knobs.
 #[derive(Debug, Clone)]
@@ -28,6 +40,9 @@ pub struct PipelineConfig {
     pub chunk_rows: usize,
     /// Run a rebalance pass every this many fed chunks (0 = never).
     pub rebalance_every: u64,
+    /// Supervision policy: per-chunk retry budget and backoff applied
+    /// when a worker panics or a chunk drops before enqueue.
+    pub retry: RetryPolicy,
 }
 
 impl Default for PipelineConfig {
@@ -39,6 +54,7 @@ impl Default for PipelineConfig {
             queue_capacity: 4,
             chunk_rows: 8192,
             rebalance_every: 64,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -104,13 +120,21 @@ pub struct Pipeline {
     cfg: PipelineConfig,
     mode: PipelineMode,
     metrics: Arc<Metrics>,
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Pipeline {
     /// Build a pipeline.
     pub fn new(cfg: PipelineConfig, mode: PipelineMode) -> Self {
         assert!(cfg.workers > 0 && cfg.chunk_rows > 0 && cfg.queue_capacity > 0);
-        Pipeline { cfg, mode, metrics: Arc::new(Metrics::new()) }
+        Pipeline { cfg, mode, metrics: Arc::new(Metrics::new()), injector: None }
+    }
+
+    /// Attach a fault injector (chaos testing; a no-op outside
+    /// `--features fault-injection` builds).
+    pub fn with_fault_injector(mut self, injector: Arc<FaultInjector>) -> Self {
+        self.injector = Some(injector);
+        self
     }
 
     /// Metrics snapshot (valid during and after a run).
@@ -158,27 +182,63 @@ impl Pipeline {
             self.cfg.virtual_shards.max(self.cfg.workers),
             self.cfg.workers,
         ));
-        let queues: Vec<Arc<BoundedQueue<Chunk>>> = (0..self.cfg.workers)
+        let queues: Vec<Arc<BoundedQueue<ChunkTask<Chunk>>>> = (0..self.cfg.workers)
             .map(|_| Arc::new(BoundedQueue::new(self.cfg.queue_capacity)))
             .collect();
 
         let mode = self.mode;
         let metrics = &self.metrics;
         let cfg = &self.cfg;
+        let injector = &self.injector;
 
         std::thread::scope(|scope| -> Result<PipelineResult> {
-            // ---- Workers ----
+            // ---- Supervised workers ----
             let handles: Vec<_> = (0..cfg.workers)
                 .map(|w| {
                     let queue = queues[w].clone();
                     let metrics = metrics.clone();
-                    scope.spawn(move || -> WorkerState {
+                    let injector = injector.clone();
+                    let policy = cfg.retry;
+                    scope.spawn(move || -> Result<WorkerState> {
                         let mut state = WorkerState::new(mode, p, o);
-                        while let Some(chunk) = queue.pop() {
-                            state.fold(&chunk);
-                            metrics.add_compressed(chunk.rows as u64);
+                        while let Some(mut task) = queue.pop() {
+                            let rows = task.chunk.rows as u64;
+                            let outcome = supervise_chunk(
+                                &mut task,
+                                &policy,
+                                &injector,
+                                &metrics,
+                                |chunk| state.fold(chunk),
+                            );
+                            match outcome {
+                                ChunkOutcome::Done => metrics.add_compressed(rows),
+                                ChunkOutcome::Exhausted { retries, panic_msg } => {
+                                    // Close our queue so the feeder fails
+                                    // fast instead of blocking on a full
+                                    // queue no one drains.
+                                    queue.close();
+                                    return Err(YocoError::pipeline_exhausted(
+                                        format!(
+                                            "worker {w}: chunk {} exhausted its retry \
+                                             budget (last panic: {panic_msg})",
+                                            task.id
+                                        ),
+                                        retries,
+                                        None,
+                                    ));
+                                }
+                                ChunkOutcome::Poisoned { panic_msg } => {
+                                    queue.close();
+                                    return Err(YocoError::pipeline(format!(
+                                        "worker {w}: panic mid-fold on chunk {} poisoned \
+                                         the shard ({panic_msg}); rows may be partially \
+                                         folded, so a retry would double-count",
+                                        task.id
+                                    )));
+                                }
+                            }
                         }
-                        state
+                        Ok(state)
                     })
                 })
                 .collect();
@@ -200,6 +260,30 @@ impl Pipeline {
             let mut feat_buf = vec![0.0; p];
             let mut out_buf = vec![0.0; o];
             let mut chunks_fed: u64 = 0;
+            let mut next_chunk_id: u64 = 0;
+
+            // Enqueue with the feeder-side half of the supervision
+            // contract: an injected ChunkDrop consumes a retry from the
+            // chunk's budget and the push is re-attempted after backoff.
+            let mut enqueue = |w: usize, chunk: Chunk, id: u64| -> Result<()> {
+                let mut task = ChunkTask { id, attempt: 0, chunk };
+                while fault::fire_keyed(injector, InjectionPoint::ChunkDrop, task.fault_key()) {
+                    if task.attempt >= cfg.retry.max_retries {
+                        return Err(YocoError::pipeline_exhausted(
+                            format!("chunk {id} dropped before enqueue on every attempt"),
+                            task.attempt,
+                            None,
+                        ));
+                    }
+                    task.attempt += 1;
+                    metrics.add_chunk_retry();
+                    std::thread::sleep(cfg.retry.backoff(task.attempt));
+                }
+                if !queues[w].push(task) {
+                    return Err(YocoError::pipeline("queue closed early"));
+                }
+                Ok(())
+            };
 
             for batch in batches {
                 if batch.schema().names() != schema.names() {
@@ -235,9 +319,9 @@ impl Pipeline {
                         );
                         metrics.add_chunk(full.rows as u64);
                         chunks_fed += 1;
-                        if !queues[w].push(full) {
-                            return Err(YocoError::Pipeline("queue closed early".into()));
-                        }
+                        let id = next_chunk_id;
+                        next_chunk_id += 1;
+                        enqueue(w, full, id)?;
                         if cfg.rebalance_every > 0 && chunks_fed % cfg.rebalance_every == 0
                         {
                             if map.rebalance() > 0 {
@@ -251,9 +335,9 @@ impl Pipeline {
             for (w, buf) in buffers.into_iter().enumerate() {
                 if buf.rows > 0 {
                     metrics.add_chunk(buf.rows as u64);
-                    if !queues[w].push(buf) {
-                        return Err(YocoError::Pipeline("queue closed early".into()));
-                    }
+                    let id = next_chunk_id;
+                    next_chunk_id += 1;
+                    enqueue(w, buf, id)?;
                 }
             }
             Ok(())
@@ -265,11 +349,25 @@ impl Pipeline {
             metrics.set_stalls(queues.iter().map(|q| q.stall_count()).sum());
 
             // ---- Collect & merge ----
+            // Worker errors (retry exhaustion, poisoned shard) are the
+            // root cause when the feeder also failed with "queue closed
+            // early", so they take precedence.
             let mut partials: Vec<WorkerState> = Vec::with_capacity(cfg.workers);
+            let mut worker_err: Option<YocoError> = None;
             for h in handles {
-                partials.push(h.join().map_err(|_| {
-                    YocoError::Pipeline("worker thread panicked".into())
-                })?);
+                match h.join() {
+                    Ok(Ok(state)) => partials.push(state),
+                    Ok(Err(e)) => worker_err = worker_err.or(Some(e)),
+                    // Supervision catches chunk panics, so an unwinding
+                    // worker thread means the harness itself panicked.
+                    Err(_) => {
+                        worker_err = worker_err
+                            .or_else(|| Some(YocoError::pipeline("worker thread panicked")));
+                    }
+                }
+            }
+            if let Some(e) = worker_err {
+                return Err(e);
             }
             feed_result?;
             merge_partials(partials, mode)
@@ -410,6 +508,7 @@ mod tests {
             queue_capacity: 2,
             chunk_rows: 64,
             rebalance_every: 8,
+            retry: RetryPolicy::default(),
         }
     }
 

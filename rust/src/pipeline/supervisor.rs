@@ -1,0 +1,223 @@
+//! Worker supervision: run chunk folds under `catch_unwind`, respawn
+//! the execution context after a panic, and retry the in-flight chunk
+//! with exponential backoff.
+//!
+//! # Model
+//!
+//! Each worker owns an accumulating fold state (its compressor). A
+//! chunk attempt runs inside [`std::panic::catch_unwind`]; when it
+//! panics the supervisor treats the worker incarnation as dead,
+//! "respawns" it (same OS thread, fresh unwind context, fold state
+//! retained), and requeues the in-flight chunk after a
+//! [`RetryPolicy`] backoff — up to `max_retries` times. A chunk whose
+//! retry budget is exhausted surfaces as a structured
+//! [`YocoError::Pipeline`] carrying the retry count.
+//!
+//! # Exactness
+//!
+//! Retrying a chunk is only lossless if the panic did not mutate the
+//! fold state. Injected [`WorkerPanic`](InjectionPoint::WorkerPanic)
+//! faults fire *at the chunk boundary*, before the first row folds, so
+//! supervised runs reproduce fault-free output bit-for-bit. A genuine
+//! mid-fold panic (a bug in a compressor) is detected via a dirty flag
+//! and reported as a non-retryable poisoned shard instead of silently
+//! double-counting rows on retry.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use crate::fault::{self, FaultInjector, InjectionPoint, RetryPolicy};
+
+/// A chunk in flight: the payload plus its supervision bookkeeping.
+pub(crate) struct ChunkTask<C> {
+    /// Feeder-assigned sequential id (keys deterministic fault draws).
+    pub id: u64,
+    /// Attempts already consumed (0 = first try). The budget is shared
+    /// between feeder-side (`ChunkDrop`) and worker-side
+    /// (`WorkerPanic`) retries.
+    pub attempt: u32,
+    /// The payload.
+    pub chunk: C,
+}
+
+impl<C> ChunkTask<C> {
+    /// Fault-draw key for the current attempt: disjoint per (id, attempt).
+    pub fn fault_key(&self) -> u64 {
+        (self.id << 6) | u64::from(self.attempt & 0x3f)
+    }
+}
+
+/// How a supervised chunk ended.
+pub(crate) enum ChunkOutcome {
+    /// Folded successfully (possibly after respawns).
+    Done,
+    /// Panicked on every attempt; retry budget exhausted.
+    Exhausted {
+        /// Retries performed (== policy.max_retries).
+        retries: u32,
+        /// Panic payload of the final attempt.
+        panic_msg: String,
+    },
+    /// A panic unwound mid-fold: state may hold a partial chunk, so a
+    /// retry would double-count rows. Non-retryable.
+    Poisoned {
+        /// Panic payload.
+        panic_msg: String,
+    },
+}
+
+/// Best-effort extraction of a panic payload's message.
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one chunk to completion under supervision.
+///
+/// `fold` is the worker's fold step; it must only mutate worker state
+/// via the closure (the dirty flag brackets exactly that mutation).
+/// Returns when the chunk folded, exhausted its retries, or poisoned
+/// the shard. Metrics record every panic, retry, and respawn.
+pub(crate) fn supervise_chunk<C>(
+    task: &mut ChunkTask<C>,
+    policy: &RetryPolicy,
+    injector: &Option<Arc<FaultInjector>>,
+    metrics: &Metrics,
+    mut fold: impl FnMut(&C),
+) -> ChunkOutcome {
+    loop {
+        let mut dirty = false;
+        let attempt_key = task.fault_key();
+        let result = {
+            let task_ref: &ChunkTask<C> = task;
+            catch_unwind(AssertUnwindSafe(|| {
+                if fault::fire_keyed(injector, InjectionPoint::WorkerPanic, attempt_key) {
+                    panic!(
+                        "injected worker panic (chunk {}, attempt {})",
+                        task_ref.id, task_ref.attempt
+                    );
+                }
+                if let Some(d) = fault::slow_keyed(injector, attempt_key) {
+                    std::thread::sleep(d);
+                }
+                dirty = true;
+                fold(&task_ref.chunk);
+                dirty = false;
+            }))
+        };
+        match result {
+            Ok(()) => return ChunkOutcome::Done,
+            Err(payload) => {
+                let panic_msg = panic_message(payload);
+                metrics.add_worker_panic();
+                if dirty {
+                    return ChunkOutcome::Poisoned { panic_msg };
+                }
+                if task.attempt >= policy.max_retries {
+                    return ChunkOutcome::Exhausted { retries: task.attempt, panic_msg };
+                }
+                task.attempt += 1;
+                metrics.add_chunk_retry();
+                metrics.add_worker_respawn();
+                std::thread::sleep(policy.backoff(task.attempt));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64) -> ChunkTask<Vec<u32>> {
+        ChunkTask { id, attempt: 0, chunk: vec![1, 2, 3] }
+    }
+
+    #[test]
+    fn clean_fold_is_done_first_try() {
+        let m = Metrics::new();
+        let mut sum = 0u32;
+        let mut t = task(0);
+        let out = supervise_chunk(&mut t, &RetryPolicy::default(), &None, &m, |c| {
+            sum += c.iter().sum::<u32>();
+        });
+        assert!(matches!(out, ChunkOutcome::Done));
+        assert_eq!(sum, 6);
+        assert_eq!(t.attempt, 0);
+        assert_eq!(m.snapshot().worker_panics, 0);
+    }
+
+    #[test]
+    fn mid_fold_panic_is_poisoned_not_retried() {
+        let m = Metrics::new();
+        let mut t = task(1);
+        // A panic raised inside fold happens with the dirty flag set:
+        // the shard must be declared poisoned, never retried.
+        let out = supervise_chunk(&mut t, &RetryPolicy::default(), &None, &m, |_c| {
+            panic!("compressor bug");
+        });
+        match out {
+            ChunkOutcome::Poisoned { panic_msg } => assert!(panic_msg.contains("bug")),
+            _ => panic!("expected poisoned shard"),
+        }
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.chunk_retries, 0);
+    }
+
+    #[test]
+    fn fault_key_is_disjoint_per_attempt() {
+        let a = ChunkTask { id: 3, attempt: 0, chunk: () };
+        let b = ChunkTask { id: 3, attempt: 1, chunk: () };
+        let c = ChunkTask { id: 4, attempt: 0, chunk: () };
+        assert_ne!(a.fault_key(), b.fault_key());
+        assert_ne!(a.fault_key(), c.fault_key());
+        assert_ne!(b.fault_key(), c.fault_key());
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn injected_panics_retry_losslessly_and_exhaust_structurally() {
+        use crate::fault::FaultPlan;
+        // p = 1.0 with a fire limit of 2: two injected boundary panics,
+        // then the fold runs. State must see the chunk exactly once.
+        let inj = Some(
+            FaultPlan::new(1)
+                .with(InjectionPoint::WorkerPanic, 1.0)
+                .with_limit(InjectionPoint::WorkerPanic, 2)
+                .build(),
+        );
+        let m = Metrics::new();
+        let mut folds = 0u32;
+        let mut t = task(9);
+        let out = supervise_chunk(&mut t, &RetryPolicy::default(), &inj, &m, |_| folds += 1);
+        assert!(matches!(out, ChunkOutcome::Done));
+        assert_eq!(folds, 1, "retries must not double-fold");
+        assert_eq!(t.attempt, 2);
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 2);
+        assert_eq!(s.chunk_retries, 2);
+        assert_eq!(s.worker_respawns, 2);
+
+        // Unlimited p = 1.0: exhausts after max_retries with the count.
+        let inj = Some(FaultPlan::new(2).with(InjectionPoint::WorkerPanic, 1.0).build());
+        let m = Metrics::new();
+        let mut t = task(10);
+        let policy = RetryPolicy { max_retries: 3, ..RetryPolicy::default() };
+        let out = supervise_chunk(&mut t, &policy, &inj, &m, |_: &Vec<u32>| {});
+        match out {
+            ChunkOutcome::Exhausted { retries, panic_msg } => {
+                assert_eq!(retries, 3);
+                assert!(panic_msg.contains("injected"), "{panic_msg}");
+            }
+            _ => panic!("expected exhaustion"),
+        }
+        assert_eq!(m.snapshot().worker_panics, 4); // 1 try + 3 retries
+    }
+}

@@ -18,6 +18,10 @@ use crate::error::{Result, YocoError};
 use crate::estimator::{CovarianceKind, Fit};
 use crate::linalg::Matrix;
 
+/// Generous per-job ceiling: compile-on-first-use of a large graph is
+/// slow, but two minutes of silence means the lane is wedged.
+const LANE_REPLY_TIMEOUT_MS: u64 = 120_000;
+
 enum Job {
     Fit {
         data: CompressedData,
@@ -77,10 +81,10 @@ impl RuntimeHandle {
                     }
                 }
             })
-            .map_err(|e| YocoError::Runtime(format!("cannot spawn pjrt lane: {e}")))?;
+            .map_err(|e| YocoError::runtime(format!("cannot spawn pjrt lane: {e}")))?;
         ready_rx
             .recv()
-            .map_err(|_| YocoError::Runtime("pjrt lane died during init".into()))??;
+            .map_err(|_| YocoError::runtime("pjrt lane died during init"))??;
         Ok(RuntimeHandle { tx: Mutex::new(tx), thread: Some(thread) })
     }
 
@@ -90,8 +94,19 @@ impl RuntimeHandle {
             .lock()
             .unwrap()
             .send(build(reply_tx))
-            .map_err(|_| YocoError::Runtime("pjrt lane is gone".into()))?;
-        reply_rx.recv().map_err(|_| YocoError::Runtime("pjrt lane dropped reply".into()))
+            .map_err(|_| YocoError::runtime("pjrt lane is gone"))?;
+        // Bounded wait: a wedged PJRT invocation surfaces as a
+        // structured (retryable) timeout instead of hanging the caller.
+        reply_rx
+            .recv_timeout(std::time::Duration::from_millis(LANE_REPLY_TIMEOUT_MS))
+            .map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => {
+                    YocoError::timeout("pjrt lane reply", LANE_REPLY_TIMEOUT_MS)
+                }
+                mpsc::RecvTimeoutError::Disconnected => {
+                    YocoError::runtime("pjrt lane dropped reply")
+                }
+            })
     }
 
     /// Fit on the runtime lane (see [`RuntimeEngine::fit`]).

@@ -1,51 +1,22 @@
 //! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Compiled only with `--features pjrt` (the `xla` crate is not part of
+//! the default dependency set); `engine_stub.rs` provides the
+//! always-available fallback that reports the runtime as absent.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
+use super::graphs::GraphKind;
 use super::manifest::Manifest;
 use super::pad::PaddedSuffStats;
 use crate::compress::CompressedData;
 use crate::error::{Result, YocoError};
 use crate::estimator::{CovarianceKind, Fit};
 
-/// Which AOT graph to execute. Names match `python/compile/model.py`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum GraphKind {
-    /// β̂ + homoskedastic covariance + σ̂².
-    WlsHom,
-    /// β̂ + EHW (HC0) covariance.
-    WlsEhw,
-    /// β̂ + cluster-robust covariance (CR0; CR1 applied Rust-side).
-    WlsCluster,
-    /// Logistic regression via fixed-iteration IRLS.
-    Logistic,
-}
-
-impl GraphKind {
-    /// Manifest graph name.
-    pub fn name(self) -> &'static str {
-        match self {
-            GraphKind::WlsHom => "wls_hom",
-            GraphKind::WlsEhw => "wls_ehw",
-            GraphKind::WlsCluster => "wls_cluster",
-            GraphKind::Logistic => "logistic",
-        }
-    }
-
-    /// The graph for a covariance kind.
-    pub fn for_covariance(kind: CovarianceKind) -> GraphKind {
-        match kind {
-            CovarianceKind::Homoskedastic => GraphKind::WlsHom,
-            CovarianceKind::Heteroskedastic => GraphKind::WlsEhw,
-            CovarianceKind::ClusterRobust => GraphKind::WlsCluster,
-        }
-    }
-}
-
 fn rt(e: xla::Error) -> YocoError {
-    YocoError::Runtime(e.to_string())
+    YocoError::runtime(e.to_string())
 }
 
 /// PJRT CPU engine over the artifact manifest. Executables compile on
@@ -102,7 +73,7 @@ impl RuntimeEngine {
             .manifest
             .pick(graph.name(), data.num_groups(), data.num_features())
             .ok_or_else(|| {
-                YocoError::Runtime(format!(
+                YocoError::runtime(format!(
                     "no {} artifact fits G={}, p={}",
                     graph.name(),
                     data.num_groups(),
@@ -154,7 +125,7 @@ impl RuntimeEngine {
             .manifest
             .pick("logistic", data.num_groups(), data.num_features())
             .ok_or_else(|| {
-                YocoError::Runtime(format!(
+                YocoError::runtime(format!(
                     "no logistic artifact fits G={}, p={}",
                     data.num_groups(),
                     data.num_features()
@@ -221,7 +192,7 @@ impl RuntimeEngine {
             GraphKind::Logistic => 2,
         };
         if parts.len() != expect {
-            return Err(YocoError::Runtime(format!(
+            return Err(YocoError::runtime(format!(
                 "graph {name} returned {} outputs, expected {expect}",
                 parts.len()
             )));
@@ -248,23 +219,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn graph_names_match_manifest_convention() {
-        assert_eq!(GraphKind::WlsHom.name(), "wls_hom");
-        assert_eq!(
-            GraphKind::for_covariance(CovarianceKind::Heteroskedastic),
-            GraphKind::WlsEhw
-        );
-        assert_eq!(
-            GraphKind::for_covariance(CovarianceKind::ClusterRobust).name(),
-            "wls_cluster"
-        );
-    }
-
-    #[test]
     fn missing_artifacts_dir_is_a_clean_error() {
         let r = RuntimeEngine::load(Path::new("/nonexistent/artifacts"));
         match r {
-            Err(YocoError::Runtime(msg)) => assert!(msg.contains("make artifacts")),
+            Err(YocoError::Runtime { msg, .. }) => assert!(msg.contains("make artifacts")),
             other => panic!("expected Runtime error, got {:?}", other.map(|_| ())),
         }
     }

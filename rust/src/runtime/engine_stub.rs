@@ -1,0 +1,83 @@
+//! Stub execution engine, compiled when the `pjrt` feature is off.
+//!
+//! The `xla` crate (PJRT bindings) is not part of the default
+//! dependency set, so default builds swap this module in for
+//! `engine.rs` (see `runtime/mod.rs`). [`RuntimeEngine`] here is an
+//! uninhabited type: [`RuntimeEngine::load`] always fails with a clean
+//! [`YocoError::Runtime`], the coordinator degrades to the native
+//! engine, and every other method is statically unreachable — the API
+//! surface stays identical, so no caller needs `cfg` branches.
+
+use std::path::Path;
+
+use super::graphs::GraphKind;
+use super::manifest::Manifest;
+use crate::compress::CompressedData;
+use crate::error::{Result, YocoError};
+use crate::estimator::{CovarianceKind, Fit};
+use crate::linalg::Matrix;
+
+/// Uninhabited stand-in for the PJRT engine (see module docs).
+pub enum RuntimeEngine {}
+
+impl RuntimeEngine {
+    /// Always fails: the PJRT runtime is not compiled into this build.
+    pub fn load(_dir: &Path) -> Result<RuntimeEngine> {
+        Err(YocoError::runtime(
+            "PJRT runtime not compiled in (enable the `pjrt` feature)",
+        ))
+    }
+
+    /// PJRT platform name (statically unreachable in stub builds).
+    pub fn platform(&self) -> String {
+        match *self {}
+    }
+
+    /// Artifacts known to the manifest (statically unreachable).
+    pub fn manifest(&self) -> &Manifest {
+        match *self {}
+    }
+
+    /// Number of executables compiled so far (statically unreachable).
+    pub fn compiled_count(&self) -> usize {
+        match *self {}
+    }
+
+    /// Fit a linear model (statically unreachable).
+    pub fn fit(
+        &self,
+        _data: &CompressedData,
+        _outcome: usize,
+        _kind: CovarianceKind,
+    ) -> Result<Fit> {
+        match *self {}
+    }
+
+    /// Fit logistic regression (statically unreachable).
+    pub fn fit_logistic(
+        &self,
+        _data: &CompressedData,
+        _outcome: usize,
+    ) -> Result<(Vec<f64>, Matrix)> {
+        match *self {}
+    }
+}
+
+// GraphKind is re-exported through the same path in both builds; keep
+// the stub referencing it so the import contract stays checked.
+const _: fn(GraphKind) -> &'static str = GraphKind::name;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        match RuntimeEngine::load(Path::new("artifacts")) {
+            Err(YocoError::Runtime { msg, .. }) => {
+                assert!(msg.contains("pjrt"), "{msg}");
+            }
+            Ok(_) => panic!("stub must not load"),
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! The AOT graph catalogue, independent of any execution backend.
+
+use crate::estimator::CovarianceKind;
+
+/// Which AOT graph to execute. Names match `python/compile/model.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphKind {
+    /// β̂ + homoskedastic covariance + σ̂².
+    WlsHom,
+    /// β̂ + EHW (HC0) covariance.
+    WlsEhw,
+    /// β̂ + cluster-robust covariance (CR0; CR1 applied Rust-side).
+    WlsCluster,
+    /// Logistic regression via fixed-iteration IRLS.
+    Logistic,
+}
+
+impl GraphKind {
+    /// Manifest graph name.
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphKind::WlsHom => "wls_hom",
+            GraphKind::WlsEhw => "wls_ehw",
+            GraphKind::WlsCluster => "wls_cluster",
+            GraphKind::Logistic => "logistic",
+        }
+    }
+
+    /// The graph for a covariance kind.
+    pub fn for_covariance(kind: CovarianceKind) -> GraphKind {
+        match kind {
+            CovarianceKind::Homoskedastic => GraphKind::WlsHom,
+            CovarianceKind::Heteroskedastic => GraphKind::WlsEhw,
+            CovarianceKind::ClusterRobust => GraphKind::WlsCluster,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_names_match_manifest_convention() {
+        assert_eq!(GraphKind::WlsHom.name(), "wls_hom");
+        assert_eq!(
+            GraphKind::for_covariance(CovarianceKind::Heteroskedastic),
+            GraphKind::WlsEhw
+        );
+        assert_eq!(
+            GraphKind::for_covariance(CovarianceKind::ClusterRobust).name(),
+            "wls_cluster"
+        );
+    }
+}

@@ -34,7 +34,7 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
-            YocoError::Runtime(format!(
+            YocoError::runtime(format!(
                 "cannot read {} (run `make artifacts`): {e}",
                 path.display()
             ))
@@ -48,33 +48,33 @@ impl Manifest {
         let arts = root
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| YocoError::Parse("manifest: missing 'artifacts' array".into()))?;
+            .ok_or_else(|| YocoError::parse("manifest: missing 'artifacts' array"))?;
         let mut artifacts = Vec::with_capacity(arts.len());
         for a in arts {
             let field = |k: &str| -> Result<&Json> {
                 a.get(k).ok_or_else(|| {
-                    YocoError::Parse(format!("manifest artifact missing '{k}'"))
+                    YocoError::parse(format!("manifest artifact missing '{k}'"))
                 })
             };
             artifacts.push(ArtifactSpec {
                 name: field("name")?
                     .as_str()
-                    .ok_or_else(|| YocoError::Parse("artifact name not a string".into()))?
+                    .ok_or_else(|| YocoError::parse("artifact name not a string"))?
                     .to_string(),
                 graph: field("graph")?
                     .as_str()
-                    .ok_or_else(|| YocoError::Parse("artifact graph not a string".into()))?
+                    .ok_or_else(|| YocoError::parse("artifact graph not a string"))?
                     .to_string(),
                 g: field("g")?
                     .as_usize()
-                    .ok_or_else(|| YocoError::Parse("artifact g not an int".into()))?,
+                    .ok_or_else(|| YocoError::parse("artifact g not an int"))?,
                 p: field("p")?
                     .as_usize()
-                    .ok_or_else(|| YocoError::Parse("artifact p not an int".into()))?,
+                    .ok_or_else(|| YocoError::parse("artifact p not an int"))?,
                 path: PathBuf::from(
                     field("path")?
                         .as_str()
-                        .ok_or_else(|| YocoError::Parse("artifact path not a string".into()))?,
+                        .ok_or_else(|| YocoError::parse("artifact path not a string"))?,
                 ),
             });
         }

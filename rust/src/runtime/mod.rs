@@ -14,12 +14,24 @@
 //! solve to β = 0 and are dropped on unpack). See
 //! `python/compile/model.py` for the graph-side contract.
 
+//!
+//! The engine is feature-gated: `--features pjrt` compiles the real
+//! PJRT client (which needs the unvendored `xla` crate); default builds
+//! get `engine_stub.rs`, whose `RuntimeEngine::load` fails cleanly so
+//! the coordinator serves with the native engine instead.
+
 mod actor;
+#[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+mod engine;
+mod graphs;
 mod manifest;
 mod pad;
 
 pub use actor::RuntimeHandle;
-pub use engine::{GraphKind, RuntimeEngine};
+pub use engine::RuntimeEngine;
+pub use graphs::GraphKind;
 pub use manifest::{ArtifactSpec, Manifest};
 pub use pad::{pick_bucket, PaddedSuffStats};

@@ -54,7 +54,7 @@ impl PaddedSuffStats {
         let g = data.num_groups();
         let p = data.num_features();
         let (gb, pb) = pick_bucket(g, p).ok_or_else(|| {
-            YocoError::Runtime(format!(
+            YocoError::runtime(format!(
                 "no artifact bucket fits G={g}, p={p} (max {} × {}); \
                  use the native engine",
                 G_BUCKETS.last().unwrap(),

@@ -18,9 +18,13 @@
 //! ```
 //!
 //! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//!
+//! The transport is hardened — read/write timeouts, a concurrent-
+//! connection cap with load shedding, per-line byte limits, and a
+//! draining shutdown; see [`ServerConfig`] for the knobs.
 
 mod proto;
 mod tcp;
 
-pub use proto::{handle_line, parse_request, Request};
-pub use tcp::{serve, ServerHandle};
+pub use proto::{error_reply, handle_line, parse_request, Request};
+pub use tcp::{serve, serve_with, DrainStats, ServerConfig, ServerHandle};

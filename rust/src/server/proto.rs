@@ -40,7 +40,7 @@ fn str_field(j: &Json, key: &str) -> Result<String> {
     j.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| YocoError::Parse(format!("missing string field '{key}'")))
+        .ok_or_else(|| YocoError::parse(format!("missing string field '{key}'")))
 }
 
 fn usize_field(j: &Json, key: &str, default: usize) -> usize {
@@ -73,7 +73,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let roles_json = j
                 .get("roles")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| YocoError::Parse("missing 'roles' array".into()))?;
+                .ok_or_else(|| YocoError::parse("missing 'roles' array"))?;
             let mut roles = Vec::with_capacity(roles_json.len());
             for r in roles_json {
                 roles.push(match r.as_str() {
@@ -83,7 +83,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     Some("weight") => ColumnRole::Weight,
                     Some("metadata") => ColumnRole::Metadata,
                     other => {
-                        return Err(YocoError::Parse(format!("bad role {other:?}")))
+                        return Err(YocoError::parse(format!("bad role {other:?}")))
                     }
                 });
             }
@@ -99,14 +99,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 Some("hc0") | Some("ehw") => CovarianceKind::Heteroskedastic,
                 Some("cluster") => CovarianceKind::ClusterRobust,
                 Some(other) => {
-                    return Err(YocoError::Parse(format!("bad covariance '{other}'")))
+                    return Err(YocoError::parse(format!("bad covariance '{other}'")))
                 }
             };
             let estimator = match j.get("estimator").and_then(Json::as_str) {
                 None | Some("wls") => EstimatorKind::Wls,
                 Some("logistic") => EstimatorKind::Logistic,
                 Some(other) => {
-                    return Err(YocoError::Parse(format!("bad estimator '{other}'")))
+                    return Err(YocoError::parse(format!("bad estimator '{other}'")))
                 }
             };
             let engine = match j.get("engine").and_then(Json::as_str) {
@@ -114,7 +114,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 Some("native") => EnginePref::Native,
                 Some("pjrt") => EnginePref::Pjrt,
                 Some(other) => {
-                    return Err(YocoError::Parse(format!("bad engine '{other}'")))
+                    return Err(YocoError::parse(format!("bad engine '{other}'")))
                 }
             };
             let features = match j.get("features").and_then(Json::as_arr) {
@@ -125,7 +125,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                         v.push(
                             f.as_str()
                                 .ok_or_else(|| {
-                                    YocoError::Parse("features must be strings".into())
+                                    YocoError::parse("features must be strings")
                                 })?
                                 .to_string(),
                         );
@@ -144,7 +144,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
         "datasets" => Ok(Request::Datasets),
         "metrics" => Ok(Request::Metrics),
-        other => Err(YocoError::Parse(format!("unknown op '{other}'"))),
+        other => Err(YocoError::parse(format!("unknown op '{other}'"))),
     }
 }
 
@@ -153,7 +153,11 @@ fn ok(mut fields: Vec<(&str, Json)>) -> Json {
     Json::obj(fields)
 }
 
-fn err(e: &YocoError) -> Json {
+/// Structured error reply: `{"ok":false,"error":"<display>"}`. The
+/// transport layer uses this for its own failures (oversized lines,
+/// read deadlines, load shedding) so every error a client sees has the
+/// same shape.
+pub fn error_reply(e: &YocoError) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(e.to_string()))])
 }
 
@@ -161,11 +165,11 @@ fn err(e: &YocoError) -> Json {
 pub fn handle_line(coordinator: &Coordinator, line: &str) -> Json {
     let req = match parse_request(line) {
         Ok(r) => r,
-        Err(e) => return err(&e),
+        Err(e) => return error_reply(&e),
     };
     match handle(coordinator, req) {
         Ok(j) => j,
-        Err(e) => err(&e),
+        Err(e) => error_reply(&e),
     }
 }
 
@@ -212,6 +216,8 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
                 ("errors", Json::Num(m.errors as f64)),
                 ("native_fits", Json::Num(m.native_fits as f64)),
                 ("pjrt_fits", Json::Num(m.pjrt_fits as f64)),
+                ("runtime_retries", Json::Num(m.runtime_retries as f64)),
+                ("runtime_fallbacks", Json::Num(m.runtime_fallbacks as f64)),
                 ("mean_latency_us", Json::Num(m.mean_latency_us)),
                 ("cache_hits", Json::Num(hits as f64)),
                 ("cache_misses", Json::Num(misses as f64)),
@@ -233,6 +239,7 @@ mod tests {
             queue_capacity: 2,
             chunk_rows: 512,
             rebalance_every: 0,
+            retry: crate::fault::RetryPolicy::default(),
         })
     }
 

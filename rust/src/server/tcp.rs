@@ -1,14 +1,84 @@
 //! TCP listener: thread per connection, JSON line in, JSON line out.
+//!
+//! Hardening (all knobs in [`ServerConfig`]):
+//!
+//! * **Timeouts** — sockets carry read/write timeouts; reads poll at
+//!   the read-timeout granularity so a hung client can never pin a
+//!   handler thread past shutdown, and a client that starts a request
+//!   line but stalls gets a structured [`YocoError::Timeout`] reply.
+//! * **Load shedding** — at most `max_connections` concurrent clients;
+//!   the next one is answered `{"ok":false,"error":"overloaded"}` and
+//!   disconnected instead of queueing without bound.
+//! * **Line limits** — request lines are read through a byte budget
+//!   (`max_line_bytes`), so an adversarial client streaming an endless
+//!   line gets a structured error, not an OOM.
+//! * **Drain on shutdown** — handler threads are tracked and
+//!   [`ServerHandle::shutdown`] joins them under a bounded deadline,
+//!   reporting [`DrainStats`] instead of leaking threads.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::Coordinator;
-use crate::error::Result;
+use crate::error::{Result, YocoError};
+use crate::fault::{self, FaultInjector, InjectionPoint};
+use crate::util::json::Json;
 
-use super::proto::handle_line;
+use super::proto::{error_reply, handle_line};
+
+/// Transport hardening knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Socket read timeout in milliseconds; this is also the poll
+    /// granularity at which idle handlers notice shutdown. 0 disables
+    /// the timeout (handlers then block until the client acts).
+    pub read_timeout_ms: u64,
+    /// Socket write timeout in milliseconds (0 = none).
+    pub write_timeout_ms: u64,
+    /// Concurrent-connection cap; one more client is shed with a
+    /// structured `overloaded` reply. 0 = unlimited.
+    pub max_connections: usize,
+    /// Per-request line budget in bytes; longer lines earn a structured
+    /// error and the excess is discarded up to the next newline.
+    pub max_line_bytes: usize,
+    /// How long a client may take to finish a request line it started
+    /// (0 = forever). On expiry it gets a structured timeout reply and
+    /// the connection closes.
+    pub line_deadline_ms: u64,
+    /// Shutdown drain budget: how long [`ServerHandle::shutdown`] waits
+    /// for in-flight handlers before reporting them leaked.
+    pub drain_deadline_ms: u64,
+    /// Fault injector for chaos tests (None in production; a no-op
+    /// outside `--features fault-injection` builds).
+    pub fault: Option<Arc<FaultInjector>>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            read_timeout_ms: 200,
+            write_timeout_ms: 1000,
+            max_connections: 64,
+            max_line_bytes: 1 << 20,
+            line_deadline_ms: 5000,
+            drain_deadline_ms: 5000,
+            fault: None,
+        }
+    }
+}
+
+/// What [`ServerHandle::shutdown`] managed to drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainStats {
+    /// Handler threads joined cleanly.
+    pub drained: usize,
+    /// Handler threads still running when the drain deadline expired
+    /// (detached; should be 0 whenever read timeouts are enabled).
+    pub leaked: usize,
+}
 
 /// Handle to a running server (for tests and graceful shutdown).
 pub struct ServerHandle {
@@ -17,67 +87,336 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     connections: Arc<AtomicU64>,
+    active: Arc<AtomicUsize>,
+    shed: Arc<AtomicU64>,
+    handlers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    drain_deadline_ms: u64,
 }
 
 impl ServerHandle {
-    /// Total connections accepted so far.
+    /// Total connections accepted so far (shed ones included).
     pub fn connections(&self) -> u64 {
         self.connections.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting and join the accept loop. In-flight connections
-    /// finish their current line.
-    pub fn shutdown(mut self) {
+    /// Connections currently being served.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Connections shed with an `overloaded` reply.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, let in-flight handlers finish their current
+    /// line, and join them under the drain deadline.
+    pub fn shutdown(mut self) -> DrainStats {
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the listener so accept() returns.
+        // Poke the listener so accept() returns and sees the flag.
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        let mut pending = std::mem::take(&mut *self.handlers.lock().unwrap());
+        let deadline = Instant::now() + Duration::from_millis(self.drain_deadline_ms);
+        let mut drained = 0usize;
+        loop {
+            let mut i = 0;
+            while i < pending.len() {
+                if pending[i].is_finished() {
+                    let _ = pending.swap_remove(i).join();
+                    drained += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            if pending.is_empty() || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        DrainStats { drained, leaked: pending.len() }
     }
 }
 
-/// Start serving `coordinator` on `addr` (e.g. "127.0.0.1:7878"; use
-/// port 0 to let the OS pick). Returns immediately with a handle.
+/// Start serving `coordinator` on `addr` with default hardening (e.g.
+/// "127.0.0.1:7878"; use port 0 to let the OS pick). Returns
+/// immediately with a handle.
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<ServerHandle> {
+    serve_with(coordinator, addr, ServerConfig::default())
+}
+
+/// Start serving with explicit [`ServerConfig`] knobs.
+pub fn serve_with(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    cfg: ServerConfig,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let connections = Arc::new(AtomicU64::new(0));
+    let active = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let handlers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let drain_deadline_ms = cfg.drain_deadline_ms;
+
     let stop2 = stop.clone();
     let conns2 = connections.clone();
+    let active2 = active.clone();
+    let shed2 = shed.clone();
+    let handlers2 = handlers.clone();
     let accept_thread = std::thread::spawn(move || {
         for stream in listener.incoming() {
             if stop2.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            conns2.fetch_add(1, Ordering::Relaxed);
+            let conn_id = conns2.fetch_add(1, Ordering::Relaxed);
+            reap_finished(&handlers2);
+            if cfg.max_connections > 0
+                && active2.load(Ordering::SeqCst) >= cfg.max_connections
+            {
+                shed2.fetch_add(1, Ordering::Relaxed);
+                shed_connection(stream, &cfg);
+                continue;
+            }
+            active2.fetch_add(1, Ordering::SeqCst);
             let coord = coordinator.clone();
-            std::thread::spawn(move || {
-                let _ = client_loop(&coord, stream);
+            let cfg = cfg.clone();
+            let stop = stop2.clone();
+            let guard = ConnGuard(active2.clone());
+            let handle = std::thread::spawn(move || {
+                let _guard = guard;
+                let _ = client_loop(&coord, stream, &cfg, &stop, conn_id);
             });
+            handlers2.lock().unwrap().push(handle);
         }
     });
-    Ok(ServerHandle { addr: local, stop, accept_thread: Some(accept_thread), connections })
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        accept_thread: Some(accept_thread),
+        connections,
+        active,
+        shed,
+        handlers,
+        drain_deadline_ms,
+    })
 }
 
-fn client_loop(coordinator: &Coordinator, stream: TcpStream) -> std::io::Result<()> {
-    let peer = stream.peer_addr()?;
+/// Decrements the active-connection gauge when a handler exits, on any
+/// path (including handler panics).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Join handler threads that already finished so the tracked set stays
+/// proportional to *live* connections, not total served.
+fn reap_finished(handlers: &Mutex<Vec<std::thread::JoinHandle<()>>>) {
+    let mut hs = handlers.lock().unwrap();
+    let mut i = 0;
+    while i < hs.len() {
+        if hs[i].is_finished() {
+            let _ = hs.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Reply `{"ok":false,"error":"overloaded"}` to a connection we refuse
+/// to serve, best-effort, and drop it.
+fn shed_connection(mut stream: TcpStream, cfg: &ServerConfig) {
+    if cfg.write_timeout_ms > 0 {
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms)));
+    }
+    let reply = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("overloaded".to_string())),
+    ]);
+    let _ = stream.write_all(reply.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
+}
+
+/// How one bounded line read ended.
+enum LineRead {
+    /// Got a full line (or the final unterminated line before EOF).
+    Complete,
+    /// The line exceeded `max_line_bytes` before any newline.
+    Oversized,
+    /// Clean EOF between lines.
+    Eof,
+    /// The server is shutting down.
+    Shutdown,
+    /// The client stalled mid-line past `line_deadline_ms`.
+    Deadline,
+}
+
+/// Read one `\n`-terminated line into `buf` (raw bytes, so a timeout
+/// that splits a multibyte character loses nothing), spending at most
+/// `max_bytes + 1` bytes and tolerating read-timeout ticks, which
+/// double as shutdown/deadline poll points.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    max_bytes: usize,
+    deadline_ms: u64,
+    stop: &AtomicBool,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut started: Option<Instant> = None;
+    loop {
+        // Budget ≥ 1: overflow is detected the moment len hits max+1.
+        let budget = (max_bytes + 1 - buf.len()) as u64;
+        match reader.by_ref().take(budget).read_until(b'\n', buf) {
+            Ok(0) => {
+                return Ok(if buf.is_empty() { LineRead::Eof } else { LineRead::Complete });
+            }
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    return Ok(LineRead::Complete);
+                }
+                if buf.len() > max_bytes {
+                    return Ok(LineRead::Oversized);
+                }
+                // Partial line before a true EOF; the next iteration
+                // returns Ok(0) and completes it.
+                started.get_or_insert_with(Instant::now);
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(LineRead::Shutdown);
+                }
+                if buf.is_empty() {
+                    continue; // idle between requests: keep waiting
+                }
+                let t0 = *started.get_or_insert_with(Instant::now);
+                if deadline_ms > 0 && t0.elapsed() >= Duration::from_millis(deadline_ms) {
+                    return Ok(LineRead::Deadline);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Discard bytes through the next newline after an oversized line, so
+/// the connection can keep serving subsequent requests. Returns false
+/// on EOF/shutdown.
+fn skip_to_newline(
+    reader: &mut BufReader<TcpStream>,
+    deadline_ms: u64,
+    stop: &AtomicBool,
+) -> std::io::Result<bool> {
+    let start = Instant::now();
+    loop {
+        match reader.fill_buf() {
+            Ok([]) => return Ok(false),
+            Ok(chunk) => {
+                if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+                    reader.consume(pos + 1);
+                    return Ok(true);
+                }
+                let n = chunk.len();
+                reader.consume(n);
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(false);
+                }
+                if deadline_ms > 0
+                    && start.elapsed() >= Duration::from_millis(deadline_ms)
+                {
+                    return Ok(false);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    writer.write_all(reply.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+fn client_loop(
+    coordinator: &Coordinator,
+    stream: TcpStream,
+    cfg: &ServerConfig,
+    stop: &AtomicBool,
+    conn_id: u64,
+) -> std::io::Result<()> {
+    if cfg.read_timeout_ms > 0 {
+        stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)))?;
+    }
+    if cfg.write_timeout_ms > 0 {
+        stream.set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms)))?;
+    }
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut line_no: u64 = 0;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match read_bounded_line(
+            &mut reader,
+            &mut buf,
+            cfg.max_line_bytes,
+            cfg.line_deadline_ms,
+            stop,
+        )? {
+            LineRead::Eof | LineRead::Shutdown => return Ok(()),
+            LineRead::Deadline => {
+                let e = YocoError::timeout("request line", cfg.line_deadline_ms);
+                let _ = write_reply(&mut writer, &error_reply(&e));
+                return Ok(());
+            }
+            LineRead::Oversized => {
+                let e = YocoError::invalid(format!(
+                    "request line exceeds {} bytes",
+                    cfg.max_line_bytes
+                ));
+                write_reply(&mut writer, &error_reply(&e))?;
+                if !skip_to_newline(&mut reader, cfg.line_deadline_ms, stop)? {
+                    return Ok(());
+                }
+                continue;
+            }
+            LineRead::Complete => {}
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
-        let reply = handle_line(coordinator, &line);
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let key = (conn_id << 16) | (line_no & 0xffff);
+        line_no += 1;
+        if fault::fire_keyed(&cfg.fault, InjectionPoint::IoError, key) {
+            return Err(std::io::Error::new(
+                ErrorKind::ConnectionAborted,
+                "injected i/o fault",
+            ));
+        }
+        let reply = handle_line(coordinator, line);
+        if let Some(d) = fault::slow_keyed(&cfg.fault, key) {
+            std::thread::sleep(d);
+        }
+        write_reply(&mut writer, &reply)?;
     }
-    let _ = peer; // quiet until we add per-peer logging
-    Ok(())
 }
 
 #[cfg(test)]
@@ -92,6 +431,7 @@ mod tests {
             queue_capacity: 2,
             chunk_rows: 512,
             rebalance_every: 0,
+            retry: crate::fault::RetryPolicy::default(),
         }))
     }
 
@@ -124,7 +464,8 @@ mod tests {
         assert!(reply.contains("beta"), "{reply}");
         drop(stream);
         assert_eq!(handle.connections(), 1);
-        handle.shutdown();
+        let stats = handle.shutdown();
+        assert_eq!(stats.leaked, 0);
     }
 
     #[test]
@@ -151,6 +492,62 @@ mod tests {
         for i in 0..4 {
             assert!(reply.contains(&format!("d{i}")), "{reply}");
         }
-        handle.shutdown();
+        let stats = handle.shutdown();
+        assert_eq!(stats.leaked, 0);
+    }
+
+    #[test]
+    fn oversized_line_gets_structured_error_and_connection_survives() {
+        let cfg = ServerConfig { max_line_bytes: 4096, ..ServerConfig::default() };
+        let handle = serve_with(coordinator(), "127.0.0.1:0", cfg).unwrap();
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        // 3× the budget, no newline until the end.
+        let huge = format!("{{\"op\":\"ping\",\"pad\":\"{}\"}}", "x".repeat(12_288));
+        let reply = roundtrip(&mut stream, &huge);
+        assert!(reply.contains(r#""ok":false"#), "{reply}");
+        assert!(reply.contains("exceeds 4096 bytes"), "{reply}");
+        // Connection still serves well-formed requests afterwards.
+        let reply = roundtrip(&mut stream, r#"{"op":"ping"}"#);
+        assert!(reply.contains(r#""pong":true"#), "{reply}");
+        let stats = handle.shutdown();
+        assert_eq!(stats.leaked, 0);
+    }
+
+    #[test]
+    fn overload_sheds_with_structured_reply() {
+        let cfg = ServerConfig { max_connections: 2, ..ServerConfig::default() };
+        let handle = serve_with(coordinator(), "127.0.0.1:0", cfg).unwrap();
+        let mut held: Vec<TcpStream> = Vec::new();
+        for _ in 0..2 {
+            let mut s = TcpStream::connect(handle.addr).unwrap();
+            let reply = roundtrip(&mut s, r#"{"op":"ping"}"#);
+            assert!(reply.contains(r#""pong":true"#), "{reply}");
+            held.push(s);
+        }
+        // The (cap+1)th client is shed before its request is read.
+        let extra = TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(extra);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("overloaded"), "{reply}");
+        assert!(reply.contains(r#""ok":false"#), "{reply}");
+        assert_eq!(handle.shed(), 1);
+        drop(held);
+        let stats = handle.shutdown();
+        assert_eq!(stats.leaked, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_idle_connections() {
+        let handle = serve(coordinator(), "127.0.0.1:0").unwrap();
+        // Idle clients sit in the read loop; shutdown must still drain.
+        let _idle: Vec<TcpStream> =
+            (0..3).map(|_| TcpStream::connect(handle.addr).unwrap()).collect();
+        // Give the accept loop time to hand the streams to handlers.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(handle.active(), 3);
+        let stats = handle.shutdown();
+        assert_eq!(stats.leaked, 0, "handlers must notice the stop flag");
+        assert_eq!(stats.drained, 3);
     }
 }

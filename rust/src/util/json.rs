@@ -152,7 +152,7 @@ pub fn parse(input: &str) -> Result<Json> {
     let v = p.value()?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
-        return Err(YocoError::Parse(format!(
+        return Err(YocoError::parse(format!(
             "trailing data at byte {} in JSON",
             p.pos
         )));
@@ -183,7 +183,7 @@ impl<'a> Parser<'a> {
             self.pos += 1;
             Ok(())
         } else {
-            Err(YocoError::Parse(format!(
+            Err(YocoError::parse(format!(
                 "expected '{}' at byte {}",
                 b as char, self.pos
             )))
@@ -199,7 +199,7 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(_) => self.number(),
-            None => Err(YocoError::Parse("unexpected end of JSON".into())),
+            None => Err(YocoError::parse("unexpected end of JSON")),
         }
     }
 
@@ -208,7 +208,7 @@ impl<'a> Parser<'a> {
             self.pos += lit.len();
             Ok(v)
         } else {
-            Err(YocoError::Parse(format!("bad literal at byte {}", self.pos)))
+            Err(YocoError::parse(format!("bad literal at byte {}", self.pos)))
         }
     }
 
@@ -236,7 +236,7 @@ impl<'a> Parser<'a> {
                     return Ok(Json::Obj(map));
                 }
                 _ => {
-                    return Err(YocoError::Parse(format!(
+                    return Err(YocoError::parse(format!(
                         "expected ',' or '}}' at byte {}",
                         self.pos
                     )))
@@ -264,7 +264,7 @@ impl<'a> Parser<'a> {
                     return Ok(Json::Arr(items));
                 }
                 _ => {
-                    return Err(YocoError::Parse(format!(
+                    return Err(YocoError::parse(format!(
                         "expected ',' or ']' at byte {}",
                         self.pos
                     )))
@@ -278,7 +278,7 @@ impl<'a> Parser<'a> {
         let mut out = String::new();
         loop {
             match self.peek() {
-                None => return Err(YocoError::Parse("unterminated string".into())),
+                None => return Err(YocoError::parse("unterminated string")),
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(out);
@@ -296,17 +296,17 @@ impl<'a> Parser<'a> {
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
                             if self.pos + 4 >= self.bytes.len() {
-                                return Err(YocoError::Parse("bad \\u escape".into()));
+                                return Err(YocoError::parse("bad \\u escape"));
                             }
                             let hex =
                                 std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| YocoError::Parse("bad \\u".into()))?;
+                                    .map_err(|_| YocoError::parse("bad \\u"))?;
                             let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| YocoError::Parse("bad \\u".into()))?;
+                                .map_err(|_| YocoError::parse("bad \\u"))?;
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             self.pos += 4;
                         }
-                        _ => return Err(YocoError::Parse("bad escape".into())),
+                        _ => return Err(YocoError::parse("bad escape")),
                     }
                     self.pos += 1;
                 }
@@ -317,7 +317,7 @@ impl<'a> Parser<'a> {
                     let end = (start + len).min(self.bytes.len());
                     out.push_str(
                         std::str::from_utf8(&self.bytes[start..end])
-                            .map_err(|_| YocoError::Parse("bad utf8".into()))?,
+                            .map_err(|_| YocoError::parse("bad utf8"))?,
                     );
                     self.pos = end;
                 }
@@ -335,10 +335,10 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
-            .map_err(|_| YocoError::Parse("bad number".into()))?;
+            .map_err(|_| YocoError::parse("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
-            .map_err(|e| YocoError::Parse(format!("bad number '{text}': {e}")))
+            .map_err(|e| YocoError::parse(format!("bad number '{text}': {e}")))
     }
 }
 

@@ -1,0 +1,213 @@
+//! Chaos suite: the system under deterministic fault injection.
+//!
+//! Everything here runs under `--features fault-injection` (the file is
+//! empty otherwise) and asserts the robustness contracts:
+//!
+//! * supervised pipeline retries are **lossless** — a run that survives
+//!   injected worker panics reproduces the fault-free estimate
+//!   bit-for-bit, because injected panics fire at chunk boundaries and
+//!   retries never double-fold;
+//! * failures that exhaust the retry budget surface as structured
+//!   errors carrying the retry count, never as hangs or bad numbers;
+//! * the TCP server sheds, times out, and drains instead of leaking.
+#![cfg(feature = "fault-injection")]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use yoco::coordinator::Coordinator;
+use yoco::data::gen::{generate_xp, XpConfig};
+use yoco::estimator::{fit_wls_suffstats, CovarianceKind};
+use yoco::fault::{FaultPlan, InjectionPoint, RetryPolicy};
+use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
+use yoco::server::{serve_with, ServerConfig};
+
+fn chaos_cfg(retry: RetryPolicy) -> PipelineConfig {
+    PipelineConfig {
+        workers: 3,
+        virtual_shards: 24,
+        queue_capacity: 2,
+        chunk_rows: 128,
+        rebalance_every: 8,
+        retry,
+    }
+}
+
+fn quick_retry(max_retries: u32) -> RetryPolicy {
+    RetryPolicy { max_retries, backoff_base_ms: 1, backoff_max_ms: 4 }
+}
+
+/// The acceptance contract: WorkerPanic at p = 0.2 with max_retries = 3.
+/// Seeds that complete must match the fault-free estimate bit-for-bit;
+/// seeds that exhaust must say so structurally with the retry count.
+#[test]
+fn pipeline_with_injected_panics_is_bit_for_bit_lossless() {
+    let (batch, _) = generate_xp(&XpConfig { n: 5000, ..Default::default() });
+    let retry = quick_retry(3);
+    let baseline = Pipeline::new(chaos_cfg(retry), PipelineMode::SuffStats)
+        .run_batch(&batch)
+        .unwrap()
+        .into_suffstats()
+        .unwrap();
+    let base_fit =
+        fit_wls_suffstats(&baseline, 0, CovarianceKind::Heteroskedastic).unwrap();
+
+    let mut successes = 0;
+    let mut panics_fired = 0u64;
+    for seed in 0..7u64 {
+        let inj = FaultPlan::new(seed).with(InjectionPoint::WorkerPanic, 0.2).build();
+        let pipe = Pipeline::new(chaos_cfg(retry), PipelineMode::SuffStats)
+            .with_fault_injector(inj.clone());
+        match pipe.run_batch(&batch) {
+            Ok(r) => {
+                let d = r.into_suffstats().unwrap();
+                assert_eq!(d.num_groups(), baseline.num_groups());
+                assert_eq!(d.total_n(), baseline.total_n());
+                let fit =
+                    fit_wls_suffstats(&d, 0, CovarianceKind::Heteroskedastic).unwrap();
+                for (a, b) in fit.beta.iter().zip(&base_fit.beta) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "beta must be bit-identical");
+                }
+                for (a, b) in fit.se().iter().zip(base_fit.se().iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "se must be bit-identical");
+                }
+                successes += 1;
+                let m = pipe.metrics();
+                assert_eq!(m.worker_panics, m.worker_respawns);
+            }
+            Err(e) => {
+                // 0.2^4 per chunk: rare, but when it happens the error
+                // must be structured, not a hang or a panic.
+                assert_eq!(e.retries(), 3, "exhaustion must carry retries: {e}");
+            }
+        }
+        panics_fired += inj.fired(InjectionPoint::WorkerPanic);
+    }
+    assert!(successes >= 3, "only {successes}/7 seeds completed");
+    assert!(panics_fired > 0, "injection never fired — plan misconfigured");
+}
+
+/// Feeder-side drops consume the same per-chunk retry budget and stay
+/// lossless; the fire limit keeps exhaustion structurally impossible
+/// (limit < max_retries + 1), so the run must succeed.
+#[test]
+fn chunk_drops_are_retried_and_lossless() {
+    let (batch, _) = generate_xp(&XpConfig { n: 2000, ..Default::default() });
+    let retry = quick_retry(5);
+    let baseline = Pipeline::new(chaos_cfg(retry), PipelineMode::SuffStats)
+        .run_batch(&batch)
+        .unwrap()
+        .into_suffstats()
+        .unwrap();
+    let inj = FaultPlan::new(3)
+        .with(InjectionPoint::ChunkDrop, 0.5)
+        .with_limit(InjectionPoint::ChunkDrop, 4)
+        .build();
+    let pipe = Pipeline::new(chaos_cfg(retry), PipelineMode::SuffStats)
+        .with_fault_injector(inj.clone());
+    let d = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();
+
+    assert!(inj.fired(InjectionPoint::ChunkDrop) > 0, "drops never fired");
+    assert!(pipe.metrics().chunk_retries > 0);
+    let base = fit_wls_suffstats(&baseline, 0, CovarianceKind::Homoskedastic).unwrap();
+    let got = fit_wls_suffstats(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+    for (a, b) in got.beta.iter().zip(&base.beta) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+fn coordinator() -> Arc<Coordinator> {
+    Arc::new(Coordinator::native_only(PipelineConfig {
+        workers: 2,
+        virtual_shards: 8,
+        queue_capacity: 2,
+        chunk_rows: 512,
+        rebalance_every: 0,
+        retry: RetryPolicy::default(),
+    }))
+}
+
+fn roundtrip(stream: &mut TcpStream, line: &str) -> String {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply
+}
+
+/// An injected I/O fault kills exactly one connection; the server keeps
+/// serving and shuts down without leaking its handler thread.
+#[test]
+fn injected_io_fault_kills_one_connection_not_the_server() {
+    let inj = FaultPlan::new(5)
+        .with(InjectionPoint::IoError, 1.0)
+        .with_limit(InjectionPoint::IoError, 1)
+        .build();
+    let cfg = ServerConfig { fault: Some(inj), ..ServerConfig::default() };
+    let handle = serve_with(coordinator(), "127.0.0.1:0", cfg).unwrap();
+
+    let mut doomed = TcpStream::connect(handle.addr).unwrap();
+    doomed.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    doomed.flush().unwrap();
+    let mut reply = String::new();
+    let n = BufReader::new(doomed).read_line(&mut reply).unwrap();
+    assert_eq!(n, 0, "injected fault must close the connection, got: {reply}");
+
+    let mut survivor = TcpStream::connect(handle.addr).unwrap();
+    let reply = roundtrip(&mut survivor, r#"{"op":"ping"}"#);
+    assert!(reply.contains(r#""pong":true"#), "{reply}");
+
+    let stats = handle.shutdown();
+    assert_eq!(stats.leaked, 0);
+}
+
+/// A slow handler (injected latency) delays its reply but neither
+/// corrupts it nor blocks shutdown past the drain deadline.
+#[test]
+fn slow_worker_fault_delays_replies_but_shutdown_drains() {
+    let inj = FaultPlan::new(9)
+        .with(InjectionPoint::SlowWorker, 1.0)
+        .with_slow_ms(150)
+        .build();
+    let cfg = ServerConfig { fault: Some(inj), ..ServerConfig::default() };
+    let handle = serve_with(coordinator(), "127.0.0.1:0", cfg).unwrap();
+
+    let mut s = TcpStream::connect(handle.addr).unwrap();
+    let t0 = Instant::now();
+    let reply = roundtrip(&mut s, r#"{"op":"ping"}"#);
+    assert!(reply.contains(r#""pong":true"#), "{reply}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(140),
+        "slow fault should have delayed the reply"
+    );
+    drop(s);
+    let stats = handle.shutdown();
+    assert_eq!(stats.leaked, 0);
+}
+
+/// Load shedding under chaos config: the (cap+1)th client gets the
+/// structured overload reply and the server drains cleanly — the
+/// serving-side half of the acceptance contract.
+#[test]
+fn overloaded_server_sheds_and_drains_under_chaos() {
+    let cfg = ServerConfig { max_connections: 2, ..ServerConfig::default() };
+    let handle = serve_with(coordinator(), "127.0.0.1:0", cfg).unwrap();
+    let mut held = Vec::new();
+    for _ in 0..2 {
+        let mut s = TcpStream::connect(handle.addr).unwrap();
+        assert!(roundtrip(&mut s, r#"{"op":"ping"}"#).contains("pong"));
+        held.push(s);
+    }
+    let extra = TcpStream::connect(handle.addr).unwrap();
+    let mut reply = String::new();
+    BufReader::new(extra).read_line(&mut reply).unwrap();
+    assert!(reply.contains(r#""error":"overloaded""#), "{reply}");
+    assert_eq!(handle.shed(), 1);
+    drop(held);
+    let stats = handle.shutdown();
+    assert_eq!(stats.leaked, 0, "shutdown must not leak handler threads");
+}

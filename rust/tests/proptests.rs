@@ -143,6 +143,7 @@ fn prop_pipeline_equals_direct_compression() {
             queue_capacity: 1 + rng.below(3),
             chunk_rows: 64 + rng.below(512),
             rebalance_every: rng.below(16) as u64,
+            retry: yoco::fault::RetryPolicy::default(),
         };
         let pipe = Pipeline::new(cfg, PipelineMode::SuffStats);
         let piped = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();

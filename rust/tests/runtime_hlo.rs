@@ -3,7 +3,9 @@
 //! engine to fp tolerance for every covariance kind.
 //!
 //! Requires `make artifacts` to have run (the Makefile `test` target
-//! guarantees it).
+//! guarantees it) and the `pjrt` feature (this file is empty without
+//! it — default builds carry only the stub engine).
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
