@@ -1,0 +1,219 @@
+"""Reference-lane benchmark: the numpy analog of the Rust bench binaries.
+
+Emits ``BENCH_pipeline.json`` / ``BENCH_estimator.json`` in the same
+schema as ``yoco::util::bench::BenchSuite`` but with ``engine:
+"python-ref"`` — a locally-runnable perf trajectory for environments
+without a Rust toolchain. The rust-native artifacts with the same names
+are produced by the CI ``bench-smoke`` job and uploaded as the
+``bench-trajectory`` workflow artifact; EXPERIMENTS.md §Perf records
+which lane each number came from.
+
+The cases mirror the Rust benches semantically:
+
+* ``normal_equations/seed_composition`` — materialize the G×P feature
+  matrix as a fresh copy (the seed's ``feature_matrix()`` +
+  ``sums_for()`` allocations), then Gram + xty in two passes.
+* ``normal_equations/fused`` — Gram + xty straight off the resident
+  compressed storage, no intermediate materialization.
+* end-to-end WLS + logistic-IRLS fits from sufficient statistics.
+* shard merge: dict-based left-fold vs index-once + vectorized fill
+  (the analog of ``CompressedData::merge_many``).
+
+Run from the repo root: ``python3 python/bench_ref.py [--quick]``.
+"""
+
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def bench(name, f, target_s=0.4, max_iters=200):
+    """Warmup then repeated timing; same summary stats as util::bench."""
+    t0 = time.perf_counter()
+    warm = 0
+    while warm < 3 or time.perf_counter() - t0 < 0.05:
+        f()
+        warm += 1
+        if warm > 1000:
+            break
+    per = (time.perf_counter() - t0) / warm
+    iters = max(5, min(max_iters, int(target_s / max(per, 1e-9))))
+    samples = []
+    for _ in range(iters):
+        t = time.perf_counter()
+        f()
+        samples.append(time.perf_counter() - t)
+    samples.sort()
+    n = len(samples)
+    return {
+        "name": name,
+        "median_ms": samples[n // 2] * 1e3,
+        "p95_ms": samples[max(0, -(-n * 95 // 100) - 1)] * 1e3,
+        "mean_ms": sum(samples) / n * 1e3,
+        "min_ms": samples[0] * 1e3,
+        "iters": n,
+    }
+
+
+def with_throughput(rec, rows=None, groups=None):
+    med_s = rec["median_ms"] / 1e3
+    if rows is not None:
+        rec["rows"] = rows
+        rec["mrows_per_s"] = rows / med_s / 1e6
+    if groups is not None:
+        rec["groups"] = groups
+        rec["groups_per_s"] = groups / med_s
+    return rec
+
+
+def synth(n, p, groups, seed=42):
+    """Dummy-coded design over `groups` cells, two outcomes."""
+    rng = np.random.default_rng(seed)
+    cell = rng.integers(0, groups, size=n)
+    x = np.ones((n, p))
+    for j in range(1, p):
+        x[:, j] = (cell >> (j - 1)) & 1
+    lin = x @ (0.2 * (np.arange(p) - 1.0))
+    y0 = (rng.random(n) < 1.0 / (1.0 + np.exp(-lin))).astype(float)
+    y1 = lin + rng.standard_normal(n)
+    return cell, x, np.stack([y0, y1], axis=1)
+
+
+def compress(cell, x, y):
+    """Group by cell id (cells are in bijection with feature vectors)."""
+    uniq, inv = np.unique(cell, return_inverse=True)
+    g = len(uniq)
+    feats = np.zeros((g, x.shape[1]))
+    np.minimum.at(feats, inv, x)  # every row in a cell is identical
+    np.maximum.at(feats, inv, x)
+    counts = np.bincount(inv, minlength=g).astype(float)
+    sums = np.zeros((g, y.shape[1]))
+    sumsqs = np.zeros((g, y.shape[1]))
+    for k in range(y.shape[1]):
+        sums[:, k] = np.bincount(inv, weights=y[:, k], minlength=g)
+        sumsqs[:, k] = np.bincount(inv, weights=y[:, k] ** 2, minlength=g)
+    return feats, counts, sums, sumsqs
+
+
+def main():
+    quick = "--quick" in sys.argv
+    n = 100_000 if quick else 1_000_000
+    p, groups = 12, 2048
+    cell, x, y = synth(n, p, groups)
+    feats, counts, sums, sumsqs = compress(cell, x, y)
+    g = feats.shape[0]
+    print(f"n={n} p={p} G={g} (engine python-ref)")
+
+    est = []
+
+    # Seed composition: fresh copies of M̃ and ỹ' (the allocations the
+    # fused Rust kernel eliminates), then two passes.
+    def composition():
+        m = np.array(feats, copy=True)
+        s = np.array(sums[:, 1], copy=True)
+        gram = (m.T * counts) @ m
+        xty = m.T @ s
+        return gram, xty
+
+    def fused():
+        gram = (feats.T * counts) @ feats
+        xty = feats.T @ sums[:, 1]
+        return gram, xty
+
+    gs, xs = composition()
+    gf, xf = fused()
+    assert np.array_equal(gs, gf) and np.array_equal(xs, xf)
+    est.append(with_throughput(bench("normal_equations/seed_composition", composition), n, g))
+    est.append(with_throughput(bench("normal_equations/fused", fused), n, g))
+
+    def wls_hc0():
+        gram = (feats.T * counts) @ feats
+        xty = feats.T @ sums[:, 1]
+        beta = np.linalg.solve(gram, xty)
+        bread = np.linalg.inv(gram)
+        yhat = feats @ beta
+        rss = yhat * yhat * counts - 2.0 * yhat * sums[:, 1] + sumsqs[:, 1]
+        meat = (feats.T * rss) @ feats
+        return bread @ meat @ bread
+
+    est.append(with_throughput(bench("fit_wls_suffstats/hc0", wls_hc0), n, g))
+
+    def logistic_irls():
+        beta = np.zeros(p)
+        for _ in range(50):
+            mu = 1.0 / (1.0 + np.exp(-(feats @ beta)))
+            grad = feats.T @ (sums[:, 0] - counts * mu)
+            w = counts * mu * (1.0 - mu)
+            hess = (feats.T * w) @ feats
+            step = np.linalg.solve(hess, grad)
+            beta = beta + step
+            if np.max(np.abs(step)) < 1e-10:
+                break
+        return beta
+
+    est.append(with_throughput(bench("fit_logistic_suffstats/irls", logistic_irls), n, g))
+
+    # Shard merge: dict left-fold vs index-once + vectorized fill.
+    k_shards = 8
+    shards = []
+    for s in range(k_shards):
+        idx = np.arange(s, n, k_shards)
+        shards.append(compress(cell[idx], x[idx], y[idx]) + (np.unique(cell[idx]),))
+
+    def left_fold():
+        acc = {}
+        for f_, c_, s_, q_, keys in shards:
+            for i, key in enumerate(keys):
+                if key in acc:
+                    fc, cc, sc, qc = acc[key]
+                    acc[key] = (fc, cc + c_[i], sc + s_[i], qc + q_[i])
+                else:
+                    acc[key] = (f_[i], c_[i], s_[i], q_[i])
+        return len(acc)
+
+    def indexed_merge():
+        slot = {}
+        for _, _, _, _, keys in shards:
+            for key in keys:
+                if key not in slot:
+                    slot[key] = len(slot)
+        gm = len(slot)
+        counts_o = np.zeros(gm)
+        sums_o = np.zeros((gm, 2))
+        sumsqs_o = np.zeros((gm, 2))
+        for _, c_, s_, q_, keys in shards:
+            rows = np.fromiter((slot[k] for k in keys), dtype=np.int64, count=len(keys))
+            counts_o[rows] += c_
+            sums_o[rows] += s_
+            sumsqs_o[rows] += q_
+        return gm
+
+    assert left_fold() == indexed_merge() == g
+    est.append(with_throughput(bench("merge/left_fold_seq", left_fold), n, g))
+    est.append(with_throughput(bench("merge/indexed_fill", indexed_merge), n, g))
+
+    # Pipeline suite: single-pass compression throughput (the numpy
+    # analog of Pipeline::run_batch in SuffStats mode).
+    pipe = [
+        with_throughput(bench("compress/unique_groupby", lambda: compress(cell, x, y)), n, g)
+    ]
+
+    for suite, records, path in (
+        ("estimator", est, "BENCH_estimator.json"),
+        ("pipeline", pipe, "BENCH_pipeline.json"),
+    ):
+        doc = {"suite": suite, "engine": "python-ref", "records": records}
+        with open(path, "w") as fh:
+            json.dump(doc, fh, indent=1)
+        print(f"wrote {path}:")
+        for r in records:
+            extra = ""
+            if "mrows_per_s" in r:
+                extra = f"  {r['mrows_per_s']:8.1f} Mrows/s"
+            print(f"  {r['name']:<40} {r['median_ms']:10.3f} ms (p95 {r['p95_ms']:.3f}){extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+//! Fused compressed-estimation kernels vs the seed composition, plus
+//! end-to-end fits on a 1M-row compressed workload and the parallel
+//! shard merge vs the sequential left-fold.
+//!
+//! Emits `BENCH_estimator.json` (median/p95, Mrows/s, groups/s) so the
+//! perf trajectory is machine-comparable across PRs — see
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench estimator_kernels` (`--quick` for CI smoke).
+
+use yoco::compress::{CompressedData, SuffStatsCompressor};
+use yoco::estimator::{
+    fit_logistic_suffstats, fit_wls_suffstats, gram_xtwx_xtwy, CovarianceKind,
+    LogisticOptions,
+};
+use yoco::linalg::{gram_weighted, matvec};
+use yoco::util::bench::{bench, black_box, report, BenchSuite};
+use yoco::util::rng::Rng;
+
+/// Synthetic dummy-coded design: `groups` distinct feature cells of
+/// width `p`, outcome 0 binary (for logistic), outcome 1 continuous.
+fn synth_rows(n: usize, p: usize, groups: usize, seed: u64) -> Vec<(Vec<f64>, [f64; 2])> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let cell = rng.below(groups);
+            let mut m = vec![0.0; p];
+            m[0] = 1.0;
+            for (j, mj) in m.iter_mut().enumerate().skip(1) {
+                *mj = ((cell >> (j - 1)) & 1) as f64;
+            }
+            let lin = m.iter().enumerate().map(|(j, v)| v * 0.2 * (j as f64 - 1.0)).sum::<f64>();
+            let y0 = if rng.f64() < 1.0 / (1.0 + (-lin).exp()) { 1.0 } else { 0.0 };
+            let y1 = lin + rng.normal();
+            (m, [y0, y1])
+        })
+        .collect()
+}
+
+fn compress(rows: &[(Vec<f64>, [f64; 2])], p: usize) -> CompressedData {
+    let mut c = SuffStatsCompressor::new(p, 2);
+    for (m, y) in rows {
+        c.push(m, y);
+    }
+    c.finish()
+}
+
+/// The pre-fusion path: materialize M̃, then gram + matvec of Mᵀ.
+fn seed_composition(data: &CompressedData, outcome: usize) -> (yoco::linalg::Matrix, Vec<f64>) {
+    let m = data.feature_matrix();
+    let gram = gram_weighted(&m, data.counts());
+    let xty = matvec(&m.transpose(), &data.sums_for(outcome));
+    (gram, xty)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 100_000 } else { 1_000_000 };
+    let p = 12;
+    let groups = 2048;
+    println!("=== estimator kernels, n={n}, p={p}, target G={groups} ===\n");
+
+    let rows = synth_rows(n, p, groups, 42);
+    let data = compress(&rows, p);
+    let g = data.num_groups() as u64;
+    println!("compressed to G={g} groups\n");
+    let mut suite = BenchSuite::new("estimator");
+
+    // -- fused normal-equations kernel vs seed composition --
+    let r = bench("gram_xtwx_xtwy/seed_composition", || {
+        black_box(seed_composition(&data, 1))
+    });
+    report(&r);
+    suite.push_groups(r, g, Some(n as u64));
+    let r = bench("gram_xtwx_xtwy/fused", || black_box(gram_xtwx_xtwy(&data, 1).unwrap()));
+    report(&r);
+    suite.push_groups(r, g, Some(n as u64));
+    // Sanity: the two paths agree bit-for-bit (also pinned by unit tests).
+    {
+        let (gs, xs) = seed_composition(&data, 1);
+        let (gf, xf) = gram_xtwx_xtwy(&data, 1).unwrap();
+        assert_eq!(gs.as_slice(), gf.as_slice());
+        assert_eq!(xs, xf);
+    }
+
+    // -- end-to-end fits from the compressed representation --
+    let r = bench("fit_wls_suffstats/hc0", || {
+        black_box(fit_wls_suffstats(&data, 1, CovarianceKind::Heteroskedastic).unwrap())
+    });
+    report(&r);
+    suite.push_groups(r, g, Some(n as u64));
+
+    let opts = LogisticOptions::default();
+    let r = bench("fit_logistic_suffstats/irls", || {
+        black_box(fit_logistic_suffstats(&data, 0, &opts).unwrap())
+    });
+    report(&r);
+    suite.push_groups(r, g, Some(n as u64));
+
+    // -- parallel shard merge vs sequential left-fold --
+    let shards_k = 8;
+    let shards: Vec<CompressedData> = (0..shards_k)
+        .map(|s| {
+            let slice: Vec<_> =
+                rows.iter().skip(s).step_by(shards_k).cloned().collect();
+            compress(&slice, p)
+        })
+        .collect();
+    let r = bench("merge/left_fold_seq", || {
+        let mut acc = shards[0].clone();
+        for s in &shards[1..] {
+            acc.merge(s).unwrap();
+        }
+        black_box(acc)
+    });
+    report(&r);
+    suite.push_groups(r, g, Some(n as u64));
+    for threads in [2usize, 4, 8] {
+        let r = bench(&format!("merge/merge_many_t{threads}"), || {
+            black_box(CompressedData::merge_many(&shards, threads).unwrap())
+        });
+        report(&r);
+        suite.push_groups(r, g, Some(n as u64));
+    }
+
+    match suite.write_json("BENCH_estimator.json") {
+        Ok(()) => println!("\nwrote BENCH_estimator.json ({} records)", suite.len()),
+        Err(e) => eprintln!("\nBENCH_estimator.json not written: {e}"),
+    }
+}

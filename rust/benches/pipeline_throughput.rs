@@ -5,17 +5,21 @@
 //! compression makes 50M-row datasets tractable interactively — ingest
 //! throughput is what bounds "compress once".
 //!
-//! Run: `cargo bench --bench pipeline_throughput`.
+//! Emits `BENCH_pipeline.json` (median/p95, Mrows/s) for the perf
+//! trajectory — see EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench pipeline_throughput` (`--quick` for CI smoke).
 
 use yoco::data::gen::{generate_xp, XpConfig};
 use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
-use yoco::util::bench::{bench, black_box, report};
+use yoco::util::bench::{bench, black_box, report, BenchSuite};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let n = if quick { 200_000 } else { 1_000_000 };
     let (batch, _) = generate_xp(&XpConfig { n, outcomes: 2, ..Default::default() });
     println!("=== pipeline throughput, n={n} ===\n");
+    let mut suite = BenchSuite::new("pipeline");
 
     println!("-- worker scaling (chunk=8192) --");
     for workers in [1usize, 2, 4, 8] {
@@ -36,6 +40,7 @@ fn main() {
             "    -> {:.1} Mrows/s",
             n as f64 / r.median.as_secs_f64() / 1e6
         );
+        suite.push_rows(r, n as u64);
     }
 
     println!("\n-- chunk-size sweep (workers=4) --");
@@ -53,6 +58,7 @@ fn main() {
             black_box(pipe.run_batch(&batch).unwrap())
         });
         report(&r);
+        suite.push_rows(r, n as u64);
     }
 
     println!("\n-- backpressure: tiny queues must not deadlock, only stall --");
@@ -62,7 +68,7 @@ fn main() {
         queue_capacity: 1,
         chunk_rows: 1024,
         rebalance_every: 0,
-            retry: yoco::fault::RetryPolicy::default(),
+        retry: yoco::fault::RetryPolicy::default(),
     };
     let pipe = Pipeline::new(cfg, PipelineMode::SuffStats);
     let result = pipe.run_batch(&batch).unwrap().into_suffstats().unwrap();
@@ -73,4 +79,9 @@ fn main() {
         m.producer_stalls,
         m.chunks_in
     );
+
+    match suite.write_json("BENCH_pipeline.json") {
+        Ok(()) => println!("\nwrote BENCH_pipeline.json ({} records)", suite.len()),
+        Err(e) => eprintln!("\nBENCH_pipeline.json not written: {e}"),
+    }
 }

@@ -36,7 +36,7 @@ pub use cluster_within::WithinClusterCompressor;
 pub use fweight::{FWeightCompressed, FWeightCompressor};
 pub use groups::{GroupMeansCompressed, GroupMeansCompressor};
 pub use key::{hash_row, FeatureKey, FxHasherBuilder};
-pub use sufficient::{CompressedData, SuffStatsCompressor};
+pub use sufficient::{CompressedData, ShardMerger, SuffStatsCompressor};
 pub use weighted::{WeightedCompressedData, WeightedSuffStatsCompressor};
 
 use crate::data::Batch;

@@ -111,9 +111,31 @@ impl CompressedData {
         (0..self.num_groups()).map(|g| self.sumsq(g, k)).collect()
     }
 
-    /// The feature matrix M̃ as a [`Matrix`] (G × p).
+    /// The feature matrix M̃ as a [`Matrix`] (G × p). Clones the storage;
+    /// prefer [`features`](Self::features) when a borrow suffices.
     pub fn feature_matrix(&self) -> Matrix {
         Matrix::from_vec(self.num_groups(), self.p, self.features.clone())
+    }
+
+    /// Row-major `G × p` feature storage M̃, borrowed. The fused
+    /// estimator kernels stream this directly instead of cloning a
+    /// [`Matrix`] per fit.
+    #[inline]
+    pub fn features(&self) -> &[f64] {
+        &self.features
+    }
+
+    /// Row-major `G × o` storage of ỹ', borrowed (group `g`, outcome `k`
+    /// at index `g·o + k`).
+    #[inline]
+    pub fn sums(&self) -> &[f64] {
+        &self.sums
+    }
+
+    /// Row-major `G × o` storage of ỹ'', borrowed.
+    #[inline]
+    pub fn sumsqs(&self) -> &[f64] {
+        &self.sumsqs
     }
 
     /// §5.3.1 cluster assignment per group, when compressed within clusters.
@@ -141,6 +163,142 @@ impl CompressedData {
     /// requires agreement on each shared group's cluster (guaranteed when
     /// sharding by cluster or by feature key including the cluster id).
     pub fn merge(&mut self, other: &CompressedData) -> Result<()> {
+        self.check_mergeable(other)?;
+        let placeholder = CompressedData::from_parts(
+            self.p,
+            self.o,
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            0,
+            self.cluster_of.as_ref().map(|_| Vec::new()),
+            0,
+        );
+        let own = std::mem::replace(self, placeholder);
+        let mut merger = ShardMerger::new(own);
+        merger.fold(other).expect("shapes pre-checked");
+        *self = merger.finish();
+        Ok(())
+    }
+
+    /// Merge `K` shard compressions in one call, filling the output in
+    /// parallel with up to `threads` OS threads.
+    ///
+    /// Two phases: a cheap sequential scan assigns every (shard, group)
+    /// pair an output slot in first-occurrence order — exactly the group
+    /// order a sequential left-fold produces — then the slot space is
+    /// split into contiguous ranges and each range's statistics are
+    /// accumulated by one thread, **in shard order** per slot. Because
+    /// each output element keeps a single accumulator visited in the
+    /// same order as the sequential fold, the result is byte-identical
+    /// to `fold(merge)` for *all* inputs, not just exactly-summable ones
+    /// (no pairwise-tree reassociation of fp adds).
+    ///
+    /// Shards must each have unique group keys (any compressor output
+    /// does; so does any merge output).
+    pub fn merge_many(shards: &[CompressedData], threads: usize) -> Result<CompressedData> {
+        let first = shards
+            .first()
+            .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
+        let (p, o) = (first.p, first.o);
+        let tagged = first.cluster_of.is_some();
+        for s in &shards[1..] {
+            first.check_mergeable(s)?;
+        }
+
+        // Phase 1: slot assignment, first-occurrence order.
+        let total_groups: usize = shards.iter().map(|s| s.num_groups()).sum();
+        let mut index: HashMap<FeatureKey, u32, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(total_groups * 2, FxHasherBuilder);
+        let mut scratch = Vec::new();
+        let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
+        let mut g_out: u32 = 0;
+        for s in shards {
+            let mut shard_slots = Vec::with_capacity(s.num_groups());
+            for g in 0..s.num_groups() {
+                s.key_words_into(g, s.cluster_of.as_ref().map(|c| c[g]), &mut scratch);
+                let slot = match index.get(scratch.as_slice()) {
+                    Some(&sl) => sl,
+                    None => {
+                        let sl = g_out;
+                        index.insert(FeatureKey::from_words(&scratch), sl);
+                        g_out += 1;
+                        sl
+                    }
+                };
+                shard_slots.push(slot);
+            }
+            slots.push(shard_slots);
+        }
+        let g_out = g_out as usize;
+
+        // Phase 2: fill the output arrays, one contiguous slot range per
+        // thread (disjoint &mut chunks — no locks, no atomics).
+        let mut features = vec![0.0; g_out * p];
+        let mut counts = vec![0.0; g_out];
+        let mut sums = vec![0.0; g_out * o];
+        let mut sumsqs = vec![0.0; g_out * o];
+        let mut cluster = vec![0u32; if tagged { g_out } else { 0 }];
+
+        let threads = threads.clamp(1, g_out.max(1));
+        if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
+            fill_slot_range(
+                shards,
+                &slots,
+                p,
+                o,
+                0,
+                g_out,
+                &mut features,
+                &mut counts,
+                &mut sums,
+                &mut sumsqs,
+                &mut cluster,
+            );
+        } else {
+            let per = g_out.div_ceil(threads);
+            let slots_ref = &slots;
+            std::thread::scope(|scope| {
+                let mut f_it = features.chunks_mut((per * p).max(1));
+                let mut c_it = counts.chunks_mut(per);
+                let mut s_it = sums.chunks_mut((per * o).max(1));
+                let mut q_it = sumsqs.chunks_mut((per * o).max(1));
+                let mut t_it = cluster.chunks_mut(per);
+                let mut lo = 0usize;
+                while lo < g_out {
+                    let hi = (lo + per).min(g_out);
+                    let f = f_it.next().unwrap_or(&mut []);
+                    let c = c_it.next().unwrap_or(&mut []);
+                    let s = s_it.next().unwrap_or(&mut []);
+                    let q = q_it.next().unwrap_or(&mut []);
+                    let t = t_it.next().unwrap_or(&mut []);
+                    scope.spawn(move || {
+                        fill_slot_range(shards, slots_ref, p, o, lo, hi, f, c, s, q, t)
+                    });
+                    lo = hi;
+                }
+            });
+        }
+
+        let total_n = shards.iter().map(|s| s.total_n).sum();
+        let num_clusters = shards.iter().map(|s| s.num_clusters).max().unwrap_or(0);
+        Ok(CompressedData::from_parts(
+            p,
+            o,
+            features,
+            counts,
+            sums,
+            sumsqs,
+            total_n,
+            tagged.then_some(cluster),
+            num_clusters,
+        ))
+    }
+
+    /// Shape/tagging compatibility check shared by every merge entry
+    /// point, done *before* any state is touched.
+    fn check_mergeable(&self, other: &CompressedData) -> Result<()> {
         if self.p != other.p || self.o != other.o {
             return Err(YocoError::shape(format!(
                 "merge shape mismatch: ({}, {}) vs ({}, {})",
@@ -152,54 +310,16 @@ impl CompressedData {
                 "cannot merge cluster-tagged with untagged compression",
             ));
         }
-        // Index existing groups by key.
-        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
-            HashMap::with_capacity_and_hasher(self.num_groups() * 2, FxHasherBuilder);
-        for g in 0..self.num_groups() {
-            index.insert(self.key_of(g, self.cluster_of.as_ref().map(|c| c[g])), g);
-        }
-        for g in 0..other.num_groups() {
-            let oc = other.cluster_of.as_ref().map(|c| c[g]);
-            let key = other.key_of(g, oc);
-            match index.get(&key) {
-                Some(&mine) => {
-                    self.counts[mine] += other.counts[g];
-                    for k in 0..self.o {
-                        self.sums[mine * self.o + k] += other.sums[g * other.o + k];
-                        self.sumsqs[mine * self.o + k] += other.sumsqs[g * other.o + k];
-                    }
-                }
-                None => {
-                    let mine = self.num_groups();
-                    self.features.extend_from_slice(other.feature_row(g));
-                    self.counts.push(other.counts[g]);
-                    for k in 0..self.o {
-                        self.sums.push(other.sums[g * other.o + k]);
-                        self.sumsqs.push(other.sumsqs[g * other.o + k]);
-                    }
-                    if let Some(c) = self.cluster_of.as_mut() {
-                        c.push(oc.expect("tagged merge checked above"));
-                    }
-                    index.insert(key, mine);
-                }
-            }
-        }
-        self.total_n += other.total_n;
-        self.num_clusters = self.num_clusters.max(other.num_clusters);
         Ok(())
     }
 
-    /// Group key: features plus (for cluster-tagged data) the cluster id.
-    fn key_of(&self, g: usize, cluster: Option<u32>) -> FeatureKey {
-        let row = self.feature_row(g);
-        match cluster {
-            None => FeatureKey::from_row(row),
-            Some(c) => {
-                let mut ext = Vec::with_capacity(row.len() + 1);
-                ext.extend_from_slice(row);
-                ext.push(c as f64);
-                FeatureKey::from_row(&ext)
-            }
+    /// Canonicalized key words for group `g` (features plus, for
+    /// cluster-tagged data, the cluster id) written into a reusable
+    /// buffer — the allocation-free twin of the old per-key `Vec` path.
+    fn key_words_into(&self, g: usize, cluster: Option<u32>, out: &mut Vec<u64>) {
+        super::key::canonicalize_into(self.feature_row(g), out);
+        if let Some(c) = cluster {
+            out.push((c as f64).to_bits());
         }
     }
 
@@ -286,6 +406,137 @@ impl CompressedData {
             cluster_of: self.cluster_of.clone(),
             num_clusters: self.num_clusters,
         }
+    }
+}
+
+/// Below this many output groups the parallel fill's thread spawn costs
+/// more than the copy it distributes; fall back to a single pass.
+const PARALLEL_MERGE_MIN_GROUPS: usize = 1024;
+
+/// Accumulate every shard's contribution to output slots `[lo, hi)`.
+///
+/// The slices are the output arrays *for this range only* (`counts[0]`
+/// is slot `lo`). First occurrence of a slot copies the shard's record;
+/// later occurrences add — visiting shards in order, which reproduces
+/// the sequential left-fold's accumulation order exactly.
+#[allow(clippy::too_many_arguments)]
+fn fill_slot_range(
+    shards: &[CompressedData],
+    slots: &[Vec<u32>],
+    p: usize,
+    o: usize,
+    lo: usize,
+    hi: usize,
+    features: &mut [f64],
+    counts: &mut [f64],
+    sums: &mut [f64],
+    sumsqs: &mut [f64],
+    cluster: &mut [u32],
+) {
+    let mut seen = vec![false; hi - lo];
+    for (s, shard_slots) in shards.iter().zip(slots) {
+        for (g, &slot) in shard_slots.iter().enumerate() {
+            let slot = slot as usize;
+            if slot < lo || slot >= hi {
+                continue;
+            }
+            let j = slot - lo;
+            if seen[j] {
+                counts[j] += s.counts[g];
+                for k in 0..o {
+                    sums[j * o + k] += s.sums[g * o + k];
+                    sumsqs[j * o + k] += s.sumsqs[g * o + k];
+                }
+            } else {
+                seen[j] = true;
+                features[j * p..(j + 1) * p].copy_from_slice(s.feature_row(g));
+                counts[j] = s.counts[g];
+                sums[j * o..(j + 1) * o].copy_from_slice(&s.sums[g * o..(g + 1) * o]);
+                sumsqs[j * o..(j + 1) * o]
+                    .copy_from_slice(&s.sumsqs[g * o..(g + 1) * o]);
+                if let Some(c) = &s.cluster_of {
+                    cluster[j] = c[g];
+                }
+            }
+        }
+    }
+}
+
+/// Sequential shard accumulator with a **persistent key index**: builds
+/// the `HashMap` once from the first shard and reuses it across every
+/// [`fold`](Self::fold), instead of rebuilding it per merge call the way
+/// repeated [`CompressedData::merge`] does. The pipeline's end-of-run
+/// merge folds K worker results; with the old path that was K index
+/// rebuilds over an ever-growing accumulator.
+pub struct ShardMerger {
+    acc: CompressedData,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    scratch: Vec<u64>,
+}
+
+impl ShardMerger {
+    /// Start from the first shard (consumed — it becomes the accumulator).
+    pub fn new(first: CompressedData) -> Self {
+        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(first.num_groups() * 2, FxHasherBuilder);
+        let mut scratch = Vec::new();
+        for g in 0..first.num_groups() {
+            first.key_words_into(g, first.cluster_of.as_ref().map(|c| c[g]), &mut scratch);
+            index.insert(FeatureKey::from_words(&scratch), g);
+        }
+        ShardMerger { acc: first, index, scratch }
+    }
+
+    /// Fold one more shard into the accumulator (left-fold order).
+    pub fn fold(&mut self, other: &CompressedData) -> Result<()> {
+        self.acc.check_mergeable(other)?;
+        let o = self.acc.o;
+        // Pre-reserve for the worst case (all of `other`'s groups new).
+        let extra = other.num_groups();
+        self.index.reserve(extra);
+        self.acc.features.reserve(extra * self.acc.p);
+        self.acc.counts.reserve(extra);
+        self.acc.sums.reserve(extra * o);
+        self.acc.sumsqs.reserve(extra * o);
+        for g in 0..other.num_groups() {
+            let oc = other.cluster_of.as_ref().map(|c| c[g]);
+            other.key_words_into(g, oc, &mut self.scratch);
+            match self.index.get(self.scratch.as_slice()) {
+                Some(&mine) => {
+                    self.acc.counts[mine] += other.counts[g];
+                    for k in 0..o {
+                        self.acc.sums[mine * o + k] += other.sums[g * o + k];
+                        self.acc.sumsqs[mine * o + k] += other.sumsqs[g * o + k];
+                    }
+                }
+                None => {
+                    let mine = self.acc.num_groups();
+                    self.acc.features.extend_from_slice(other.feature_row(g));
+                    self.acc.counts.push(other.counts[g]);
+                    for k in 0..o {
+                        self.acc.sums.push(other.sums[g * o + k]);
+                        self.acc.sumsqs.push(other.sumsqs[g * o + k]);
+                    }
+                    if let Some(c) = self.acc.cluster_of.as_mut() {
+                        c.push(oc.expect("tagged merge checked above"));
+                    }
+                    self.index.insert(FeatureKey::from_words(&self.scratch), mine);
+                }
+            }
+        }
+        self.acc.total_n += other.total_n;
+        self.acc.num_clusters = self.acc.num_clusters.max(other.num_clusters);
+        Ok(())
+    }
+
+    /// Groups accumulated so far.
+    pub fn num_groups(&self) -> usize {
+        self.acc.num_groups()
+    }
+
+    /// Finish, yielding the merged compression.
+    pub fn finish(self) -> CompressedData {
+        self.acc
     }
 }
 
@@ -395,17 +646,15 @@ impl SuffStatsCompressor {
         count: f64,
         cluster: Option<u32>,
     ) {
-        let key = match cluster {
-            None => FeatureKey::from_row(features),
-            Some(c) => {
-                let mut ext = Vec::with_capacity(features.len() + 1);
-                ext.extend_from_slice(features);
-                ext.push(c as f64);
-                FeatureKey::from_row(&ext)
-            }
-        };
+        // Same scratch-probe discipline as `push_inner`: a key is only
+        // allocated for new groups, so re-keying sweeps (projection,
+        // binning) stay allocation-free in the steady state.
+        super::key::canonicalize_into(features, &mut self.scratch);
+        if let Some(c) = cluster {
+            self.scratch.push((c as f64).to_bits());
+        }
         let o = self.o;
-        let g = match self.index.get(&key) {
+        let g = match self.index.get(self.scratch.as_slice()) {
             Some(&g) => g,
             None => {
                 let g = self.counts.len();
@@ -417,7 +666,7 @@ impl SuffStatsCompressor {
                     self.cluster_of.push(c);
                     self.max_cluster = self.max_cluster.max(c);
                 }
-                self.index.insert(key, g);
+                self.index.insert(FeatureKey::from_words(&self.scratch), g);
                 g
             }
         };
@@ -505,49 +754,176 @@ mod tests {
         assert_eq!(d.sumsq(0, 1), 500.0);
     }
 
+    /// Deterministic pseudo-random f64 with a full-precision mantissa:
+    /// sums of these are NOT exactly representable, so byte-identity
+    /// tests catch any fp reassociation in the merge paths.
+    fn pseudo(i: usize) -> f64 {
+        let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xabcd);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+    }
+
+    /// Sorted (key-bits, stat-bits) pairs — order-independent comparison.
+    fn sorted_stats(c: &CompressedData) -> Vec<(Vec<u64>, Vec<u64>)> {
+        let mut v: Vec<(Vec<u64>, Vec<u64>)> = (0..c.num_groups())
+            .map(|g| {
+                let key: Vec<u64> =
+                    c.feature_row(g).iter().map(|v| v.to_bits()).collect();
+                let mut vals = vec![c.counts()[g].to_bits()];
+                for k in 0..c.num_outcomes() {
+                    vals.push(c.sum(g, k).to_bits());
+                    vals.push(c.sumsq(g, k).to_bits());
+                }
+                (key, vals)
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Full byte-level equality, including group order.
+    fn assert_bytes_eq(a: &CompressedData, b: &CompressedData) {
+        assert_eq!(a.p, b.p);
+        assert_eq!(a.o, b.o);
+        assert_eq!(a.total_n, b.total_n);
+        assert_eq!(a.num_clusters, b.num_clusters);
+        assert_eq!(a.cluster_of, b.cluster_of);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.features), bits(&b.features));
+        assert_eq!(bits(&a.counts), bits(&b.counts));
+        assert_eq!(bits(&a.sums), bits(&b.sums));
+        assert_eq!(bits(&a.sumsqs), bits(&b.sumsqs));
+    }
+
+    /// Round-robin the rows into `k` shard compressions.
+    fn shards_of(rows: &[(Vec<f64>, f64)], k: usize) -> Vec<CompressedData> {
+        let mut cs: Vec<SuffStatsCompressor> =
+            (0..k).map(|_| SuffStatsCompressor::new(rows[0].0.len(), 1)).collect();
+        for (i, (m, y)) in rows.iter().enumerate() {
+            cs[i % k].push(m, &[*y]);
+        }
+        cs.into_iter().map(|c| c.finish()).collect()
+    }
+
+    /// Sequential left-fold reference.
+    fn left_fold(shards: &[CompressedData]) -> CompressedData {
+        let mut acc = shards[0].clone();
+        for s in &shards[1..] {
+            acc.merge(s).unwrap();
+        }
+        acc
+    }
+
     #[test]
     fn merge_is_equivalent_to_single_pass() {
-        let rows: Vec<(Vec<f64>, f64)> = (0..100)
+        // K shards, shuffled shard order: fold and parallel merge both
+        // collapse to the same records as one single-pass compression.
+        let rows: Vec<(Vec<f64>, f64)> = (0..120)
             .map(|i| (vec![(i % 5) as f64, (i % 3) as f64], i as f64 * 0.5))
             .collect();
-        // Single pass.
         let mut one = SuffStatsCompressor::new(2, 1);
         for (m, y) in &rows {
             one.push(m, &[*y]);
         }
         let one = one.finish();
-        // Two shards merged.
-        let mut a = SuffStatsCompressor::new(2, 1);
-        let mut b = SuffStatsCompressor::new(2, 1);
-        for (i, (m, y)) in rows.iter().enumerate() {
-            if i % 2 == 0 {
-                a.push(m, &[*y]);
-            } else {
-                b.push(m, &[*y]);
+        for k in [2usize, 3, 8] {
+            let mut shards = shards_of(&rows, k);
+            // Shuffle shard order deterministically.
+            let mut rng = crate::util::rng::Rng::seed_from_u64(k as u64);
+            for i in (1..shards.len()).rev() {
+                shards.swap(i, rng.below(i + 1));
+            }
+            let folded = left_fold(&shards);
+            assert_eq!(folded.total_n(), one.total_n());
+            assert_eq!(folded.num_groups(), one.num_groups());
+            // y values here are multiples of 0.5 — sums are exact, so
+            // even the *values* (not just the sets) match single-pass.
+            assert_eq!(sorted_stats(&folded), sorted_stats(&one));
+            let parallel = CompressedData::merge_many(&shards, 4).unwrap();
+            assert_eq!(sorted_stats(&parallel), sorted_stats(&one));
+        }
+    }
+
+    #[test]
+    fn parallel_merge_byte_identical_to_left_fold() {
+        // Full-mantissa outcomes: inexact sums, so this pins the exact
+        // accumulation order, not just the values up to reassociation.
+        let rows: Vec<(Vec<f64>, f64)> = (0..400)
+            .map(|i| (vec![(i % 7) as f64, (i % 4) as f64], pseudo(i)))
+            .collect();
+        for k in [2usize, 3, 8] {
+            let mut shards = shards_of(&rows, k);
+            let mut rng = crate::util::rng::Rng::seed_from_u64(1000 + k as u64);
+            for i in (1..shards.len()).rev() {
+                shards.swap(i, rng.below(i + 1));
+            }
+            for threads in [1usize, 4] {
+                let parallel = CompressedData::merge_many(&shards, threads).unwrap();
+                assert_bytes_eq(&parallel, &left_fold(&shards));
             }
         }
-        let mut merged = a.finish();
-        merged.merge(&b.finish()).unwrap();
-        assert_eq!(merged.total_n(), one.total_n());
-        assert_eq!(merged.num_groups(), one.num_groups());
-        // Group order may differ; compare via sorted (key, stats) pairs.
-        let stats = |c: &CompressedData| {
-            let mut v: Vec<(Vec<u64>, Vec<u64>)> = (0..c.num_groups())
-                .map(|g| {
-                    let key: Vec<u64> =
-                        c.feature_row(g).iter().map(|v| v.to_bits()).collect();
-                    let vals = vec![
-                        c.counts()[g].to_bits(),
-                        c.sum(g, 0).to_bits(),
-                        c.sumsq(g, 0).to_bits(),
-                    ];
-                    (key, vals)
-                })
-                .collect();
-            v.sort();
-            v
-        };
-        assert_eq!(stats(&merged), stats(&one));
+    }
+
+    #[test]
+    fn parallel_merge_large_crosses_thread_ranges() {
+        // Enough distinct groups to engage the threaded fill (≥ the
+        // PARALLEL_MERGE_MIN_GROUPS cutoff) with keys overlapping across
+        // shards.
+        let rows: Vec<(Vec<f64>, f64)> = (0..12_000)
+            .map(|i| (vec![(i % 2500) as f64, (i % 2) as f64], pseudo(i)))
+            .collect();
+        let shards = shards_of(&rows, 5);
+        let total_shard_groups: usize = shards.iter().map(|s| s.num_groups()).sum();
+        let folded = left_fold(&shards);
+        assert!(folded.num_groups() >= PARALLEL_MERGE_MIN_GROUPS);
+        assert!(total_shard_groups > folded.num_groups(), "keys must overlap");
+        for threads in [2usize, 3, 8] {
+            let parallel = CompressedData::merge_many(&shards, threads).unwrap();
+            assert_bytes_eq(&parallel, &folded);
+        }
+    }
+
+    #[test]
+    fn parallel_merge_clustered_byte_identical() {
+        let mut shards = Vec::new();
+        for sh in 0..3u64 {
+            let mut c = SuffStatsCompressor::new(2, 1).with_cluster_tags();
+            for i in 0..200usize {
+                let cl = (i % 10) as u32;
+                c.push_clustered(
+                    &[(i % 4) as f64, (cl % 3) as f64],
+                    &[pseudo(i + 1000 * sh as usize)],
+                    cl,
+                );
+            }
+            shards.push(c.finish());
+        }
+        let parallel = CompressedData::merge_many(&shards, 4).unwrap();
+        assert_bytes_eq(&parallel, &left_fold(&shards));
+        assert!(parallel.cluster_of().is_some());
+        assert_eq!(parallel.num_clusters(), 10);
+    }
+
+    #[test]
+    fn shard_merger_matches_repeated_merge() {
+        let rows: Vec<(Vec<f64>, f64)> =
+            (0..300).map(|i| (vec![(i % 6) as f64], pseudo(i))).collect();
+        let shards = shards_of(&rows, 4);
+        let mut m = ShardMerger::new(shards[0].clone());
+        for s in &shards[1..] {
+            m.fold(s).unwrap();
+        }
+        assert_eq!(m.num_groups(), 6);
+        assert_bytes_eq(&m.finish(), &left_fold(&shards));
+    }
+
+    #[test]
+    fn merge_many_rejects_bad_input() {
+        assert!(CompressedData::merge_many(&[], 4).is_err());
+        let a = SuffStatsCompressor::new(2, 1).finish();
+        let b = SuffStatsCompressor::new(3, 1).finish();
+        assert!(CompressedData::merge_many(&[a.clone(), b], 4).is_err());
+        let tagged = SuffStatsCompressor::new(2, 1).with_cluster_tags().finish();
+        assert!(CompressedData::merge_many(&[a, tagged], 4).is_err());
     }
 
     #[test]

@@ -65,9 +65,23 @@ impl WeightedCompressedData {
         &self.features[g * self.p..(g + 1) * self.p]
     }
 
-    /// The feature matrix M̃.
+    /// The feature matrix M̃. Clones the storage; prefer
+    /// [`features`](Self::features) when a borrow suffices.
     pub fn feature_matrix(&self) -> Matrix {
         Matrix::from_vec(self.num_groups(), self.p, self.features.clone())
+    }
+
+    /// Row-major `G × p` feature storage, borrowed.
+    #[inline]
+    pub fn features(&self) -> &[f64] {
+        &self.features
+    }
+
+    /// Row-major `G × o` Σ w y storage, borrowed (group `g`, outcome `k`
+    /// at index `g·o + k`).
+    #[inline]
+    pub fn wys(&self) -> &[f64] {
+        &self.wy
     }
 
     /// Group weights w̃ = Σ w (the WLS weights).

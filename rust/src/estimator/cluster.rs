@@ -4,7 +4,10 @@
 use super::fit::{cr1_factor, CovarianceKind, Fit};
 use crate::compress::{BetweenClusterCompressed, ClusterStaticCompressed};
 use crate::error::{Result, YocoError};
-use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
+use crate::linalg::{
+    accumulate_rank1_packed, axpy, outer_product_accumulate, packed_upper_len, sandwich,
+    unpack_symmetric, Cholesky, Matrix,
+};
 
 /// Fit with cluster-robust covariance from §5.3.2 between-cluster
 /// compression.
@@ -22,35 +25,22 @@ pub fn fit_between_cluster(data: &BetweenClusterCompressed) -> Result<Fit> {
         return Err(YocoError::invalid(format!("n={n} <= p={p}")));
     }
 
-    // Gram = Σ_g n_g M_gᵀM_g ; xty = Σ_g M_gᵀ s_y.
-    let mut gram = Matrix::zeros(p, p);
+    // Gram = Σ_g n_g M_gᵀM_g ; xty = Σ_g M_gᵀ s_y — packed rank-1
+    // microkernel per row, same accumulation order as the scalar loop.
+    let mut packed = vec![0.0; packed_upper_len(p)];
     let mut xty = vec![0.0; p];
     for grp in data.groups() {
         let mg = &grp.features;
-        let t = mg.rows();
-        for r in 0..t {
+        for r in 0..mg.rows() {
             let row = mg.row(r);
-            for a in 0..p {
-                let va = grp.n_clusters * row[a];
-                if va == 0.0 {
-                    continue;
-                }
-                let grow = gram.row_mut(a);
-                for b in a..p {
-                    grow[b] += va * row[b];
-                }
-            }
+            accumulate_rank1_packed(&mut packed, row, grp.n_clusters);
             let sy = grp.y_sum[r];
-            for a in 0..p {
-                xty[a] += row[a] * sy;
+            if sy != 0.0 {
+                axpy(&mut xty, row, sy);
             }
         }
     }
-    for a in 0..p {
-        for b in (a + 1)..p {
-            gram[(b, a)] = gram[(a, b)];
-        }
-    }
+    let gram = unpack_symmetric(&packed, p);
     let chol = Cholesky::new(&gram)?;
     let beta = chol.solve_vec(&xty)?;
     let bread = chol.inverse()?;

@@ -11,9 +11,10 @@
 //! ñ_g μ_g (1 − μ_g). The uncompressed fit is the ñ = 1 special case, so
 //! compressed and uncompressed estimates agree to solver tolerance.
 
+use super::kernels::{logistic_info_ll, logistic_irls_pass};
 use crate::compress::CompressedData;
 use crate::error::{Result, YocoError};
-use crate::linalg::{outer_product_accumulate, Cholesky, Matrix};
+use crate::linalg::{packed_upper_len, unpack_symmetric, Cholesky, Matrix};
 
 /// Options for the IRLS solver.
 #[derive(Debug, Clone, Copy)]
@@ -57,59 +58,47 @@ impl LogisticFit {
     }
 }
 
-#[inline]
-fn sigmoid(z: f64) -> f64 {
-    if z >= 0.0 {
-        1.0 / (1.0 + (-z).exp())
-    } else {
-        let e = z.exp();
-        e / (1.0 + e)
-    }
-}
-
-/// Core IRLS over (features, successes ỹ', trials ñ) triples.
-fn irls<'a, F>(
-    rows: F,
-    g_count: usize,
+/// Core IRLS over parallel slices: row-major `G × p` features,
+/// successes ỹ' and trials ñ. Each Newton step is one fused pass
+/// ([`logistic_irls_pass`]) accumulating the score and the packed-upper-
+/// triangle Fisher information — the buffers are allocated once and
+/// zeroed per iteration, so the per-iteration cost is pure kernel time.
+fn irls(
+    feats: &[f64],
     p: usize,
+    succ: &[f64],
+    trials: &[f64],
     total_n: u64,
     opts: &LogisticOptions,
-) -> Result<LogisticFit>
-where
-    F: Fn(usize) -> (&'a [f64], f64, f64), // (features, y', n)
-{
+) -> Result<LogisticFit> {
+    let g_count = trials.len();
+    debug_assert_eq!(feats.len(), g_count * p);
+    debug_assert_eq!(succ.len(), g_count);
     let mut beta = vec![0.0; p];
+    let mut grad = vec![0.0; p];
+    let mut packed = vec![0.0; packed_upper_len(p)];
     let mut iterations = 0;
     loop {
         if iterations >= opts.max_iter {
             return Err(YocoError::NoConvergence { iters: iterations, delta: f64::NAN });
         }
         iterations += 1;
-        let mut grad = vec![0.0; p];
-        let mut hess = Matrix::zeros(p, p);
-        for g in 0..g_count {
-            let (row, yp, ng) = rows(g);
-            let mut z = 0.0;
-            for a in 0..p {
-                z += row[a] * beta[a];
-            }
-            let mu = sigmoid(z);
-            let resid = yp - ng * mu;
-            let w = ng * mu * (1.0 - mu);
-            for a in 0..p {
-                grad[a] += row[a] * resid;
-            }
-            outer_product_accumulate(&mut hess, row, w);
-        }
+        grad.iter_mut().for_each(|v| *v = 0.0);
+        packed.iter_mut().for_each(|v| *v = 0.0);
+        logistic_irls_pass(feats, p, succ, trials, &beta, &mut grad, &mut packed);
         if opts.ridge > 0.0 {
             // Proper L2 penalty: −(ridge/2)‖β‖² added to the likelihood,
             // so both the gradient and the Hessian see it (a Hessian-only
-            // ridge would not regularize separation).
+            // ridge would not regularize separation). The Hessian diagonal
+            // lives at the start of each packed row: offset a·p − a(a−1)/2.
+            let mut off = 0;
             for a in 0..p {
                 grad[a] -= opts.ridge * beta[a];
-                hess[(a, a)] += opts.ridge;
+                packed[off] += opts.ridge;
+                off += p - a;
             }
         }
+        let hess = unpack_symmetric(&packed, p);
         let chol = Cholesky::new(&hess)?;
         let step = chol.solve_vec(&grad)?;
         let mut max_step: f64 = 0.0;
@@ -119,23 +108,9 @@ where
         }
         if max_step < opts.tol {
             // Final covariance and likelihood at the solution.
-            let mut hess = Matrix::zeros(p, p);
-            let mut ll = 0.0;
-            for g in 0..g_count {
-                let (row, yp, ng) = rows(g);
-                let mut z = 0.0;
-                for a in 0..p {
-                    z += row[a] * beta[a];
-                }
-                let mu = sigmoid(z);
-                let w = ng * mu * (1.0 - mu);
-                outer_product_accumulate(&mut hess, row, w);
-                // Stable log terms.
-                let log_mu = -(1.0 + (-z).exp()).ln().min(f64::MAX);
-                let log_1mu = -z + log_mu;
-                ll += yp * log_mu + (ng - yp) * log_1mu;
-            }
-            let cov = Cholesky::new(&hess)?.inverse()?;
+            packed.iter_mut().for_each(|v| *v = 0.0);
+            let ll = logistic_info_ll(feats, p, succ, trials, &beta, &mut packed);
+            let cov = Cholesky::new(&unpack_symmetric(&packed, p))?.inverse()?;
             return Ok(LogisticFit {
                 beta,
                 cov,
@@ -167,10 +142,16 @@ pub fn fit_logistic_suffstats(
         }
     }
     let p = data.num_features();
-    let g_count = data.num_groups();
-    let counts = data.counts();
-    let rows = |g: usize| (data.feature_row(g), data.sum(g, outcome), counts[g]);
-    irls(rows, g_count, p, data.total_n(), opts)
+    // Borrow ỹ' directly for single-outcome data; gather only when the
+    // outcome column is strided across a multi-outcome layout.
+    let gathered;
+    let succ: &[f64] = if data.num_outcomes() == 1 {
+        data.sums()
+    } else {
+        gathered = data.sums_for(outcome);
+        &gathered
+    };
+    irls(data.features(), p, succ, data.counts(), data.total_n(), opts)
 }
 
 /// Fit logistic regression on raw observations (oracle / baseline).
@@ -187,14 +168,15 @@ pub fn fit_logistic(
         return Err(YocoError::invalid("logistic outcome must be 0/1"));
     }
     let p = m.cols();
-    let rows = |i: usize| (m.row(i), y[i], 1.0);
-    irls(rows, n, p, n as u64, opts)
+    let trials = vec![1.0; n];
+    irls(m.as_slice(), p, y, &trials, n as u64, opts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compress::SuffStatsCompressor;
+    use crate::estimator::kernels::sigmoid;
 
     fn noise(i: usize) -> f64 {
         ((i.wrapping_mul(2654435761)) % 1000) as f64 / 1000.0

@@ -18,6 +18,7 @@ mod balanced_panel;
 mod cluster;
 mod fit;
 mod groups;
+mod kernels;
 mod logistic;
 mod ols;
 mod sgd;
@@ -29,6 +30,7 @@ pub use balanced_panel::{fit_balanced_panel, PanelModel};
 pub use cluster::{fit_between_cluster, fit_cluster_static};
 pub use fit::{cr1_factor, CovarianceKind, Fit, WeightKind};
 pub use groups::fit_group_means;
+pub use kernels::gram_xtwx_xtwy;
 pub use logistic::{fit_logistic, fit_logistic_suffstats, LogisticFit, LogisticOptions};
 pub use ols::fit_ols;
 pub use sgd::{fit_sgd, fit_sgd_compressed, SgdOptions};

@@ -4,7 +4,7 @@
 
 use super::fit::{cr1_factor, CovarianceKind, Fit};
 use crate::error::{Result, YocoError};
-use crate::linalg::{gram, matvec, outer_product_accumulate, sandwich, Cholesky, Matrix};
+use crate::linalg::{gram_xtx_xty, matvec, outer_product_accumulate, sandwich, Cholesky, Matrix};
 
 /// Fit OLS on raw observations.
 ///
@@ -25,17 +25,9 @@ pub fn fit_ols(
     if n <= p {
         return Err(YocoError::invalid(format!("n={n} <= p={p}")));
     }
-    // β̂ = (MᵀM)⁻¹ Mᵀy
-    let g = gram(m);
+    // β̂ = (MᵀM)⁻¹ Mᵀy — Gram and cross-moment in one streamed pass.
+    let (g, xty) = gram_xtx_xty(m, y);
     let chol = Cholesky::new(&g)?;
-    let mut xty = vec![0.0; p];
-    for i in 0..n {
-        let row = m.row(i);
-        let yi = y[i];
-        for j in 0..p {
-            xty[j] += row[j] * yi;
-        }
-    }
     let beta = chol.solve_vec(&xty)?;
     let bread = chol.inverse()?;
 

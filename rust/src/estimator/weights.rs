@@ -8,6 +8,7 @@
 //! Σw − p for frequency weights (the paper's noted exception).
 
 use super::fit::{CovarianceKind, Fit, WeightKind};
+use super::kernels::{dot, normal_equations};
 use crate::compress::WeightedCompressedData;
 use crate::error::{Result, YocoError};
 use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
@@ -33,45 +34,19 @@ pub fn fit_weighted_suffstats(
         return Err(YocoError::invalid(format!("non-positive dof {dof}")));
     }
 
+    // Fused (M̃ᵀ diag(w̃) M̃, M̃ᵀ ỹ'(w)) over the borrowed storage.
     let w = data.weights();
-    let mut gram = Matrix::zeros(p, p);
-    let mut xty = vec![0.0; p];
-    for g in 0..g_count {
-        let row = data.feature_row(g);
-        let wg = w[g];
-        if wg == 0.0 {
-            continue;
-        }
-        for a in 0..p {
-            let va = wg * row[a];
-            if va == 0.0 {
-                continue;
-            }
-            let grow = gram.row_mut(a);
-            for b in a..p {
-                grow[b] += va * row[b];
-            }
-        }
-        let s = data.wy(g, outcome);
-        for a in 0..p {
-            xty[a] += row[a] * s;
-        }
-    }
-    for a in 0..p {
-        for b in (a + 1)..p {
-            gram[(b, a)] = gram[(a, b)];
-        }
-    }
+    let feats = data.features();
+    let wys = data.wys();
+    let o = data.num_outcomes();
+    let (gram, xty) =
+        normal_equations(feats, p, |g| w[g], |g| wys[g * o + outcome]);
     let chol = Cholesky::new(&gram)?;
     let beta = chol.solve_vec(&xty)?;
     let bread = chol.inverse()?;
 
-    let fitted: Vec<f64> = (0..g_count)
-        .map(|g| {
-            let row = data.feature_row(g);
-            row.iter().zip(&beta).map(|(a, b)| a * b).sum()
-        })
-        .collect();
+    let fitted: Vec<f64> =
+        (0..g_count).map(|g| dot(&feats[g * p..(g + 1) * p], &beta)).collect();
 
     let (cov, sigma2) = match kind {
         CovarianceKind::Homoskedastic => {

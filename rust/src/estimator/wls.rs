@@ -11,6 +11,7 @@
 //!     with ẽ'_g = ỹ'_g − ñ_g ŷ̃_g.
 
 use super::fit::{cr1_factor, CovarianceKind, Fit};
+use super::kernels::{dot, gram_xtwx_xtwy};
 use crate::compress::CompressedData;
 use crate::error::{Result, YocoError};
 use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
@@ -33,50 +34,20 @@ pub fn fit_wls_suffstats(
         return Err(YocoError::invalid(format!("n={n} <= p={p}")));
     }
 
-    // Bread: M̃ᵀ diag(ñ) M̃ and cross-moment M̃ᵀ ỹ'.
+    // Bread: M̃ᵀ diag(ñ) M̃ and cross-moment M̃ᵀ ỹ', in one fused pass
+    // over the compressed storage (no feature-matrix clone).
     let counts = data.counts();
-    let mut gram = Matrix::zeros(p, p);
-    let mut xty = vec![0.0; p];
-    for g in 0..g_count {
-        let row = data.feature_row(g);
-        let ng = counts[g];
-        if ng == 0.0 {
-            continue;
-        }
-        for a in 0..p {
-            let va = ng * row[a];
-            if va == 0.0 {
-                continue;
-            }
-            let grow = gram.row_mut(a);
-            for b in a..p {
-                grow[b] += va * row[b];
-            }
-        }
-        let s = data.sum(g, outcome);
-        for a in 0..p {
-            xty[a] += row[a] * s;
-        }
-    }
-    for a in 0..p {
-        for b in (a + 1)..p {
-            gram[(b, a)] = gram[(a, b)];
-        }
-    }
+    let (gram, xty) = gram_xtwx_xtwy(data, outcome)?;
 
     let chol = Cholesky::new(&gram)?;
     let beta = chol.solve_vec(&xty)?;
     let bread = chol.inverse()?;
 
     // Per-group fitted values and residual statistics.
+    let feats = data.features();
     let mut fitted = vec![0.0; g_count];
     for g in 0..g_count {
-        let row = data.feature_row(g);
-        let mut s = 0.0;
-        for a in 0..p {
-            s += row[a] * beta[a];
-        }
-        fitted[g] = s;
+        fitted[g] = dot(&feats[g * p..(g + 1) * p], &beta);
     }
 
     let (cov, sigma2, clusters_used) = match kind {

@@ -336,7 +336,7 @@ pub fn slow_keyed(inj: &Option<Arc<FaultInjector>>, key: u64) -> Option<Duration
 /// supervisor and the coordinator's runtime dispatch. This is
 /// *supervision* configuration, not injection: it is always compiled
 /// and active, with or without the `fault-injection` feature.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RetryPolicy {
     /// Retries allowed after the first attempt (so `max_retries = 3`
     /// means up to 4 attempts total).
@@ -345,29 +345,47 @@ pub struct RetryPolicy {
     pub backoff_base_ms: u64,
     /// Upper bound on a single backoff sleep.
     pub backoff_max_ms: u64,
+    /// Jitter fraction in `[0, 1]`: the computed backoff is scaled by a
+    /// factor drawn deterministically from the attempt counter, uniform
+    /// in `[1 − jitter, 1]`. Decorrelates retry storms when many workers
+    /// trip at once, without sacrificing reproducibility (the same
+    /// attempt always sleeps the same duration).
+    pub jitter: f64,
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        RetryPolicy { max_retries: 3, backoff_base_ms: 1, backoff_max_ms: 50 }
+        RetryPolicy { max_retries: 3, backoff_base_ms: 1, backoff_max_ms: 50, jitter: 0.25 }
     }
 }
 
 impl RetryPolicy {
     /// A policy that never retries.
     pub fn none() -> Self {
-        RetryPolicy { max_retries: 0, backoff_base_ms: 0, backoff_max_ms: 0 }
+        RetryPolicy { max_retries: 0, backoff_base_ms: 0, backoff_max_ms: 0, jitter: 0.0 }
     }
 
     /// Backoff to sleep before attempt number `attempt` (1-based retry
-    /// index). Exponential with cap: `base · 2^(attempt-1)`, ≤ max.
+    /// index). Exponential with cap — `base · 2^(attempt-1)`, ≤ max —
+    /// then scaled into `[ms·(1−jitter), ms]` by a deterministic hash of
+    /// the attempt counter.
     pub fn backoff(&self, attempt: u32) -> Duration {
         if self.backoff_base_ms == 0 || attempt == 0 {
             return Duration::ZERO;
         }
         let exp = attempt.saturating_sub(1).min(16);
         let ms = self.backoff_base_ms.saturating_mul(1u64 << exp).min(self.backoff_max_ms);
-        Duration::from_millis(ms)
+        if self.jitter <= 0.0 {
+            return Duration::from_millis(ms);
+        }
+        // splitmix64 of the attempt counter → u uniform in [0, 1).
+        let mut z = (attempt as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        let scale = 1.0 - self.jitter.min(1.0) * u;
+        Duration::from_nanos((ms as f64 * 1e6 * scale) as u64)
     }
 }
 
@@ -377,13 +395,46 @@ mod tests {
 
     #[test]
     fn backoff_doubles_and_caps() {
-        let p = RetryPolicy { max_retries: 5, backoff_base_ms: 2, backoff_max_ms: 9 };
+        let p = RetryPolicy {
+            max_retries: 5,
+            backoff_base_ms: 2,
+            backoff_max_ms: 9,
+            jitter: 0.0,
+        };
         assert_eq!(p.backoff(0), Duration::ZERO);
         assert_eq!(p.backoff(1), Duration::from_millis(2));
         assert_eq!(p.backoff(2), Duration::from_millis(4));
         assert_eq!(p.backoff(3), Duration::from_millis(8));
         assert_eq!(p.backoff(4), Duration::from_millis(9)); // capped
         assert_eq!(RetryPolicy::none().backoff(3), Duration::ZERO);
+    }
+
+    #[test]
+    fn jittered_backoff_stays_in_bounds_and_is_deterministic() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            backoff_base_ms: 4,
+            backoff_max_ms: 1000,
+            jitter: 0.5,
+        };
+        let mut distinct = std::collections::HashSet::new();
+        for attempt in 1..=8u32 {
+            let exp = (attempt - 1).min(16);
+            let ms = 4u64 << exp;
+            let d = p.backoff(attempt);
+            // Scaled into [ms·(1−jitter), ms].
+            let lo = Duration::from_nanos((ms as f64 * 1e6 * 0.5) as u64);
+            let hi = Duration::from_millis(ms);
+            assert!(d >= lo && d <= hi, "attempt {attempt}: {d:?} ∉ [{lo:?}, {hi:?}]");
+            // Same attempt → same delay, every time.
+            assert_eq!(d, p.backoff(attempt));
+            distinct.insert(d);
+        }
+        // The hash actually varies across attempts (not a constant scale).
+        assert!(distinct.len() > 4, "jitter should vary: {distinct:?}");
+        // jitter = 0 keeps the exact exponential schedule.
+        let exact = RetryPolicy { jitter: 0.0, ..p };
+        assert_eq!(exact.backoff(3), Duration::from_millis(16));
     }
 
     #[test]

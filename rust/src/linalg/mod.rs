@@ -15,5 +15,7 @@ mod ops;
 pub use cholesky::Cholesky;
 pub use matrix::Matrix;
 pub use ops::{
-    gram, gram_weighted, matmul, matvec, outer_product_accumulate, sandwich, weighted_xty,
+    accumulate_rank1_packed, axpy, gram, gram_weighted, gram_weighted_rows, gram_xtx_xty,
+    matmul, matvec, outer_product_accumulate, packed_upper_len, sandwich, unpack_symmetric,
+    weighted_xty,
 };

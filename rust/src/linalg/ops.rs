@@ -6,30 +6,58 @@
 
 use super::Matrix;
 
+/// Number of k-rows of `B` kept hot per tile in [`matmul`]. 64 rows × up
+/// to a few hundred f64 columns stays comfortably inside L1/L2.
+const MATMUL_K_TILE: usize = 64;
+
 /// `C = A · B`. Panics on inner-dimension mismatch.
 ///
-/// ikj loop order keeps the inner loop contiguous over both `B`'s row and
-/// `C`'s row, which autovectorizes well for the small/medium shapes the
-/// estimators use.
+/// Tiled over the inner (k) dimension so a block of `B` rows stays cache-
+/// resident while every row of `A` streams past it, with a 4-wide unrolled
+/// update over `C`'s row. Per element the accumulation still visits k in
+/// increasing order, so results are bit-identical to the naive ikj loop.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul inner dimension mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        for kk in 0..k {
-            let aik = arow[kk];
-            if aik == 0.0 {
-                continue; // one-hot / padded inputs are mostly zeros
-            }
-            let brow = b.row(kk);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + MATMUL_K_TILE).min(k);
+        for i in 0..m {
+            let arow = a.row(i);
             let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+            for kk in k0..k1 {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue; // one-hot / padded inputs are mostly zeros
+                }
+                let brow = b.row(kk);
+                axpy(crow, brow, aik);
             }
         }
+        k0 = k1;
     }
     c
+}
+
+/// `dst += s · src`, 4-wide unrolled. Elements are independent, so the
+/// unroll is bit-identical to the scalar loop.
+#[inline]
+pub fn axpy(dst: &mut [f64], src: &[f64], s: f64) {
+    let n = dst.len();
+    let quads = n / 4 * 4;
+    let mut j = 0;
+    while j < quads {
+        dst[j] += s * src[j];
+        dst[j + 1] += s * src[j + 1];
+        dst[j + 2] += s * src[j + 2];
+        dst[j + 3] += s * src[j + 3];
+        j += 4;
+    }
+    while j < n {
+        dst[j] += s * src[j];
+        j += 1;
+    }
 }
 
 /// `y = A · x`.
@@ -49,44 +77,102 @@ pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
 
 /// Unweighted Gram `MᵀM`.
 pub fn gram(m: &Matrix) -> Matrix {
-    gram_weighted_impl(m, None)
+    gram_weighted_impl(m.as_slice(), m.cols(), None)
 }
 
 /// Weighted Gram `Mᵀ diag(w) M` — the "bread⁻¹" of every estimator in the
 /// paper, computed over compressed records with ñ (or w̃) as weights.
 pub fn gram_weighted(m: &Matrix, w: &[f64]) -> Matrix {
     assert_eq!(m.rows(), w.len(), "gram_weighted weight length mismatch");
-    gram_weighted_impl(m, Some(w))
+    gram_weighted_impl(m.as_slice(), m.cols(), Some(w))
 }
 
-fn gram_weighted_impl(m: &Matrix, w: Option<&[f64]>) -> Matrix {
-    let (n, p) = (m.rows(), m.cols());
-    let mut g = Matrix::zeros(p, p);
-    // Accumulate the upper triangle row-by-row: rank-1 update per record.
+/// Weighted Gram straight from a row-major `n × p` slice — the borrow-only
+/// twin of [`gram_weighted`] used by the fused estimator kernels, which
+/// read [`CompressedData`](crate::compress::CompressedData)'s storage
+/// without materializing a `Matrix`.
+pub fn gram_weighted_rows(rows: &[f64], p: usize, w: &[f64]) -> Matrix {
+    assert!(p > 0 && rows.len() == w.len() * p, "gram_weighted_rows shape mismatch");
+    gram_weighted_impl(rows, p, Some(w))
+}
+
+fn gram_weighted_impl(rows: &[f64], p: usize, w: Option<&[f64]>) -> Matrix {
+    let n = if p == 0 { 0 } else { rows.len() / p };
+    let mut packed = vec![0.0; packed_upper_len(p)];
     for i in 0..n {
-        let row = m.row(i);
         let wi = w.map_or(1.0, |w| w[i]);
-        if wi == 0.0 {
-            continue; // zero-weight padding rows are exact no-ops
-        }
-        for a in 0..p {
-            let va = wi * row[a];
-            if va == 0.0 {
-                continue;
-            }
-            let grow = g.row_mut(a);
-            for b in a..p {
-                grow[b] += va * row[b];
-            }
-        }
+        accumulate_rank1_packed(&mut packed, &rows[i * p..(i + 1) * p], wi);
     }
-    // Mirror to the lower triangle.
+    unpack_symmetric(&packed, p)
+}
+
+/// Length of the packed upper triangle of a `p × p` symmetric matrix.
+#[inline]
+pub fn packed_upper_len(p: usize) -> usize {
+    p * (p + 1) / 2
+}
+
+/// Rank-1 update `G += w · row rowᵀ` on the packed upper triangle
+/// (`packed[off(a) + b − a]` holds `G[a][b]`, `b ≥ a`, with
+/// `off(a) = a·p − a(a−1)/2` and `p` recovered from the buffer length).
+///
+/// This is the Gram microkernel: for each `a`, the surviving inner loop is
+/// a contiguous 4-wide-unrolled axpy over `row[a..]` into a contiguous
+/// packed segment — no row-length branches, no lower-triangle traffic.
+/// Each packed element keeps a single accumulator updated in record
+/// order, so results are bit-identical to the scalar rank-1 loop.
+#[inline]
+pub fn accumulate_rank1_packed(packed: &mut [f64], row: &[f64], w: f64) {
+    if w == 0.0 {
+        return; // zero-weight padding rows are exact no-ops
+    }
+    let p = row.len();
+    debug_assert_eq!(packed.len(), packed_upper_len(p));
+    let mut off = 0usize;
     for a in 0..p {
-        for b in (a + 1)..p {
-            g[(b, a)] = g[(a, b)];
+        let len = p - a;
+        let va = w * row[a];
+        if va == 0.0 {
+            off += len;
+            continue;
         }
+        axpy(&mut packed[off..off + len], &row[a..], va);
+        off += len;
+    }
+}
+
+/// Expand a packed upper triangle into a full symmetric [`Matrix`].
+pub fn unpack_symmetric(packed: &[f64], p: usize) -> Matrix {
+    debug_assert_eq!(packed.len(), packed_upper_len(p));
+    let mut g = Matrix::zeros(p, p);
+    let mut off = 0usize;
+    for a in 0..p {
+        for b in a..p {
+            let v = packed[off + b - a];
+            g[(a, b)] = v;
+            g[(b, a)] = v;
+        }
+        off += p - a;
     }
     g
+}
+
+/// Fused `(MᵀM, Mᵀy)` in one pass over the rows — OLS's normal equations
+/// with the design matrix streamed exactly once.
+pub fn gram_xtx_xty(m: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>) {
+    assert_eq!(m.rows(), y.len(), "gram_xtx_xty length mismatch");
+    let p = m.cols();
+    let mut packed = vec![0.0; packed_upper_len(p)];
+    let mut xty = vec![0.0; p];
+    for i in 0..m.rows() {
+        let row = m.row(i);
+        accumulate_rank1_packed(&mut packed, row, 1.0);
+        let yi = y[i];
+        if yi != 0.0 {
+            axpy(&mut xty, row, yi);
+        }
+    }
+    (unpack_symmetric(&packed, p), xty)
 }
 
 /// `Mᵀ (w ⊙ y)` — the weighted cross-moment vector feeding β̂.
@@ -194,6 +280,124 @@ mod tests {
         let meat = Matrix::from_vec(2, 2, vec![1., 0.5, 0.5, 2.]);
         let v = sandwich(&b, &meat);
         assert_eq!(v[(0, 1)], v[(1, 0)]);
+    }
+
+    /// Deterministic pseudo-random f64 with a full-precision mantissa, so
+    /// bit-exactness tests exercise real rounding.
+    fn pseudo(i: usize) -> f64 {
+        let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0x1234_5678);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+    }
+
+    /// Scalar reference for the packed microkernel: the seed's exact
+    /// rank-1 upper-triangle loop.
+    fn gram_weighted_scalar(m: &Matrix, w: &[f64]) -> Matrix {
+        let (n, p) = (m.rows(), m.cols());
+        let mut g = Matrix::zeros(p, p);
+        for i in 0..n {
+            let row = m.row(i);
+            let wi = w[i];
+            if wi == 0.0 {
+                continue;
+            }
+            for a in 0..p {
+                let va = wi * row[a];
+                if va == 0.0 {
+                    continue;
+                }
+                for b in a..p {
+                    g[(a, b)] += va * row[b];
+                }
+            }
+        }
+        for a in 0..p {
+            for b in (a + 1)..p {
+                g[(b, a)] = g[(a, b)];
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn packed_gram_bit_identical_to_scalar_rank1() {
+        // Odd p exercises the 4-wide unroll tail; 0-ULP against the seed
+        // loop because each packed element accumulates in record order.
+        for p in [1usize, 3, 4, 7, 8, 13] {
+            let n = 57;
+            let data: Vec<f64> = (0..n * p).map(pseudo).collect();
+            let w: Vec<f64> = (0..n).map(|i| pseudo(i + 9999).abs() * 3.0).collect();
+            let m = Matrix::from_vec(n, p, data);
+            let fast = gram_weighted(&m, &w);
+            let slow = gram_weighted_scalar(&m, &w);
+            for (a, b) in fast.as_slice().iter().zip(slow.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_weighted_rows_matches_matrix_path() {
+        let n = 31;
+        let p = 5;
+        let data: Vec<f64> = (0..n * p).map(pseudo).collect();
+        let w: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+        let m = Matrix::from_vec(n, p, data.clone());
+        let a = gram_weighted(&m, &w);
+        let b = gram_weighted_rows(&data, p, &w);
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_gram_xtx_xty_bit_identical_to_composition() {
+        let n = 43;
+        let p = 6;
+        let data: Vec<f64> = (0..n * p).map(pseudo).collect();
+        let y: Vec<f64> = (0..n).map(|i| pseudo(i + 31337)).collect();
+        let m = Matrix::from_vec(n, p, data);
+        let (g, xty) = gram_xtx_xty(&m, &y);
+        let g2 = gram(&m);
+        let xty2 = matvec(&m.transpose(), &y);
+        for (a, b) in g.as_slice().iter().zip(g2.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in xty.iter().zip(&xty2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_matches_wide_shapes() {
+        // Inner dimension crosses the k-tile boundary.
+        let (m, k, n) = (3, 131, 9);
+        let a = Matrix::from_vec(m, k, (0..m * k).map(pseudo).collect());
+        let b = Matrix::from_vec(k, n, (0..k * n).map(|i| pseudo(i + 7)).collect());
+        let c = matmul(&a, &b);
+        // Naive jki reference with a fresh accumulator per element, summed
+        // in k order — the same order the tiled kernel uses.
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    let aik = a[(i, kk)];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    s += aik * b[(kk, j)];
+                }
+                assert_eq!(c[(i, j)].to_bits(), s.to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_symmetric_layout() {
+        // p=3 packed upper triangle [a00,a01,a02,a11,a12,a22].
+        let packed = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let g = unpack_symmetric(&packed, 3);
+        assert_eq!(g.as_slice(), &[1.0, 2.0, 3.0, 2.0, 4.0, 5.0, 3.0, 5.0, 6.0]);
+        assert_eq!(packed_upper_len(3), 6);
     }
 
     #[test]

@@ -370,7 +370,7 @@ impl Pipeline {
                 return Err(e);
             }
             feed_result?;
-            merge_partials(partials, mode)
+            merge_partials(partials, mode, cfg.workers)
         })
     }
 }
@@ -444,37 +444,44 @@ impl WorkerState {
     }
 }
 
-fn merge_partials(partials: Vec<WorkerState>, mode: PipelineMode) -> Result<PipelineResult> {
+/// Merge worker results. The sufficient-statistics modes go through
+/// [`CompressedData::merge_many`], which assigns output slots in the
+/// same first-occurrence order as a sequential left-fold and then fills
+/// disjoint slot ranges on `threads` threads — byte-identical to the
+/// old sequential merge (the chaos suite's losslessness pins rely on
+/// this), but the end-of-run barrier no longer serializes on one core.
+fn merge_partials(
+    partials: Vec<WorkerState>,
+    mode: PipelineMode,
+    threads: usize,
+) -> Result<PipelineResult> {
     match mode {
         PipelineMode::SuffStats => {
-            let mut acc: Option<CompressedData> = None;
-            for p in partials {
-                let WorkerState::Suff(c) = p else { unreachable!() };
-                let d = c.finish();
-                match &mut acc {
-                    None => acc = Some(d),
-                    Some(a) => a.merge(&d)?,
-                }
-            }
-            Ok(PipelineResult::SuffStats(acc.expect("at least one worker")))
+            let shards: Vec<CompressedData> = partials
+                .into_iter()
+                .map(|p| {
+                    let WorkerState::Suff(c) = p else { unreachable!() };
+                    c.finish()
+                })
+                .collect();
+            Ok(PipelineResult::SuffStats(CompressedData::merge_many(&shards, threads)?))
         }
         PipelineMode::WithinCluster => {
             // Each worker used local dense ids; offset them so ids stay
             // globally unique (clusters never span workers thanks to
             // cluster-hash routing).
-            let mut acc: Option<CompressedData> = None;
             let mut offset: u32 = 0;
-            for p in partials {
-                let WorkerState::Within { comp, intern } = p else { unreachable!() };
-                let local_clusters = intern.len() as u32;
-                let d = comp.finish().offset_clusters(offset);
-                offset += local_clusters;
-                match &mut acc {
-                    None => acc = Some(d),
-                    Some(a) => a.merge(&d)?,
-                }
-            }
-            Ok(PipelineResult::SuffStats(acc.expect("at least one worker")))
+            let shards: Vec<CompressedData> = partials
+                .into_iter()
+                .map(|p| {
+                    let WorkerState::Within { comp, intern } = p else { unreachable!() };
+                    let local_clusters = intern.len() as u32;
+                    let d = comp.finish().offset_clusters(offset);
+                    offset += local_clusters;
+                    d
+                })
+                .collect();
+            Ok(PipelineResult::SuffStats(CompressedData::merge_many(&shards, threads)?))
         }
         PipelineMode::ClusterStatic { .. } => {
             let mut acc: Option<ClusterStaticCompressed> = None;

@@ -1,9 +1,26 @@
 //! Tiny timing harness for the `cargo bench` targets (criterion is not
 //! vendored in this environment). Warmup + N timed iterations, reporting
-//! min/median/mean — enough to regenerate the paper's relative
+//! min/median/p95/mean — enough to regenerate the paper's relative
 //! comparisons, which are about orders of magnitude, not microseconds.
+//!
+//! [`BenchSuite`] turns the results into machine-readable
+//! `BENCH_*.json` artifacts (median/p95 ms plus Mrows/s / groups/s
+//! throughput when a case declares its work volume), so every PR leaves
+//! a perf trajectory the next one can be compared against. Schema:
+//!
+//! ```json
+//! { "suite": "...", "engine": "rust-native", "records": [
+//!   { "name": "...", "median_ms": 1.2, "p95_ms": 1.4, "mean_ms": 1.25,
+//!     "min_ms": 1.1, "iters": 200,
+//!     "rows": 1000000, "mrows_per_s": 833.0,
+//!     "groups": 4096, "groups_per_s": 3.4e6 } ] }
+//! ```
+//! (`rows`/`groups` and the derived throughputs are present only when
+//! declared via [`BenchSuite::push_rows`] / [`BenchSuite::push_groups`].)
 
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// Timing summary for one benchmark case.
 #[derive(Debug, Clone)]
@@ -14,6 +31,8 @@ pub struct BenchResult {
     pub min: Duration,
     /// Per-iteration wall time: median.
     pub median: Duration,
+    /// Per-iteration wall time: 95th percentile.
+    pub p95: Duration,
     /// Per-iteration wall time: mean.
     pub mean: Duration,
     /// Iterations measured.
@@ -24,6 +43,11 @@ impl BenchResult {
     /// Median in fractional milliseconds.
     pub fn median_ms(&self) -> f64 {
         self.median.as_secs_f64() * 1e3
+    }
+
+    /// 95th percentile in fractional milliseconds.
+    pub fn p95_ms(&self) -> f64 {
+        self.p95.as_secs_f64() * 1e3
     }
 }
 
@@ -53,20 +77,128 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
     samples.sort();
     let min = samples[0];
     let median = samples[samples.len() / 2];
+    // Nearest-rank p95 (index ⌈0.95·n⌉ − 1), clamped into range.
+    let p95 = samples[((samples.len() * 95).div_ceil(100)).saturating_sub(1)];
     let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
-    BenchResult { name: name.to_string(), min, median, mean, iters }
+    BenchResult { name: name.to_string(), min, median, p95, mean, iters }
 }
 
 /// Print one result row in a fixed-width table format.
 pub fn report(r: &BenchResult) {
     println!(
-        "{:<48} {:>12.4} ms (min {:>10.4}, mean {:>10.4}, n={})",
+        "{:<48} {:>12.4} ms (min {:>10.4}, p95 {:>10.4}, mean {:>10.4}, n={})",
         r.name,
         r.median.as_secs_f64() * 1e3,
         r.min.as_secs_f64() * 1e3,
+        r.p95.as_secs_f64() * 1e3,
         r.mean.as_secs_f64() * 1e3,
         r.iters
     );
+}
+
+/// One case of a [`BenchSuite`]: a timing plus optional work volume for
+/// throughput derivation.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// The timing summary.
+    pub result: BenchResult,
+    /// Rows processed per iteration (→ `mrows_per_s`), if meaningful.
+    pub rows: Option<u64>,
+    /// Groups processed per iteration (→ `groups_per_s`), if meaningful.
+    pub groups: Option<u64>,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> Json {
+        let r = &self.result;
+        let med_s = r.median.as_secs_f64();
+        let mut pairs = vec![
+            ("name", Json::Str(r.name.clone())),
+            ("median_ms", Json::Num(r.median_ms())),
+            ("p95_ms", Json::Num(r.p95_ms())),
+            ("mean_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
+            ("min_ms", Json::Num(r.min.as_secs_f64() * 1e3)),
+            ("iters", Json::Num(r.iters as f64)),
+        ];
+        if let Some(rows) = self.rows {
+            pairs.push(("rows", Json::Num(rows as f64)));
+            if med_s > 0.0 {
+                pairs.push(("mrows_per_s", Json::Num(rows as f64 / med_s / 1e6)));
+            }
+        }
+        if let Some(groups) = self.groups {
+            pairs.push(("groups", Json::Num(groups as f64)));
+            if med_s > 0.0 {
+                pairs.push(("groups_per_s", Json::Num(groups as f64 / med_s)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Collects [`BenchResult`]s and writes them as a `BENCH_*.json`
+/// trajectory artifact.
+#[derive(Debug)]
+pub struct BenchSuite {
+    name: String,
+    engine: String,
+    records: Vec<BenchRecord>,
+}
+
+impl BenchSuite {
+    /// New suite; `name` becomes the `suite` field of the artifact.
+    pub fn new(name: &str) -> Self {
+        BenchSuite { name: name.to_string(), engine: "rust-native".to_string(), records: Vec::new() }
+    }
+
+    /// Override the engine label (e.g. a non-Rust reference lane).
+    pub fn with_engine(mut self, engine: &str) -> Self {
+        self.engine = engine.to_string();
+        self
+    }
+
+    /// Add a timing with no throughput denominators.
+    pub fn push(&mut self, result: BenchResult) {
+        self.records.push(BenchRecord { result, rows: None, groups: None });
+    }
+
+    /// Add a timing that processed `rows` rows per iteration.
+    pub fn push_rows(&mut self, result: BenchResult, rows: u64) {
+        self.records.push(BenchRecord { result, rows: Some(rows), groups: None });
+    }
+
+    /// Add a timing that processed `groups` compressed groups per
+    /// iteration (optionally with the originating row count).
+    pub fn push_groups(&mut self, result: BenchResult, groups: u64, rows: Option<u64>) {
+        self.records.push(BenchRecord { result, rows, groups: Some(groups) });
+    }
+
+    /// Records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when no records were collected.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The artifact as a JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::Str(self.name.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("records", Json::Arr(self.records.iter().map(BenchRecord::to_json).collect())),
+        ])
+    }
+
+    /// Write the artifact to `path` (standard `BENCH_<suite>.json`
+    /// naming is the caller's choice). Returns the io error as a plain
+    /// string so bench binaries can report without the error stack.
+    pub fn write_json(&self, path: &str) -> std::result::Result<(), String> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| format!("write {path}: {e}"))
+    }
 }
 
 /// Prevent the optimizer from eliding a value.
@@ -90,6 +222,7 @@ mod tests {
         });
         assert!(r.min > Duration::ZERO);
         assert!(r.median >= r.min);
+        assert!(r.p95 >= r.median);
         assert!(r.iters >= 5);
         assert!(r.median_ms() > 0.0);
     }
@@ -111,5 +244,29 @@ mod tests {
             s
         });
         assert!(big.median > small.median);
+    }
+
+    #[test]
+    fn suite_json_has_trajectory_fields() {
+        let mut suite = BenchSuite::new("estimator");
+        let r = bench("tiny", || black_box(1u64 + 1));
+        suite.push_rows(r.clone(), 1_000_000);
+        suite.push_groups(r.clone(), 4096, Some(1_000_000));
+        suite.push(r);
+        assert_eq!(suite.len(), 3);
+        let j = suite.to_json();
+        assert_eq!(j.get("suite").and_then(|v| v.as_str()), Some("estimator"));
+        assert_eq!(j.get("engine").and_then(|v| v.as_str()), Some("rust-native"));
+        let recs = j.get("records").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(recs.len(), 3);
+        for key in ["name", "median_ms", "p95_ms", "mean_ms", "min_ms", "iters"] {
+            assert!(recs[0].get(key).is_some(), "missing {key}");
+        }
+        assert!(recs[0].get("mrows_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(recs[1].get("groups_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(recs[2].get("rows").is_none());
+        // Round-trips through the in-tree parser.
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("records").and_then(|v| v.as_arr()).unwrap().len(), 3);
     }
 }

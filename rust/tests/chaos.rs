@@ -36,7 +36,7 @@ fn chaos_cfg(retry: RetryPolicy) -> PipelineConfig {
 }
 
 fn quick_retry(max_retries: u32) -> RetryPolicy {
-    RetryPolicy { max_retries, backoff_base_ms: 1, backoff_max_ms: 4 }
+    RetryPolicy { max_retries, backoff_base_ms: 1, backoff_max_ms: 4, jitter: 0.0 }
 }
 
 /// The acceptance contract: WorkerPanic at p = 0.2 with max_retries = 3.

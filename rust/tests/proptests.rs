@@ -96,6 +96,105 @@ fn prop_merge_is_associative_and_commutative() {
     });
 }
 
+/// Byte-level equality via the borrowed accessors (bit patterns, so NaN
+/// and −0.0 differences would also be caught).
+fn assert_compressed_bytes_eq(a: &yoco::compress::CompressedData, b: &yoco::compress::CompressedData) {
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(a.num_features(), b.num_features());
+    assert_eq!(a.num_outcomes(), b.num_outcomes());
+    assert_eq!(a.total_n(), b.total_n());
+    assert_eq!(bits(a.features()), bits(b.features()));
+    assert_eq!(bits(a.counts()), bits(b.counts()));
+    assert_eq!(bits(a.sums()), bits(b.sums()));
+    assert_eq!(bits(a.sumsqs()), bits(b.sumsqs()));
+}
+
+/// Order-independent (key, stats) multiset as bit patterns.
+fn sorted_stats(c: &yoco::compress::CompressedData) -> Vec<(Vec<u64>, Vec<u64>)> {
+    let mut v: Vec<(Vec<u64>, Vec<u64>)> = (0..c.num_groups())
+        .map(|g| {
+            let key: Vec<u64> = c.feature_row(g).iter().map(|v| v.to_bits()).collect();
+            let mut vals = vec![c.counts()[g].to_bits()];
+            for k in 0..c.num_outcomes() {
+                vals.push(c.sum(g, k).to_bits());
+                vals.push(c.sumsq(g, k).to_bits());
+            }
+            (key, vals)
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn prop_parallel_merge_bit_identical_to_left_fold_and_single_pass() {
+    // Outcomes are dyadic rationals (k/8 with |k| bounded), so every sum
+    // is exact and bit-identity must hold regardless of association:
+    // parallel tree-merge == sequential left-fold == single-pass.
+    for_all_seeds(15, |rng| {
+        let n = 150 + rng.below(400);
+        let cells = 2 + rng.below(6);
+        let rows: Vec<(Vec<f64>, f64)> = (0..n)
+            .map(|_| {
+                let m = vec![1.0, rng.below(cells) as f64, rng.below(3) as f64];
+                let y = (rng.below(64) as f64 - 32.0) / 8.0;
+                (m, y)
+            })
+            .collect();
+        let mut one = SuffStatsCompressor::new(3, 1);
+        for (m, y) in &rows {
+            one.push(m, &[*y]);
+        }
+        let one = one.finish();
+        for k in [2usize, 3, 8] {
+            let mut cs: Vec<SuffStatsCompressor> =
+                (0..k).map(|_| SuffStatsCompressor::new(3, 1)).collect();
+            for (i, (m, y)) in rows.iter().enumerate() {
+                cs[i % k].push(m, &[*y]);
+            }
+            let mut shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            // Shuffled shard order.
+            for i in (1..shards.len()).rev() {
+                shards.swap(i, rng.below(i + 1));
+            }
+            let mut folded = shards[0].clone();
+            for s in &shards[1..] {
+                folded.merge(s).unwrap();
+            }
+            assert_eq!(sorted_stats(&folded), sorted_stats(&one), "k={k}");
+            for threads in [1usize, 4] {
+                let parallel =
+                    yoco::compress::CompressedData::merge_many(&shards, threads)
+                        .unwrap();
+                // Same group ORDER as the fold, not just the same set.
+                assert_compressed_bytes_eq(&parallel, &folded);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fused_normal_equations_are_zero_ulp() {
+    // The fused M̃ᵀdiag(ñ)M̃ / M̃ᵀỹ' kernel vs the seed composition
+    // (materialize M̃, gram_weighted, matvec of M̃ᵀ): 0 ULP on every
+    // element, for random designs including full-mantissa outcomes.
+    for_all_seeds(25, |rng| {
+        let (m, y, _) = random_workload(rng);
+        let mut c = SuffStatsCompressor::new(m.cols(), 1);
+        for i in 0..m.rows() {
+            c.push(m.row(i), &[y[i]]);
+        }
+        let d = c.finish();
+        let (gram_f, xty_f) = yoco::estimator::gram_xtwx_xtwy(&d, 0).unwrap();
+        let fm = d.feature_matrix();
+        let gram_s = yoco::linalg::gram_weighted(&fm, d.counts());
+        let xty_s = yoco::linalg::matvec(&fm.transpose(), &d.sums_for(0));
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(gram_f.as_slice()), bits(gram_s.as_slice()));
+        assert_eq!(bits(&xty_f), bits(&xty_s));
+    });
+}
+
 #[test]
 fn prop_group_invariants() {
     // Structural invariants of the compressed form:
