@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Gate CI on bench regressions: compare a fresh ``BENCH_*.json``
+against the committed baseline and fail on median slowdowns beyond a
+threshold.
+
+Comparison rules (deliberately conservative — this is a smoke gate, not
+a benchmarking service):
+
+* **Bootstrap skip** — no baseline file yet means nothing to compare;
+  exit 0 so the first run on a new suite just establishes history.
+* **Engine guard** — a ``python-ref`` baseline says nothing about a
+  ``rust-native`` run (and vice versa); mismatched engines skip the
+  comparison instead of failing on an apples-to-oranges delta.
+* **Noise floor** — records whose baseline median is under ``--min-ms``
+  are timer-resolution noise on shared CI runners; they are reported
+  but never fail the gate.
+* **Threshold** — a record regresses when its median exceeds baseline
+  by more than ``--threshold-pct`` percent (default 20).
+
+Exit status: 0 = ok/skipped, 1 = at least one regression, 2 = bad input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    records = {r["name"]: r for r in doc.get("records", [])}
+    if not records:
+        raise ValueError(f"{path}: no records")
+    return doc, records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
+    ap.add_argument(
+        "--threshold-pct",
+        type=float,
+        default=20.0,
+        help="fail when current median exceeds baseline by more than this percent",
+    )
+    ap.add_argument(
+        "--min-ms",
+        type=float,
+        default=0.05,
+        help="noise floor: baselines under this median are never gated",
+    )
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"bench-compare: no baseline at {args.baseline} — bootstrap, skipping")
+        return 0
+    try:
+        base_doc, base = load(args.baseline)
+        cur_doc, cur = load(args.current)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"bench-compare: bad input: {e}", file=sys.stderr)
+        return 2
+
+    if base_doc.get("engine") != cur_doc.get("engine"):
+        print(
+            f"bench-compare: engine mismatch "
+            f"({base_doc.get('engine')!r} baseline vs {cur_doc.get('engine')!r} current) "
+            f"— medians are not comparable, skipping"
+        )
+        return 0
+
+    regressions = []
+    for name in sorted(set(base) | set(cur)):
+        if name not in base:
+            print(f"  NEW      {name}: no baseline record")
+            continue
+        if name not in cur:
+            print(f"  MISSING  {name}: present in baseline, absent in current run")
+            continue
+        b, c = base[name]["median_ms"], cur[name]["median_ms"]
+        delta_pct = (c - b) / b * 100.0 if b > 0 else 0.0
+        if b < args.min_ms:
+            print(f"  NOISE    {name}: baseline {b:.4f} ms under {args.min_ms} ms floor")
+            continue
+        tag = "ok"
+        if delta_pct > args.threshold_pct:
+            tag = "REGRESSED"
+            regressions.append((name, b, c, delta_pct))
+        elif delta_pct < -args.threshold_pct:
+            tag = "improved"
+        print(f"  {tag:<10}{name}: {b:.3f} ms -> {c:.3f} ms ({delta_pct:+.1f}%)")
+
+    if regressions:
+        print(
+            f"bench-compare: {len(regressions)} record(s) regressed "
+            f"beyond {args.threshold_pct:.0f}%:",
+            file=sys.stderr,
+        )
+        for name, b, c, d in regressions:
+            print(f"  {name}: {b:.3f} ms -> {c:.3f} ms ({d:+.1f}%)", file=sys.stderr)
+        return 1
+    print("bench-compare: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,8 @@
 
 use std::collections::HashMap;
 
+use super::sufficient::PARALLEL_MERGE_MIN_GROUPS;
+use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
 
 /// Per-cluster packed moments.
@@ -39,6 +41,9 @@ pub struct ClusterMoments {
 pub struct ClusterStaticCompressed {
     p: usize,
     clusters: Vec<ClusterMoments>,
+    /// Original cluster label per record, parallel to `clusters` — kept
+    /// so shard merges can collapse moments by cluster identity.
+    labels: Vec<f64>,
     total_rows: u64,
 }
 
@@ -61,6 +66,11 @@ impl ClusterStaticCompressed {
     /// The per-cluster moments.
     pub fn clusters(&self) -> &[ClusterMoments] {
         &self.clusters
+    }
+
+    /// Original cluster labels, parallel to [`clusters`](Self::clusters).
+    pub fn labels(&self) -> &[f64] {
+        &self.labels
     }
 
     /// Unpack cluster `c`'s K¹ into a full symmetric matrix.
@@ -142,17 +152,170 @@ impl ClusterStaticCompressed {
 
     /// Append another compression covering a *disjoint* set of clusters
     /// (pipeline merge: rows are routed by cluster label, so no cluster
-    /// ever spans two workers).
-    pub fn concat(&mut self, other: ClusterStaticCompressed) -> crate::error::Result<()> {
+    /// ever spans two workers). For possibly-overlapping clusters use
+    /// [`merge`](Self::merge).
+    pub fn concat(&mut self, other: ClusterStaticCompressed) -> Result<()> {
         if other.p != self.p {
-            return Err(crate::error::YocoError::shape(format!(
+            return Err(YocoError::shape(format!(
                 "concat feature mismatch: {} vs {}",
                 self.p, other.p
             )));
         }
         self.clusters.extend(other.clusters);
+        self.labels.extend(other.labels);
         self.total_rows += other.total_rows;
         Ok(())
+    }
+
+    /// Merge another compression into this one by cluster *label*:
+    /// moments of shared clusters add, new clusters append. With
+    /// label-disjoint inputs this degenerates to [`concat`](Self::
+    /// concat) exactly.
+    pub fn merge(&mut self, other: &ClusterStaticCompressed) -> Result<()> {
+        if other.p != self.p {
+            return Err(YocoError::shape(format!(
+                "merge feature mismatch: {} vs {}",
+                self.p, other.p
+            )));
+        }
+        let mut index: HashMap<u64, usize> = self
+            .labels
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.to_bits(), i))
+            .collect();
+        for (c, label) in other.labels.iter().enumerate() {
+            let m = &other.clusters[c];
+            match index.get(&label.to_bits()) {
+                Some(&mine) => add_moments(&mut self.clusters[mine], m),
+                None => {
+                    index.insert(label.to_bits(), self.clusters.len());
+                    self.clusters.push(m.clone());
+                    self.labels.push(*label);
+                }
+            }
+        }
+        self.total_rows += other.total_rows;
+        Ok(())
+    }
+
+    /// Merge `K` shard compressions, filling the output in parallel with
+    /// up to `threads` OS threads — same two-phase scheme as
+    /// [`CompressedData::merge_many`](super::CompressedData::merge_many):
+    /// a sequential scan assigns each cluster label an output slot in
+    /// first-occurrence order (the sequential left-fold's cluster
+    /// order), then disjoint slot ranges accumulate per thread in shard
+    /// order, so the result is byte-identical to folding
+    /// [`merge`](Self::merge) left to right — and, for label-disjoint
+    /// shards (the pipeline's cluster-hash routing), to the old
+    /// sequential [`concat`](Self::concat) fold.
+    pub fn merge_many(
+        shards: &[ClusterStaticCompressed],
+        threads: usize,
+    ) -> Result<ClusterStaticCompressed> {
+        let first = shards
+            .first()
+            .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
+        let p = first.p;
+        for s in &shards[1..] {
+            if s.p != p {
+                return Err(YocoError::shape(format!(
+                    "merge feature mismatch: {} vs {}",
+                    p, s.p
+                )));
+            }
+        }
+
+        // Phase 1: label-keyed slot assignment, first-occurrence order.
+        let total: usize = shards.iter().map(|s| s.clusters.len()).sum();
+        let mut index: HashMap<u64, u32> = HashMap::with_capacity(total * 2);
+        let mut labels: Vec<f64> = Vec::new();
+        let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
+        for s in shards {
+            let mut shard_slots = Vec::with_capacity(s.clusters.len());
+            for &label in &s.labels {
+                let slot = match index.get(&label.to_bits()) {
+                    Some(&sl) => sl,
+                    None => {
+                        let sl = labels.len() as u32;
+                        index.insert(label.to_bits(), sl);
+                        labels.push(label);
+                        sl
+                    }
+                };
+                shard_slots.push(slot);
+            }
+            slots.push(shard_slots);
+        }
+        let g_out = labels.len();
+
+        // Phase 2: fill disjoint slot ranges (no locks, no atomics).
+        let mut clusters =
+            vec![ClusterMoments { k1: Vec::new(), k2: Vec::new(), yy: 0.0, n: 0.0 }; g_out];
+        let threads = threads.clamp(1, g_out.max(1));
+        if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
+            fill_cluster_slot_range(shards, &slots, 0, g_out, &mut clusters);
+        } else {
+            let per = g_out.div_ceil(threads);
+            let slots_ref = &slots;
+            std::thread::scope(|scope| {
+                for (i, chunk) in clusters.chunks_mut(per).enumerate() {
+                    let lo = i * per;
+                    let hi = lo + chunk.len();
+                    scope.spawn(move || {
+                        fill_cluster_slot_range(shards, slots_ref, lo, hi, chunk)
+                    });
+                }
+            });
+        }
+
+        Ok(ClusterStaticCompressed {
+            p,
+            clusters,
+            labels,
+            total_rows: shards.iter().map(|s| s.total_rows).sum(),
+        })
+    }
+}
+
+/// Elementwise-add `other`'s moments into `acc`.
+fn add_moments(acc: &mut ClusterMoments, other: &ClusterMoments) {
+    for (a, v) in acc.k1.iter_mut().zip(&other.k1) {
+        *a += v;
+    }
+    for (a, v) in acc.k2.iter_mut().zip(&other.k2) {
+        *a += v;
+    }
+    acc.yy += other.yy;
+    acc.n += other.n;
+}
+
+/// Accumulate every shard's contribution to output slots `[lo, hi)`
+/// (`out[0]` is slot `lo`). First occurrence of a slot clones the
+/// shard's moments; later occurrences add, visiting shards in order —
+/// the sequential left-fold's accumulation order exactly.
+fn fill_cluster_slot_range(
+    shards: &[ClusterStaticCompressed],
+    slots: &[Vec<u32>],
+    lo: usize,
+    hi: usize,
+    out: &mut [ClusterMoments],
+) {
+    let mut seen = vec![false; hi - lo];
+    for (s, shard_slots) in shards.iter().zip(slots) {
+        for (c, &slot) in shard_slots.iter().enumerate() {
+            let slot = slot as usize;
+            if slot < lo || slot >= hi {
+                continue;
+            }
+            let j = slot - lo;
+            if seen[j] {
+                add_moments(&mut out[j], &s.clusters[c]);
+            } else {
+                seen[j] = true;
+                out[j] = s.clusters[c].clone();
+            }
+        }
     }
 }
 
@@ -162,6 +325,7 @@ pub struct ClusterStaticCompressor {
     p: usize,
     index: HashMap<u64, usize>,
     clusters: Vec<ClusterMoments>,
+    labels: Vec<f64>,
     total_rows: u64,
 }
 
@@ -172,6 +336,7 @@ impl ClusterStaticCompressor {
             p,
             index: HashMap::new(),
             clusters: Vec::new(),
+            labels: Vec::new(),
             total_rows: 0,
         }
     }
@@ -190,6 +355,7 @@ impl ClusterStaticCompressor {
                     yy: 0.0,
                     n: 0.0,
                 });
+                self.labels.push(cluster_label);
                 self.index.insert(cluster_label.to_bits(), c);
                 c
             }
@@ -228,6 +394,7 @@ impl ClusterStaticCompressor {
         ClusterStaticCompressed {
             p: self.p,
             clusters: self.clusters,
+            labels: self.labels,
             total_rows: self.total_rows,
         }
     }
@@ -287,6 +454,122 @@ mod tests {
         assert_eq!(d.sum_k1()[(0, 0)], 13.0); // 4 + 9
         assert_eq!(d.sum_k2(), vec![8.0]); // 2 + 6
         assert_eq!(d.total_yy(), 5.0);
+    }
+
+    /// Deterministic pseudo-random f64 with a full-precision mantissa:
+    /// sums of these are NOT exactly representable, so byte-identity
+    /// tests catch any fp reassociation in the merge paths.
+    fn pseudo(i: usize) -> f64 {
+        let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xabcd);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+    }
+
+    /// Full byte-level equality, including cluster order.
+    fn assert_bytes_eq(a: &ClusterStaticCompressed, b: &ClusterStaticCompressed) {
+        assert_eq!(a.p, b.p);
+        assert_eq!(a.total_rows, b.total_rows);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.labels), bits(&b.labels));
+        assert_eq!(a.clusters.len(), b.clusters.len());
+        for (x, y) in a.clusters.iter().zip(&b.clusters) {
+            assert_eq!(bits(&x.k1), bits(&y.k1));
+            assert_eq!(bits(&x.k2), bits(&y.k2));
+            assert_eq!(x.yy.to_bits(), y.yy.to_bits());
+            assert_eq!(x.n.to_bits(), y.n.to_bits());
+        }
+    }
+
+    /// `k` shards over overlapping clusters, full-mantissa data.
+    fn shards_of(n: usize, k: usize, clusters: usize) -> Vec<ClusterStaticCompressed> {
+        let mut cs: Vec<ClusterStaticCompressor> =
+            (0..k).map(|_| ClusterStaticCompressor::new(2)).collect();
+        for i in 0..n {
+            cs[i % k].push(
+                &[1.0, pseudo(i + 5000)],
+                pseudo(i),
+                (i % clusters) as f64,
+            );
+        }
+        cs.into_iter().map(|c| c.finish()).collect()
+    }
+
+    #[test]
+    fn merge_many_byte_identical_to_left_fold() {
+        // Clusters span shards here, so the label-keyed merge must
+        // accumulate — and do so in exactly the left-fold order.
+        for k in [2usize, 3, 8] {
+            let shards = shards_of(600, k, 25);
+            let mut folded = shards[0].clone();
+            for s in &shards[1..] {
+                folded.merge(s).unwrap();
+            }
+            assert_eq!(folded.num_clusters(), 25);
+            for threads in [1usize, 4] {
+                let parallel =
+                    ClusterStaticCompressed::merge_many(&shards, threads).unwrap();
+                assert_bytes_eq(&parallel, &folded);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_many_large_crosses_thread_ranges() {
+        // Enough clusters to engage the threaded fill.
+        let shards = shards_of(16_000, 5, 4000);
+        let mut folded = shards[0].clone();
+        for s in &shards[1..] {
+            folded.merge(s).unwrap();
+        }
+        assert_eq!(folded.num_clusters(), 4000);
+        for threads in [2usize, 3, 8] {
+            let parallel =
+                ClusterStaticCompressed::merge_many(&shards, threads).unwrap();
+            assert_bytes_eq(&parallel, &folded);
+        }
+    }
+
+    #[test]
+    fn merge_many_disjoint_labels_matches_concat() {
+        // Label-disjoint shards (the pipeline's routing invariant): the
+        // keyed merge must reproduce the plain concat fold bit for bit.
+        let mut shards = Vec::new();
+        for sh in 0..4u64 {
+            let mut c = ClusterStaticCompressor::new(2);
+            for i in 0..300usize {
+                let cl = (sh * 100 + (i % 10) as u64) as f64;
+                c.push(&[1.0, pseudo(i)], pseudo(i + 999 * sh as usize), cl);
+            }
+            shards.push(c.finish());
+        }
+        let mut concatted = shards[0].clone();
+        for s in &shards[1..] {
+            concatted.concat(s.clone()).unwrap();
+        }
+        let merged = ClusterStaticCompressed::merge_many(&shards, 4).unwrap();
+        assert_bytes_eq(&merged, &concatted);
+        assert_eq!(merged.num_clusters(), 40);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_shapes() {
+        let a = ClusterStaticCompressor::new(2).finish();
+        let b = ClusterStaticCompressor::new(3).finish();
+        assert!(ClusterStaticCompressed::merge_many(&[], 4).is_err());
+        assert!(ClusterStaticCompressed::merge_many(&[a.clone(), b.clone()], 4).is_err());
+        let mut a = a;
+        assert!(a.merge(&b).is_err());
+        assert!(a.concat(b).is_err());
+    }
+
+    #[test]
+    fn labels_track_clusters() {
+        let mut c = ClusterStaticCompressor::new(1);
+        c.push(&[1.0], 1.0, 7.0);
+        c.push(&[1.0], 2.0, 3.0);
+        c.push(&[1.0], 3.0, 7.0);
+        let d = c.finish();
+        assert_eq!(d.labels(), &[7.0, 3.0]);
+        assert_eq!(d.num_clusters(), 2);
     }
 
     #[test]

@@ -411,7 +411,8 @@ impl CompressedData {
 
 /// Below this many output groups the parallel fill's thread spawn costs
 /// more than the copy it distributes; fall back to a single pass.
-const PARALLEL_MERGE_MIN_GROUPS: usize = 1024;
+/// Shared by every `merge_many` in the compress layer.
+pub(crate) const PARALLEL_MERGE_MIN_GROUPS: usize = 1024;
 
 /// Accumulate every shard's contribution to output slots `[lo, hi)`.
 ///

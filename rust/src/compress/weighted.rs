@@ -13,7 +13,9 @@
 
 use std::collections::HashMap;
 
-use super::key::{FeatureKey, FxHasherBuilder};
+use super::key::{canonicalize_into, FeatureKey, FxHasherBuilder};
+use super::sufficient::PARALLEL_MERGE_MIN_GROUPS;
+use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
 
 /// Weighted sufficient statistics per compressed record (§7.2).
@@ -117,6 +119,231 @@ impl WeightedCompressedData {
     /// ỹ''(w²) for outcome k.
     pub fn w2y2(&self, g: usize, k: usize) -> f64 {
         self.w2y2[g * self.o + k]
+    }
+
+    fn check_mergeable(&self, other: &WeightedCompressedData) -> Result<()> {
+        if self.p != other.p || self.o != other.o {
+            return Err(YocoError::shape(format!(
+                "merge shape mismatch: ({}, {}) vs ({}, {})",
+                self.p, self.o, other.p, other.o
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merge another weighted compression of *disjoint* observations
+    /// into this one (associative + commutative): identical feature
+    /// vectors collapse, all eight weighted moments add.
+    pub fn merge(&mut self, other: &WeightedCompressedData) -> Result<()> {
+        self.check_mergeable(other)?;
+        let o = self.o;
+        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(self.num_groups() * 2, FxHasherBuilder);
+        let mut scratch = Vec::new();
+        for g in 0..self.num_groups() {
+            canonicalize_into(self.feature_row(g), &mut scratch);
+            index.insert(FeatureKey::from_words(&scratch), g);
+        }
+        for g in 0..other.num_groups() {
+            canonicalize_into(other.feature_row(g), &mut scratch);
+            match index.get(scratch.as_slice()) {
+                Some(&mine) => {
+                    self.counts[mine] += other.counts[g];
+                    self.w[mine] += other.w[g];
+                    self.w2[mine] += other.w2[g];
+                    for k in 0..o {
+                        self.wy[mine * o + k] += other.wy[g * o + k];
+                        self.wy2[mine * o + k] += other.wy2[g * o + k];
+                        self.w2y[mine * o + k] += other.w2y[g * o + k];
+                        self.w2y2[mine * o + k] += other.w2y2[g * o + k];
+                    }
+                }
+                None => {
+                    let mine = self.num_groups();
+                    self.features.extend_from_slice(other.feature_row(g));
+                    self.counts.push(other.counts[g]);
+                    self.w.push(other.w[g]);
+                    self.w2.push(other.w2[g]);
+                    for k in 0..o {
+                        self.wy.push(other.wy[g * o + k]);
+                        self.wy2.push(other.wy2[g * o + k]);
+                        self.w2y.push(other.w2y[g * o + k]);
+                        self.w2y2.push(other.w2y2[g * o + k]);
+                    }
+                    index.insert(FeatureKey::from_words(&scratch), mine);
+                }
+            }
+        }
+        self.total_n += other.total_n;
+        self.total_w += other.total_w;
+        Ok(())
+    }
+
+    /// Merge `K` weighted shard compressions, filling the output in
+    /// parallel with up to `threads` OS threads — same two-phase scheme
+    /// as [`CompressedData::merge_many`](super::CompressedData::
+    /// merge_many): a sequential scan assigns output slots in
+    /// first-occurrence order (the sequential left-fold's group order),
+    /// then disjoint slot ranges are accumulated per thread in shard
+    /// order, so the result is byte-identical to folding
+    /// [`merge`](Self::merge) left to right.
+    pub fn merge_many(
+        shards: &[WeightedCompressedData],
+        threads: usize,
+    ) -> Result<WeightedCompressedData> {
+        let first = shards
+            .first()
+            .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
+        let (p, o) = (first.p, first.o);
+        for s in &shards[1..] {
+            first.check_mergeable(s)?;
+        }
+
+        // Phase 1: slot assignment, first-occurrence order.
+        let total_groups: usize = shards.iter().map(|s| s.num_groups()).sum();
+        let mut index: HashMap<FeatureKey, u32, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(total_groups * 2, FxHasherBuilder);
+        let mut scratch = Vec::new();
+        let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
+        let mut g_out: u32 = 0;
+        for s in shards {
+            let mut shard_slots = Vec::with_capacity(s.num_groups());
+            for g in 0..s.num_groups() {
+                canonicalize_into(s.feature_row(g), &mut scratch);
+                let slot = match index.get(scratch.as_slice()) {
+                    Some(&sl) => sl,
+                    None => {
+                        let sl = g_out;
+                        index.insert(FeatureKey::from_words(&scratch), sl);
+                        g_out += 1;
+                        sl
+                    }
+                };
+                shard_slots.push(slot);
+            }
+            slots.push(shard_slots);
+        }
+        let g_out = g_out as usize;
+
+        // Phase 2: fill the output arrays, one contiguous slot range per
+        // thread (disjoint &mut chunks — no locks, no atomics).
+        let mut features = vec![0.0; g_out * p];
+        let mut counts = vec![0.0; g_out];
+        let mut w = vec![0.0; g_out];
+        let mut w2 = vec![0.0; g_out];
+        let mut wy = vec![0.0; g_out * o];
+        let mut wy2 = vec![0.0; g_out * o];
+        let mut w2y = vec![0.0; g_out * o];
+        let mut w2y2 = vec![0.0; g_out * o];
+
+        let threads = threads.clamp(1, g_out.max(1));
+        if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
+            fill_weighted_slot_range(
+                shards, &slots, p, o, 0, g_out, &mut features, &mut counts, &mut w,
+                &mut w2, &mut wy, &mut wy2, &mut w2y, &mut w2y2,
+            );
+        } else {
+            let per = g_out.div_ceil(threads);
+            let slots_ref = &slots;
+            std::thread::scope(|scope| {
+                let mut f_it = features.chunks_mut((per * p).max(1));
+                let mut c_it = counts.chunks_mut(per);
+                let mut w_it = w.chunks_mut(per);
+                let mut w2_it = w2.chunks_mut(per);
+                let mut wy_it = wy.chunks_mut((per * o).max(1));
+                let mut wy2_it = wy2.chunks_mut((per * o).max(1));
+                let mut w2y_it = w2y.chunks_mut((per * o).max(1));
+                let mut w2y2_it = w2y2.chunks_mut((per * o).max(1));
+                let mut lo = 0usize;
+                while lo < g_out {
+                    let hi = (lo + per).min(g_out);
+                    let f = f_it.next().unwrap_or(&mut []);
+                    let c = c_it.next().unwrap_or(&mut []);
+                    let wv = w_it.next().unwrap_or(&mut []);
+                    let w2v = w2_it.next().unwrap_or(&mut []);
+                    let a = wy_it.next().unwrap_or(&mut []);
+                    let b = wy2_it.next().unwrap_or(&mut []);
+                    let x = w2y_it.next().unwrap_or(&mut []);
+                    let z = w2y2_it.next().unwrap_or(&mut []);
+                    scope.spawn(move || {
+                        fill_weighted_slot_range(
+                            shards, slots_ref, p, o, lo, hi, f, c, wv, w2v, a, b, x, z,
+                        )
+                    });
+                    lo = hi;
+                }
+            });
+        }
+
+        Ok(WeightedCompressedData {
+            p,
+            o,
+            features,
+            counts,
+            w,
+            w2,
+            wy,
+            wy2,
+            w2y,
+            w2y2,
+            total_n: shards.iter().map(|s| s.total_n).sum(),
+            total_w: shards.iter().map(|s| s.total_w).sum(),
+        })
+    }
+}
+
+/// Accumulate every shard's contribution to output slots `[lo, hi)`.
+/// First occurrence of a slot copies the shard's record; later
+/// occurrences add, visiting shards in order — the sequential
+/// left-fold's accumulation order exactly.
+#[allow(clippy::too_many_arguments)]
+fn fill_weighted_slot_range(
+    shards: &[WeightedCompressedData],
+    slots: &[Vec<u32>],
+    p: usize,
+    o: usize,
+    lo: usize,
+    hi: usize,
+    features: &mut [f64],
+    counts: &mut [f64],
+    w: &mut [f64],
+    w2: &mut [f64],
+    wy: &mut [f64],
+    wy2: &mut [f64],
+    w2y: &mut [f64],
+    w2y2: &mut [f64],
+) {
+    let mut seen = vec![false; hi - lo];
+    for (s, shard_slots) in shards.iter().zip(slots) {
+        for (g, &slot) in shard_slots.iter().enumerate() {
+            let slot = slot as usize;
+            if slot < lo || slot >= hi {
+                continue;
+            }
+            let j = slot - lo;
+            if seen[j] {
+                counts[j] += s.counts[g];
+                w[j] += s.w[g];
+                w2[j] += s.w2[g];
+                for k in 0..o {
+                    wy[j * o + k] += s.wy[g * o + k];
+                    wy2[j * o + k] += s.wy2[g * o + k];
+                    w2y[j * o + k] += s.w2y[g * o + k];
+                    w2y2[j * o + k] += s.w2y2[g * o + k];
+                }
+            } else {
+                seen[j] = true;
+                features[j * p..(j + 1) * p].copy_from_slice(s.feature_row(g));
+                counts[j] = s.counts[g];
+                w[j] = s.w[g];
+                w2[j] = s.w2[g];
+                wy[j * o..(j + 1) * o].copy_from_slice(&s.wy[g * o..(g + 1) * o]);
+                wy2[j * o..(j + 1) * o].copy_from_slice(&s.wy2[g * o..(g + 1) * o]);
+                w2y[j * o..(j + 1) * o].copy_from_slice(&s.w2y[g * o..(g + 1) * o]);
+                w2y2[j * o..(j + 1) * o]
+                    .copy_from_slice(&s.w2y2[g * o..(g + 1) * o]);
+            }
+        }
     }
 }
 
@@ -230,6 +457,100 @@ mod tests {
         let d = wc.finish();
         assert_eq!(d.num_groups(), 2);
         assert_eq!(d.total_n(), 100);
+    }
+
+    /// Deterministic pseudo-random f64 with a full-precision mantissa:
+    /// sums of these are NOT exactly representable, so byte-identity
+    /// tests catch any fp reassociation in the merge paths.
+    fn pseudo(i: usize) -> f64 {
+        let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xabcd);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+    }
+
+    /// Full byte-level equality, including group order.
+    fn assert_bytes_eq(a: &WeightedCompressedData, b: &WeightedCompressedData) {
+        assert_eq!(a.p, b.p);
+        assert_eq!(a.o, b.o);
+        assert_eq!(a.total_n, b.total_n);
+        assert_eq!(a.total_w.to_bits(), b.total_w.to_bits());
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.features), bits(&b.features));
+        assert_eq!(bits(&a.counts), bits(&b.counts));
+        assert_eq!(bits(&a.w), bits(&b.w));
+        assert_eq!(bits(&a.w2), bits(&b.w2));
+        assert_eq!(bits(&a.wy), bits(&b.wy));
+        assert_eq!(bits(&a.wy2), bits(&b.wy2));
+        assert_eq!(bits(&a.w2y), bits(&b.w2y));
+        assert_eq!(bits(&a.w2y2), bits(&b.w2y2));
+    }
+
+    /// Round-robin rows into `k` weighted shard compressions.
+    fn shards_of(n: usize, k: usize) -> Vec<WeightedCompressedData> {
+        let mut cs: Vec<WeightedSuffStatsCompressor> =
+            (0..k).map(|_| WeightedSuffStatsCompressor::new(2, 2)).collect();
+        for i in 0..n {
+            cs[i % k].push(
+                &[(i % 9) as f64, (i % 4) as f64],
+                &[pseudo(i), pseudo(i + 7777)],
+                pseudo(i + 31).abs() + 0.1,
+            );
+        }
+        cs.into_iter().map(|c| c.finish()).collect()
+    }
+
+    #[test]
+    fn parallel_merge_byte_identical_to_left_fold() {
+        // Full-mantissa weights and outcomes: inexact sums, so this pins
+        // the exact accumulation order, not just values up to
+        // reassociation.
+        for k in [2usize, 3, 8] {
+            let shards = shards_of(400, k);
+            let mut folded = shards[0].clone();
+            for s in &shards[1..] {
+                folded.merge(s).unwrap();
+            }
+            for threads in [1usize, 4] {
+                let parallel =
+                    WeightedCompressedData::merge_many(&shards, threads).unwrap();
+                assert_bytes_eq(&parallel, &folded);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_merge_large_crosses_thread_ranges() {
+        // Enough distinct groups to engage the threaded fill.
+        let mut cs: Vec<WeightedSuffStatsCompressor> =
+            (0..5).map(|_| WeightedSuffStatsCompressor::new(2, 1)).collect();
+        for i in 0..12_000 {
+            cs[i % 5].push(
+                &[(i % 2500) as f64, (i % 2) as f64],
+                &[pseudo(i)],
+                pseudo(i + 13).abs() + 0.1,
+            );
+        }
+        let shards: Vec<WeightedCompressedData> =
+            cs.into_iter().map(|c| c.finish()).collect();
+        let mut folded = shards[0].clone();
+        for s in &shards[1..] {
+            folded.merge(s).unwrap();
+        }
+        assert!(folded.num_groups() >= 2500);
+        for threads in [2usize, 3, 8] {
+            let parallel =
+                WeightedCompressedData::merge_many(&shards, threads).unwrap();
+            assert_bytes_eq(&parallel, &folded);
+        }
+    }
+
+    #[test]
+    fn merge_rejects_bad_input() {
+        assert!(WeightedCompressedData::merge_many(&[], 4).is_err());
+        let a = WeightedSuffStatsCompressor::new(2, 1).finish();
+        let b = WeightedSuffStatsCompressor::new(3, 1).finish();
+        assert!(WeightedCompressedData::merge_many(&[a.clone(), b.clone()], 4).is_err());
+        let mut a = a;
+        assert!(a.merge(&b).is_err());
     }
 
     #[test]

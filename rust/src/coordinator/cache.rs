@@ -7,7 +7,8 @@ use std::sync::{Arc, Mutex};
 use crate::compress::CompressedData;
 use crate::data::Batch;
 use crate::error::{Result, YocoError};
-use crate::pipeline::{Pipeline, PipelineConfig, PipelineMode};
+use crate::obs::{Counter, MetricsRegistry, Trace};
+use crate::pipeline::{Metrics, Pipeline, PipelineConfig, PipelineMode};
 
 use super::planner::Strategy;
 
@@ -29,18 +30,31 @@ struct DatasetEntry {
 pub struct YocoStore {
     datasets: Mutex<HashMap<String, DatasetEntry>>,
     pipeline_cfg: PipelineConfig,
-    hits: std::sync::atomic::AtomicU64,
-    misses: std::sync::atomic::AtomicU64,
+    /// Service-lifetime pipeline counters: every compression run folds
+    /// into the same `pipeline_*` series, so the live `metrics` export
+    /// shows cumulative ingest work (and the series exist from
+    /// construction, before the first compression).
+    pipeline_metrics: Arc<Metrics>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
 }
 
 impl YocoStore {
-    /// New store; compressions use `pipeline_cfg`.
+    /// New store on a private registry; compressions use `pipeline_cfg`.
     pub fn new(pipeline_cfg: PipelineConfig) -> Self {
+        YocoStore::with_registry(pipeline_cfg, MetricsRegistry::shared())
+    }
+
+    /// New store registering its series (`store_cache_*`, `pipeline_*`)
+    /// on a shared registry — the coordinator passes its own so one
+    /// `metrics` export covers both layers.
+    pub fn with_registry(pipeline_cfg: PipelineConfig, registry: Arc<MetricsRegistry>) -> Self {
         YocoStore {
             datasets: Mutex::new(HashMap::new()),
             pipeline_cfg,
-            hits: std::sync::atomic::AtomicU64::new(0),
-            misses: std::sync::atomic::AtomicU64::new(0),
+            hits: registry.counter("store_cache_hits_total"),
+            misses: registry.counter("store_cache_misses_total"),
+            pipeline_metrics: Arc::new(Metrics::with_registry(registry)),
         }
     }
 
@@ -86,7 +100,19 @@ impl YocoStore {
         features: &[String],
         strategy: Strategy,
     ) -> Result<(Arc<CompressedData>, bool)> {
-        use std::sync::atomic::Ordering;
+        self.compressed_traced(dataset, features, strategy, &Trace::disabled())
+    }
+
+    /// [`YocoStore::compressed`] with a request trace: the pipeline run
+    /// (if the cache misses) records its feed/worker/merge spans into
+    /// `trace`.
+    pub fn compressed_traced(
+        &self,
+        dataset: &str,
+        features: &[String],
+        strategy: Strategy,
+        trace: &Trace,
+    ) -> Result<(Arc<CompressedData>, bool)> {
         let key = CacheKey { strategy: strategy.name(), features: features.to_vec() };
         // Fast path under the lock.
         {
@@ -95,11 +121,11 @@ impl YocoStore {
                 .get(dataset)
                 .ok_or_else(|| YocoError::NotFound { what: format!("dataset '{dataset}'") })?;
             if let Some(c) = e.compressed.get(&key) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 return Ok((c.clone(), true));
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses.inc();
         // Compress outside the lock (the batch is cloned cheaply enough
         // via projection; holding the lock across a pipeline run would
         // serialize unrelated datasets).
@@ -112,7 +138,9 @@ impl YocoStore {
             Strategy::SuffStats => PipelineMode::SuffStats,
             Strategy::WithinCluster => PipelineMode::WithinCluster,
         };
-        let pipe = Pipeline::new(self.pipeline_cfg.clone(), mode);
+        let pipe = Pipeline::new(self.pipeline_cfg.clone(), mode)
+            .with_metrics(self.pipeline_metrics.clone())
+            .with_trace(trace.clone());
         let data = Arc::new(pipe.run_batch(&projected)?.into_suffstats()?);
         let mut g = self.datasets.lock().unwrap();
         let e = g
@@ -124,8 +152,13 @@ impl YocoStore {
 
     /// (hits, misses) counters.
     pub fn cache_stats(&self) -> (u64, u64) {
-        use std::sync::atomic::Ordering;
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        (self.hits.get(), self.misses.get())
+    }
+
+    /// The service-lifetime pipeline metrics the store's compressions
+    /// accumulate into.
+    pub fn pipeline_metrics(&self) -> &Arc<Metrics> {
+        &self.pipeline_metrics
     }
 
     /// Outcome column names of a dataset (order matches the compressed
@@ -213,6 +246,35 @@ mod tests {
         assert!(plain.cluster_of().is_none());
         assert!(within.cluster_of().is_some());
         assert!(within.num_groups() >= plain.num_groups());
+    }
+
+    #[test]
+    fn shared_registry_collects_store_and_pipeline_series() {
+        let reg = MetricsRegistry::shared();
+        let s = YocoStore::with_registry(
+            PipelineConfig {
+                workers: 2,
+                virtual_shards: 8,
+                queue_capacity: 2,
+                chunk_rows: 512,
+                rebalance_every: 0,
+                retry: crate::fault::RetryPolicy::default(),
+            },
+            reg.clone(),
+        );
+        // Pipeline series pre-register at construction (empty but present).
+        assert_eq!(reg.snapshot().counter("pipeline_rows_in_total"), Some(0));
+        let (batch, _) = generate_xp(&XpConfig { n: 2000, ..Default::default() });
+        s.register("xp", batch);
+        let feats: Vec<String> = vec!["const".into(), "treat1".into()];
+        s.compressed("xp", &feats, Strategy::SuffStats).unwrap();
+        s.compressed("xp", &feats, Strategy::SuffStats).unwrap();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("store_cache_hits_total"), Some(1));
+        assert_eq!(snap.counter("store_cache_misses_total"), Some(1));
+        assert_eq!(snap.counter("pipeline_rows_in_total"), Some(2000));
+        assert!(snap.histogram("pipeline_chunk_fold_us").unwrap().count > 0);
+        assert_eq!(snap.histogram("pipeline_merge_us").unwrap().count, 1);
     }
 
     #[test]

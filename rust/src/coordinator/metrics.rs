@@ -1,57 +1,107 @@
-//! Coordinator-level metrics.
+//! Coordinator-level metrics: a thin view over `coordinator_*` series
+//! in an [`obs::MetricsRegistry`](crate::obs::MetricsRegistry).
+//!
+//! Request latency is a real log-linear histogram
+//! (`coordinator_request_us`) rather than the old single `total_us`
+//! accumulator, so the snapshot now reports p50/p95/p99/max alongside
+//! the original `mean_latency_us` — which is **derived** from the
+//! histogram's exact `sum/count` (the same left-to-right u64 adds the
+//! old field performed, so existing output is unchanged). Engine
+//! dispatch latency (including each retry attempt) lands in
+//! `coordinator_engine_dispatch_us`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::{Counter, Histogram, MetricsRegistry};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Request counters + latency accumulator.
-#[derive(Default)]
+/// Request counters + latency histograms.
 pub struct CoordinatorMetrics {
-    requests: AtomicU64,
-    errors: AtomicU64,
-    native_fits: AtomicU64,
-    pjrt_fits: AtomicU64,
-    runtime_retries: AtomicU64,
-    runtime_fallbacks: AtomicU64,
-    total_us: AtomicU64,
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    native_fits: Arc<Counter>,
+    pjrt_fits: Arc<Counter>,
+    runtime_retries: Arc<Counter>,
+    runtime_fallbacks: Arc<Counter>,
+    request_us: Arc<Histogram>,
+    dispatch_us: Arc<Histogram>,
+}
+
+impl Default for CoordinatorMetrics {
+    fn default() -> Self {
+        CoordinatorMetrics::with_registry(&MetricsRegistry::default())
+    }
 }
 
 impl CoordinatorMetrics {
+    /// Resolve the coordinator's handles on `registry` (names
+    /// `coordinator_*`). Called once at service construction.
+    pub fn with_registry(registry: &MetricsRegistry) -> Self {
+        CoordinatorMetrics {
+            requests: registry.counter("coordinator_requests_total"),
+            errors: registry.counter("coordinator_errors_total"),
+            native_fits: registry.counter("coordinator_native_fits_total"),
+            pjrt_fits: registry.counter("coordinator_pjrt_fits_total"),
+            runtime_retries: registry.counter("coordinator_runtime_retries_total"),
+            runtime_fallbacks: registry.counter("coordinator_runtime_fallbacks_total"),
+            request_us: registry.histogram("coordinator_request_us"),
+            dispatch_us: registry.histogram("coordinator_engine_dispatch_us"),
+        }
+    }
+
     /// Record one served request.
     pub fn record(&self, engine: &str, elapsed_us: u128) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.total_us.fetch_add(elapsed_us as u64, Ordering::Relaxed);
+        self.requests.inc();
+        self.request_us.record(elapsed_us.min(u128::from(u64::MAX)) as u64);
         match engine {
-            "pjrt" => self.pjrt_fits.fetch_add(1, Ordering::Relaxed),
-            _ => self.native_fits.fetch_add(1, Ordering::Relaxed),
+            "pjrt" => self.pjrt_fits.inc(),
+            _ => self.native_fits.inc(),
         };
     }
 
     /// Record one failed request.
     pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.errors.inc();
     }
 
     /// Record one retried engine dispatch (transient `Runtime` error).
     pub fn add_runtime_retry(&self) {
-        self.runtime_retries.fetch_add(1, Ordering::Relaxed);
+        self.runtime_retries.inc();
     }
 
     /// Record one PJRT→native fallback after repeated runtime errors.
     pub fn add_runtime_fallback(&self) {
-        self.runtime_fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.runtime_fallbacks.inc();
     }
 
-    /// Snapshot.
+    /// Record one engine-dispatch attempt's duration (every attempt,
+    /// retries included).
+    pub fn record_dispatch(&self, elapsed: Duration) {
+        self.dispatch_us.record_duration(elapsed);
+    }
+
+    /// The engine-dispatch histogram handle (for
+    /// [`Trace::span_timed`](crate::obs::Trace::span_timed)).
+    pub fn dispatch_histogram(&self) -> &Arc<Histogram> {
+        &self.dispatch_us
+    }
+
+    /// Snapshot. `mean_latency_us` derives from the request histogram's
+    /// exact sum/count; the percentiles carry its log-linear bucket
+    /// error (≤ 12.5%).
     pub fn snapshot(&self) -> CoordinatorMetricsSnapshot {
-        let req = self.requests.load(Ordering::Relaxed);
-        let total = self.total_us.load(Ordering::Relaxed);
+        let lat = self.request_us.snapshot();
         CoordinatorMetricsSnapshot {
-            requests: req,
-            errors: self.errors.load(Ordering::Relaxed),
-            native_fits: self.native_fits.load(Ordering::Relaxed),
-            pjrt_fits: self.pjrt_fits.load(Ordering::Relaxed),
-            runtime_retries: self.runtime_retries.load(Ordering::Relaxed),
-            runtime_fallbacks: self.runtime_fallbacks.load(Ordering::Relaxed),
-            mean_latency_us: if req > 0 { total as f64 / req as f64 } else { 0.0 },
+            requests: self.requests.get(),
+            errors: self.errors.get(),
+            native_fits: self.native_fits.get(),
+            pjrt_fits: self.pjrt_fits.get(),
+            runtime_retries: self.runtime_retries.get(),
+            runtime_fallbacks: self.runtime_fallbacks.get(),
+            mean_latency_us: lat.mean(),
+            p50_latency_us: lat.p50,
+            p95_latency_us: lat.p95,
+            p99_latency_us: lat.p99,
+            max_latency_us: lat.max,
         }
     }
 }
@@ -71,8 +121,16 @@ pub struct CoordinatorMetricsSnapshot {
     pub runtime_retries: u64,
     /// Requests that fell back from PJRT to the native engine.
     pub runtime_fallbacks: u64,
-    /// Mean service latency (µs).
+    /// Mean service latency (µs), derived from the request histogram.
     pub mean_latency_us: f64,
+    /// Median service latency (µs).
+    pub p50_latency_us: u64,
+    /// 95th-percentile service latency (µs).
+    pub p95_latency_us: u64,
+    /// 99th-percentile service latency (µs).
+    pub p99_latency_us: u64,
+    /// Worst observed service latency (µs).
+    pub max_latency_us: u64,
 }
 
 #[cfg(test)]
@@ -96,5 +154,31 @@ mod tests {
         assert_eq!(s.runtime_retries, 2);
         assert_eq!(s.runtime_fallbacks, 1);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles_come_from_the_histogram() {
+        let m = CoordinatorMetrics::default();
+        for us in [100u128, 100, 100, 100, 100, 100, 100, 100, 100, 5000] {
+            m.record("native", us);
+        }
+        let s = m.snapshot();
+        // p50 sits in 100's bucket (≤ 12.5% over), p99/max catch the tail.
+        assert!(s.p50_latency_us >= 100 && s.p50_latency_us <= 113, "{}", s.p50_latency_us);
+        assert!(s.p99_latency_us >= 5000, "{}", s.p99_latency_us);
+        assert_eq!(s.max_latency_us, 5000);
+        assert!((s.mean_latency_us - 590.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registers_on_a_shared_registry() {
+        let reg = MetricsRegistry::shared();
+        let m = CoordinatorMetrics::with_registry(&reg);
+        m.record("native", 42);
+        m.record_dispatch(Duration::from_micros(7));
+        let s = reg.snapshot();
+        assert_eq!(s.counter("coordinator_requests_total"), Some(1));
+        assert_eq!(s.histogram("coordinator_request_us").unwrap().count, 1);
+        assert_eq!(s.histogram("coordinator_engine_dispatch_us").unwrap().count, 1);
     }
 }

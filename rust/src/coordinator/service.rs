@@ -16,9 +16,11 @@ use std::time::Instant;
 
 use crate::error::{Result, YocoError};
 use crate::estimator::{
-    fit_logistic_suffstats, fit_wls_suffstats, CovarianceKind, LogisticOptions,
+    fit_logistic_suffstats_observed, fit_wls_suffstats_observed, CovarianceKind, FitObs,
+    LogisticOptions,
 };
 use crate::fault::{self, FaultInjector, InjectionPoint, RetryPolicy};
+use crate::obs::{Obs, Trace};
 use crate::pipeline::PipelineConfig;
 use crate::runtime::RuntimeHandle;
 
@@ -32,6 +34,8 @@ pub struct Coordinator {
     store: YocoStore,
     runtime: Option<RuntimeHandle>,
     metrics: CoordinatorMetrics,
+    obs: Obs,
+    kernel_obs: FitObs,
     retry: RetryPolicy,
     fault: Option<Arc<FaultInjector>>,
     /// Monotonic engine-dispatch counter; keys deterministic fault draws.
@@ -41,14 +45,7 @@ pub struct Coordinator {
 impl Coordinator {
     /// Coordinator with no PJRT runtime (native engine only).
     pub fn native_only(pipeline_cfg: PipelineConfig) -> Self {
-        Coordinator {
-            store: YocoStore::new(pipeline_cfg),
-            runtime: None,
-            metrics: CoordinatorMetrics::default(),
-            retry: RetryPolicy::default(),
-            fault: None,
-            dispatches: AtomicU64::new(0),
-        }
+        Coordinator::build(pipeline_cfg, None)
     }
 
     /// Coordinator with the PJRT runtime loaded from `artifacts_dir`.
@@ -63,10 +60,23 @@ impl Coordinator {
                 None
             }
         };
+        Coordinator::build(pipeline_cfg, runtime)
+    }
+
+    /// Shared construction: one [`Obs`] whose registry every layer
+    /// (store, pipeline, estimator kernels, coordinator) registers its
+    /// series on, so a single `metrics` export covers the stack.
+    fn build(pipeline_cfg: PipelineConfig, runtime: Option<RuntimeHandle>) -> Self {
+        let obs = Obs::new();
+        let metrics = CoordinatorMetrics::with_registry(obs.registry());
+        let kernel_obs = FitObs::with_registry(obs.registry());
+        let store = YocoStore::with_registry(pipeline_cfg, obs.registry().clone());
         Coordinator {
-            store: YocoStore::new(pipeline_cfg),
+            store,
             runtime,
-            metrics: CoordinatorMetrics::default(),
+            metrics,
+            obs,
+            kernel_obs,
             retry: RetryPolicy::default(),
             fault: None,
             dispatches: AtomicU64::new(0),
@@ -93,16 +103,23 @@ impl Coordinator {
     fn call_engine_resilient<T>(
         &self,
         what: &str,
+        trace: &Trace,
         mut call: impl FnMut() -> Result<T>,
     ) -> Result<T> {
         let seq = self.dispatches.fetch_add(1, Ordering::Relaxed);
         let mut attempt: u32 = 0;
         loop {
             let key = (seq << 8) | u64::from(attempt & 0xff);
-            let result = if fault::fire_keyed(&self.fault, InjectionPoint::EngineError, key) {
-                Err(YocoError::runtime(format!("injected engine error ({what})")))
-            } else {
-                call()
+            // Every attempt (retries included) gets its own trace span
+            // and lands in `coordinator_engine_dispatch_us`.
+            let result = {
+                let _dispatch =
+                    trace.span_timed(what, self.metrics.dispatch_histogram());
+                if fault::fire_keyed(&self.fault, InjectionPoint::EngineError, key) {
+                    Err(YocoError::runtime(format!("injected engine error ({what})")))
+                } else {
+                    call()
+                }
             };
             match result {
                 Ok(v) => return Ok(v),
@@ -141,25 +158,55 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Serve one analysis request.
+    /// The coordinator's observability bundle (registry + tracer) —
+    /// the server reads it for the `metrics`/`trace` commands.
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// Serve one analysis request under a fresh trace labeled
+    /// `analyze <dataset>/<outcome>`.
     pub fn analyze(&self, req: &AnalysisRequest) -> Result<AnalysisResponse> {
-        let result = self.analyze_inner(req);
+        let trace = self
+            .obs
+            .tracer()
+            .start(&format!("analyze {}/{}", req.dataset, req.outcome));
+        self.analyze_traced(req, &trace)
+    }
+
+    /// Serve one analysis request, recording per-stage spans (plan,
+    /// compress, engine dispatch) into the caller's `trace`.
+    pub fn analyze_traced(
+        &self,
+        req: &AnalysisRequest,
+        trace: &Trace,
+    ) -> Result<AnalysisResponse> {
+        let result = self.analyze_inner(req, trace);
         if result.is_err() {
             self.metrics.record_error();
         }
         result
     }
 
-    fn analyze_inner(&self, req: &AnalysisRequest) -> Result<AnalysisResponse> {
+    fn analyze_inner(
+        &self,
+        req: &AnalysisRequest,
+        trace: &Trace,
+    ) -> Result<AnalysisResponse> {
         let start = Instant::now();
-        let schema = self.store.schema(&req.dataset)?;
-        // Estimate G pessimistically as the row count for engine
-        // planning; refined after compression.
-        let est_g = self.store.num_rows(&req.dataset)?;
-        let plan = plan(req, &schema, self.runtime.is_some(), est_g.min(65536))?;
+        let plan = {
+            let _plan_span = trace.span("plan");
+            let schema = self.store.schema(&req.dataset)?;
+            // Estimate G pessimistically as the row count for engine
+            // planning; refined after compression.
+            let est_g = self.store.num_rows(&req.dataset)?;
+            plan(req, &schema, self.runtime.is_some(), est_g.min(65536))?
+        };
 
-        let (data, cache_hit) =
-            self.store.compressed(&req.dataset, &plan.features, plan.strategy)?;
+        let (data, cache_hit) = {
+            let _compress_span = trace.span("compress");
+            self.store.compressed_traced(&req.dataset, &plan.features, plan.strategy, trace)?
+        };
 
         // Outcome column -> index within the compressed outcome block.
         let outcome_names = self.store.outcome_names(&req.dataset)?;
@@ -187,21 +234,31 @@ impl Coordinator {
         let (fit_beta, fit_se, fit_t, sigma2, n, records, clusters, engine_used) =
             match req.estimator {
                 EstimatorKind::Wls => {
-                    let native = || fit_wls_suffstats(&data, outcome_idx, req.covariance);
+                    let native = || {
+                        fit_wls_suffstats_observed(
+                            &data,
+                            outcome_idx,
+                            req.covariance,
+                            &self.kernel_obs,
+                        )
+                    };
                     let (fit, engine_used) = if use_pjrt {
                         let rt = self.runtime.as_ref().expect("planner guarantees runtime");
-                        match self.call_engine_resilient("pjrt wls", || {
+                        match self.call_engine_resilient("pjrt wls", trace, || {
                             rt.fit(&data, outcome_idx, req.covariance)
                         }) {
                             Ok(fit) => (fit, "pjrt"),
                             Err(e) if fall_back(&e) => {
                                 self.metrics.add_runtime_fallback();
-                                (self.call_engine_resilient("native wls", native)?, "native")
+                                (
+                                    self.call_engine_resilient("native wls", trace, native)?,
+                                    "native",
+                                )
                             }
                             Err(e) => return Err(e),
                         }
                     } else {
-                        (self.call_engine_resilient("native wls", native)?, "native")
+                        (self.call_engine_resilient("native wls", trace, native)?, "native")
                     };
                     (
                         fit.beta.clone(),
@@ -217,7 +274,7 @@ impl Coordinator {
                 EstimatorKind::Logistic => {
                     let pjrt_out = if use_pjrt {
                         let rt = self.runtime.as_ref().expect("planner guarantees runtime");
-                        match self.call_engine_resilient("pjrt logistic", || {
+                        match self.call_engine_resilient("pjrt logistic", trace, || {
                             rt.fit_logistic(&data, outcome_idx)
                         }) {
                             Ok(out) => Some(out),
@@ -248,13 +305,15 @@ impl Coordinator {
                             )
                         }
                         None => {
-                            let fit = self.call_engine_resilient("native logistic", || {
-                                fit_logistic_suffstats(
-                                    &data,
-                                    outcome_idx,
-                                    &LogisticOptions::default(),
-                                )
-                            })?;
+                            let fit =
+                                self.call_engine_resilient("native logistic", trace, || {
+                                    fit_logistic_suffstats_observed(
+                                        &data,
+                                        outcome_idx,
+                                        &LogisticOptions::default(),
+                                        &self.kernel_obs,
+                                    )
+                                })?;
                             let se = fit.se();
                             let t: Vec<f64> =
                                 fit.beta.iter().zip(&se).map(|(b, s)| b / s).collect();
@@ -333,6 +392,29 @@ mod tests {
         let m = c.metrics();
         assert_eq!(m.requests, 2);
         assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn obs_registry_and_traces_cover_the_stack() {
+        let c = coordinator();
+        let (batch, _) = generate_xp(&XpConfig { n: 3000, ..Default::default() });
+        c.store().register("xp", batch);
+        c.analyze(&AnalysisRequest::wls("xp", "y0")).unwrap();
+        let snap = c.obs().registry().snapshot();
+        assert!(snap.series_count() >= 12, "only {} series", snap.series_count());
+        assert_eq!(snap.counter("coordinator_requests_total"), Some(1));
+        assert_eq!(snap.histogram("coordinator_request_us").unwrap().count, 1);
+        assert_eq!(snap.histogram("coordinator_engine_dispatch_us").unwrap().count, 1);
+        assert_eq!(snap.histogram("estimator_gram_us").unwrap().count, 1);
+        assert!(snap.histogram("pipeline_chunk_fold_us").unwrap().count >= 1);
+        let traces = c.obs().tracer().recent(1);
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].label, "analyze xp/y0");
+        let names: Vec<_> =
+            traces[0].spans.iter().map(|s| s.name.as_str()).collect();
+        for stage in ["plan", "compress", "native wls", "feed", "merge"] {
+            assert!(names.contains(&stage), "missing span '{stage}' in {names:?}");
+        }
     }
 
     #[test]

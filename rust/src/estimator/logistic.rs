@@ -154,6 +154,20 @@ pub fn fit_logistic_suffstats(
     irls(data.features(), p, succ, data.counts(), data.total_n(), opts)
 }
 
+/// [`fit_logistic_suffstats`] that also adds the fit's Newton iteration
+/// count to `obs.irls_iterations`. Identical numerics; the coordinator
+/// uses this entry point.
+pub fn fit_logistic_suffstats_observed(
+    data: &CompressedData,
+    outcome: usize,
+    opts: &LogisticOptions,
+    obs: &super::observe::FitObs,
+) -> Result<LogisticFit> {
+    let fit = fit_logistic_suffstats(data, outcome, opts)?;
+    obs.irls_iterations.add(fit.iterations as u64);
+    Ok(fit)
+}
+
 /// Fit logistic regression on raw observations (oracle / baseline).
 pub fn fit_logistic(
     m: &Matrix,

@@ -20,6 +20,7 @@ mod fit;
 mod groups;
 mod kernels;
 mod logistic;
+mod observe;
 mod ols;
 mod sgd;
 mod ttest;
@@ -31,9 +32,13 @@ pub use cluster::{fit_between_cluster, fit_cluster_static};
 pub use fit::{cr1_factor, CovarianceKind, Fit, WeightKind};
 pub use groups::fit_group_means;
 pub use kernels::gram_xtwx_xtwy;
-pub use logistic::{fit_logistic, fit_logistic_suffstats, LogisticFit, LogisticOptions};
+pub use logistic::{
+    fit_logistic, fit_logistic_suffstats, fit_logistic_suffstats_observed, LogisticFit,
+    LogisticOptions,
+};
+pub use observe::FitObs;
 pub use ols::fit_ols;
 pub use sgd::{fit_sgd, fit_sgd_compressed, SgdOptions};
 pub use ttest::{ttest, TTestResult};
 pub use weights::fit_weighted_suffstats;
-pub use wls::{fit_all_outcomes, fit_wls_suffstats};
+pub use wls::{fit_all_outcomes, fit_wls_suffstats, fit_wls_suffstats_observed};

@@ -1,0 +1,48 @@
+//! Pre-resolved observability handles for the estimation engines.
+//!
+//! The pure kernels stay oblivious to metrics; the coordinator resolves
+//! a [`FitObs`] once at construction and calls the `*_observed` fit
+//! entry points, which time the fused gram kernel and count IRLS
+//! Newton iterations into the shared registry.
+
+use crate::obs::{Counter, Histogram, MetricsRegistry};
+use std::sync::Arc;
+
+/// Estimator-level metric handles (names `estimator_*`), resolved once
+/// and threaded into [`fit_wls_suffstats_observed`](super::
+/// fit_wls_suffstats_observed) / [`fit_logistic_suffstats_observed`](
+/// super::fit_logistic_suffstats_observed).
+pub struct FitObs {
+    /// Wall time of each fused [`gram_xtwx_xtwy`](super::gram_xtwx_xtwy)
+    /// kernel invocation (`estimator_gram_us`).
+    pub gram_us: Arc<Histogram>,
+    /// Cumulative Newton iterations across logistic fits
+    /// (`estimator_irls_iterations_total`).
+    pub irls_iterations: Arc<Counter>,
+}
+
+impl FitObs {
+    /// Resolve the estimator series on `registry`.
+    pub fn with_registry(registry: &MetricsRegistry) -> Self {
+        FitObs {
+            gram_us: registry.histogram("estimator_gram_us"),
+            irls_iterations: registry.counter("estimator_irls_iterations_total"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_named_series() {
+        let reg = MetricsRegistry::shared();
+        let obs = FitObs::with_registry(&reg);
+        obs.irls_iterations.add(4);
+        obs.gram_us.record(250);
+        let s = reg.snapshot();
+        assert_eq!(s.counter("estimator_irls_iterations_total"), Some(4));
+        assert_eq!(s.histogram("estimator_gram_us").unwrap().count, 1);
+    }
+}

@@ -12,6 +12,7 @@
 
 use super::fit::{cr1_factor, CovarianceKind, Fit};
 use super::kernels::{dot, gram_xtwx_xtwy};
+use super::observe::FitObs;
 use crate::compress::CompressedData;
 use crate::error::{Result, YocoError};
 use crate::linalg::{outer_product_accumulate, sandwich, Cholesky, Matrix};
@@ -23,6 +24,27 @@ pub fn fit_wls_suffstats(
     data: &CompressedData,
     outcome: usize,
     kind: CovarianceKind,
+) -> Result<Fit> {
+    fit_wls_impl(data, outcome, kind, None)
+}
+
+/// [`fit_wls_suffstats`] recording the fused gram kernel's wall time
+/// into `obs.gram_us`. Identical numerics; the coordinator uses this
+/// entry point.
+pub fn fit_wls_suffstats_observed(
+    data: &CompressedData,
+    outcome: usize,
+    kind: CovarianceKind,
+    obs: &FitObs,
+) -> Result<Fit> {
+    fit_wls_impl(data, outcome, kind, Some(obs))
+}
+
+fn fit_wls_impl(
+    data: &CompressedData,
+    outcome: usize,
+    kind: CovarianceKind,
+    obs: Option<&FitObs>,
 ) -> Result<Fit> {
     let g_count = data.num_groups();
     let p = data.num_features();
@@ -37,7 +59,15 @@ pub fn fit_wls_suffstats(
     // Bread: M̃ᵀ diag(ñ) M̃ and cross-moment M̃ᵀ ỹ', in one fused pass
     // over the compressed storage (no feature-matrix clone).
     let counts = data.counts();
-    let (gram, xty) = gram_xtwx_xtwy(data, outcome)?;
+    let (gram, xty) = match obs {
+        Some(o) => {
+            let t0 = std::time::Instant::now();
+            let r = gram_xtwx_xtwy(data, outcome)?;
+            o.gram_us.record_duration(t0.elapsed());
+            r
+        }
+        None => gram_xtwx_xtwy(data, outcome)?,
+    };
 
     let chol = Cholesky::new(&gram)?;
     let beta = chol.solve_vec(&xty)?;

@@ -32,6 +32,12 @@
 //! * [`fault`] — deterministic fault injection (seeded, keyed draws;
 //!   no-op unless built with `--features fault-injection`) plus the
 //!   [`RetryPolicy`](fault::RetryPolicy) the resilience layers share.
+//! * [`obs`] — unified observability: the global-free
+//!   [`MetricsRegistry`](obs::MetricsRegistry) (named counters, gauges,
+//!   log-linear latency histograms with p50/p95/p99/max), RAII
+//!   [`Span`](obs::Span) tracing with a ring of recent per-request
+//!   records, and Prometheus/JSON export for the live `metrics`/`trace`
+//!   commands.
 //! * [`coordinator`] — the analysis service: request DSL, planner,
 //!   router, compressed-dataset cache (the YOCO store), metrics.
 //! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
@@ -80,6 +86,7 @@ pub mod error;
 pub mod estimator;
 pub mod fault;
 pub mod linalg;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod server;

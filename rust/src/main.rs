@@ -43,7 +43,7 @@ fn print_help() {
          USAGE: yoco <subcommand> [options]\n\n\
          SUBCOMMANDS:\n  \
          serve   [--addr 127.0.0.1:7878] [--artifacts DIR]   start the TCP service\n  \
-         demo    [--n 100000] [--artifacts DIR]              run a request battery\n  \
+         demo    [--n 100000] [--artifacts DIR] [--metrics-dump]  run a request battery\n  \
          table1                                              reproduce paper Table 1\n  \
          report  <fig1|memory|table2|cluster> [--quick]      regenerate a paper artifact"
     );
@@ -118,10 +118,35 @@ fn cmd_demo(args: &[String]) -> i32 {
     }
     let m = coordinator.metrics();
     println!(
-        "served {} requests (native {}, pjrt {}), mean latency {:.0} µs",
-        m.requests, m.native_fits, m.pjrt_fits, m.mean_latency_us
+        "served {} requests (native {}, pjrt {}), latency µs: mean {:.0} p50 {} p95 {} p99 {} max {}",
+        m.requests,
+        m.native_fits,
+        m.pjrt_fits,
+        m.mean_latency_us,
+        m.p50_latency_us,
+        m.p95_latency_us,
+        m.p99_latency_us,
+        m.max_latency_us
     );
+    if args.iter().any(|a| a == "--metrics-dump") {
+        print_metrics_dump(&coordinator);
+    }
     0
+}
+
+/// Exit report behind `--metrics-dump`: the full registry in Prometheus
+/// text form plus per-stage timings for the most recent traces.
+fn print_metrics_dump(coordinator: &Coordinator) {
+    let obs = coordinator.obs();
+    println!("\n--- metrics ---");
+    print!("{}", yoco::obs::prometheus_text(&obs.registry().snapshot()));
+    println!("--- traces (newest first) ---");
+    for t in obs.tracer().recent(8) {
+        println!("#{} {} total {} µs", t.id, t.label, t.total_us);
+        for s in &t.spans {
+            println!("    {:<16} +{:>6} µs  {:>6} µs", s.name, s.start_us, s.dur_us);
+        }
+    }
 }
 
 fn cmd_table1() -> i32 {

@@ -1,0 +1,170 @@
+//! Rendering a [`RegistrySnapshot`] and recent traces for the wire:
+//! Prometheus text exposition and the repo's deterministic
+//! [`Json`](crate::util::json::Json).
+//!
+//! Histograms render as Prometheus summaries (`{quantile="…"}` series
+//! plus `_sum`/`_count`, and a non-standard `_max` gauge); names are
+//! emitted exactly as registered, already namespaced per layer
+//! (`coordinator_*`, `pipeline_*`, `server_*`, `estimator_*`).
+
+use super::histogram::HistogramSnapshot;
+use super::registry::RegistrySnapshot;
+use super::span::TraceRecord;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Prometheus text exposition of a registry snapshot.
+pub fn prometheus_text(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+    }
+    for (name, h) in &snap.histograms {
+        let _ = writeln!(out, "# TYPE {name} summary");
+        for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+            let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+        }
+        let _ = writeln!(out, "{name}_sum {}", h.sum);
+        let _ = writeln!(out, "{name}_count {}", h.count);
+        let _ = writeln!(out, "{name}_max {}", h.max);
+    }
+    out
+}
+
+fn histogram_json(h: &HistogramSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count as f64)),
+        ("sum", Json::Num(h.sum as f64)),
+        ("mean", Json::Num(h.mean())),
+        ("p50", Json::Num(h.p50 as f64)),
+        ("p95", Json::Num(h.p95 as f64)),
+        ("p99", Json::Num(h.p99 as f64)),
+        ("max", Json::Num(h.max as f64)),
+    ])
+}
+
+/// JSON object with one member per series, grouped by kind.
+pub fn registry_json(snap: &RegistrySnapshot) -> Json {
+    let kind = |pairs: Vec<(String, Json)>| {
+        Json::Obj(pairs.into_iter().collect())
+    };
+    Json::obj(vec![
+        (
+            "counters",
+            kind(snap
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect()),
+        ),
+        (
+            "gauges",
+            kind(snap
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect()),
+        ),
+        (
+            "histograms",
+            kind(snap
+                .histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), histogram_json(h)))
+                .collect()),
+        ),
+    ])
+}
+
+/// JSON array of trace records, per-stage spans included.
+pub fn traces_json(traces: &[TraceRecord]) -> Json {
+    Json::Arr(
+        traces
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("id", Json::Num(t.id as f64)),
+                    ("label", Json::Str(t.label.clone())),
+                    ("total_us", Json::Num(t.total_us as f64)),
+                    (
+                        "spans",
+                        Json::Arr(
+                            t.spans
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("name", Json::Str(s.name.clone())),
+                                        ("start_us", Json::Num(s.start_us as f64)),
+                                        ("dur_us", Json::Num(s.dur_us as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::MetricsRegistry;
+
+    fn populated() -> RegistrySnapshot {
+        let r = MetricsRegistry::default();
+        r.counter("pipeline_rows_in_total").add(5000);
+        r.gauge("server_active_connections").set(2);
+        let h = r.histogram("coordinator_request_us");
+        for v in [100, 200, 300] {
+            h.record(v);
+        }
+        r.snapshot()
+    }
+
+    #[test]
+    fn prometheus_text_has_all_series() {
+        let text = prometheus_text(&populated());
+        assert!(text.contains("# TYPE pipeline_rows_in_total counter"));
+        assert!(text.contains("pipeline_rows_in_total 5000"));
+        assert!(text.contains("server_active_connections 2"));
+        assert!(text.contains("coordinator_request_us{quantile=\"0.5\"}"));
+        assert!(text.contains("coordinator_request_us_sum 600"));
+        assert!(text.contains("coordinator_request_us_count 3"));
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let j = registry_json(&populated());
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("counters").unwrap().get("pipeline_rows_in_total").unwrap().as_f64(),
+            Some(5000.0)
+        );
+        let h = parsed.get("histograms").unwrap().get("coordinator_request_us").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(3.0));
+        assert_eq!(h.get("mean").unwrap().as_f64(), Some(200.0));
+    }
+
+    #[test]
+    fn traces_serialize_with_spans() {
+        use crate::obs::Tracer;
+        use std::sync::Arc;
+        let t = Arc::new(Tracer::new(4));
+        {
+            let tr = t.start("analyze demo/y0");
+            drop(tr.span("compress"));
+        }
+        let j = traces_json(&t.recent(10));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("label").unwrap().as_str(), Some("analyze demo/y0"));
+        let spans = arr[0].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[0].get("name").unwrap().as_str(), Some("compress"));
+    }
+}

@@ -1,0 +1,237 @@
+//! Log-linear (HDR-style) latency histograms on `Relaxed` atomics.
+//!
+//! Values (microseconds, `u64`) are bucketed into 8 linear sub-buckets
+//! per power of two: bucket width doubles every octave, so the relative
+//! quantile error is bounded by 1/8 = 12.5% while the whole `u64` range
+//! fits in [`BUCKET_COUNT`] = 496 fixed slots. Recording is four
+//! `Relaxed` atomic RMWs (count, sum, max, bucket) with no allocation
+//! and no locking; when sampling is disabled ([`MetricsRegistry::
+//! set_sampling`](super::MetricsRegistry::set_sampling)) the record path
+//! is a single `Relaxed` load followed by an early return.
+//!
+//! Snapshots read the buckets without stopping writers, so a snapshot
+//! taken mid-record is approximate (bounded by in-flight records); once
+//! writers are quiescent it is exact.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// log2 of the linear sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+/// Linear sub-buckets per octave (8).
+const SUB: u64 = 1 << SUB_BITS;
+/// Total bucket count covering the whole `u64` range.
+pub const BUCKET_COUNT: usize = (64 - SUB_BITS as usize + 1) << SUB_BITS;
+
+/// Bucket index for a recorded value (log-linear: exact below 16,
+/// 12.5% relative width above).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < 2 * SUB {
+        return v as usize;
+    }
+    let e = 63 - u64::from(v.leading_zeros());
+    let tier = e - u64::from(SUB_BITS) + 1;
+    let sub = (v >> (e - u64::from(SUB_BITS))) & (SUB - 1);
+    (tier * SUB + sub) as usize
+}
+
+/// Inclusive upper bound of bucket `i` — the value reported for a
+/// quantile that lands in the bucket (conservative: never understates).
+fn bucket_upper(i: usize) -> u64 {
+    if i < (2 * SUB) as usize {
+        return i as u64;
+    }
+    let tier = (i as u64) >> SUB_BITS;
+    let sub = (i as u64) & (SUB - 1);
+    let lower = (SUB + sub) << (tier - 1);
+    lower + (1u64 << (tier - 1)) - 1
+}
+
+/// A log-linear latency histogram with lock-free `Relaxed` recording.
+///
+/// Obtained from [`MetricsRegistry::histogram`](super::MetricsRegistry::
+/// histogram); all handles to the same name share one instance.
+pub struct Histogram {
+    enabled: Arc<AtomicBool>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Histogram {
+    /// New histogram gated on the shared sampling flag.
+    pub(crate) fn new(enabled: Arc<AtomicBool>) -> Histogram {
+        Histogram {
+            enabled,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: (0..BUCKET_COUNT).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one value (microseconds by convention). No-op when
+    /// sampling is disabled.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !self.enabled.load(Relaxed) {
+            return;
+        }
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+    }
+
+    /// Record a wall-clock duration as whole microseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Point-in-time view with p50/p95/p99/max. Quantiles are computed
+    /// from the bucket array and clamped to the observed max.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        let max = self.max.load(Relaxed);
+        let q = |p: f64| quantile(&counts, total, p).min(max);
+        HistogramSnapshot {
+            count: self.count.load(Relaxed),
+            sum: self.sum.load(Relaxed),
+            max,
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+        }
+    }
+}
+
+/// Smallest value `u` such that at least `ceil(p·total)` recorded
+/// values fall in buckets with upper bound ≤ `u`.
+fn quantile(counts: &[u64], total: u64, p: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((p * total as f64).ceil() as u64).clamp(1, total);
+    let mut acc = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return bucket_upper(i);
+        }
+    }
+    bucket_upper(BUCKET_COUNT - 1)
+}
+
+/// Immutable view of a [`Histogram`] at snapshot time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Number of recorded values.
+    pub count: u64,
+    /// Exact sum of recorded values (left-to-right u64 adds).
+    pub sum: u64,
+    /// Largest recorded value.
+    pub max: u64,
+    /// Median estimate (≤ 12.5% relative error).
+    pub p50: u64,
+    /// 95th percentile estimate.
+    pub p95: u64,
+    /// 99th percentile estimate.
+    pub p99: u64,
+}
+
+impl HistogramSnapshot {
+    /// Exact mean (`sum / count`), 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    fn hist() -> Histogram {
+        Histogram::new(Arc::new(AtomicBool::new(true)))
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_bounds() {
+        let mut last = 0usize;
+        let mut v = 0u64;
+        while v < 1 << 40 {
+            let i = bucket_index(v);
+            assert!(i >= last, "v={v}");
+            assert!(i < BUCKET_COUNT);
+            assert!(bucket_upper(i) >= v, "upper({i}) < {v}");
+            last = i;
+            v = v * 2 + 1;
+        }
+        assert!(bucket_index(u64::MAX) < BUCKET_COUNT);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_upper(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // Upper bound of a value's bucket overstates by at most 12.5%.
+        let mut v = 16u64;
+        while v < 1 << 50 {
+            for off in [0u64, 1, v / 3, v / 2] {
+                let x = v + off;
+                let u = bucket_upper(bucket_index(x));
+                assert!(u >= x);
+                assert!((u - x) as f64 <= 0.125 * x as f64 + 1.0, "x={x} u={u}");
+            }
+            v <<= 1;
+        }
+    }
+
+    #[test]
+    fn quantiles_track_known_distribution() {
+        let h = hist();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500_500);
+        assert_eq!(s.max, 1000);
+        // 12.5% bucket error bound around the true order statistics.
+        assert!(s.p50 >= 500 && s.p50 <= 563, "p50={}", s.p50);
+        assert!(s.p95 >= 950 && s.p95 <= 1000, "p95={}", s.p95);
+        assert!(s.p99 >= 990 && s.p99 <= 1000, "p99={}", s.p99);
+        assert!((s.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disabled_sampling_is_a_no_op() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let h = Histogram::new(flag.clone());
+        h.record(42);
+        assert_eq!(h.snapshot(), HistogramSnapshot::default());
+        flag.store(true, Relaxed);
+        h.record(42);
+        assert_eq!(h.snapshot().count, 1);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_zero() {
+        assert_eq!(hist().snapshot(), HistogramSnapshot::default());
+    }
+}

@@ -1,0 +1,99 @@
+//! Unified observability: metrics registry, latency histograms, and
+//! request tracing — zero dependencies, no global state.
+//!
+//! The paper's premise is that sufficient statistics preserve the
+//! interactions that matter; this module applies the same discipline to
+//! the serving system itself. One [`MetricsRegistry`] per service holds
+//! every named series (counters, gauges, log-linear histograms with
+//! p50/p95/p99/max), one [`Tracer`] keeps a ring buffer of recent
+//! per-request [`TraceRecord`]s, and [`export`] renders both as
+//! Prometheus text or [`Json`](crate::util::json::Json) for the TCP
+//! `metrics`/`trace` commands and `--metrics-dump`.
+//!
+//! Design rules, enforced across the crate:
+//!
+//! - **Global-free**: everything hangs off an [`Obs`] value owned by
+//!   the coordinator and threaded into the store, pipeline, and server.
+//! - **Handles, not lookups**: layers resolve `Arc<Counter>` /
+//!   `Arc<Histogram>` once at construction; hot paths touch only
+//!   `Relaxed` atomics.
+//! - **No-op when off**: [`MetricsRegistry::set_sampling`] gates every
+//!   histogram record and trace start behind a single `Relaxed` load.
+//!   Counters stay exact regardless (the chaos suite pins them against
+//!   injected fault counts).
+
+mod export;
+mod histogram;
+mod registry;
+mod span;
+
+pub use export::{prometheus_text, registry_json, traces_json};
+pub use histogram::{Histogram, HistogramSnapshot, BUCKET_COUNT};
+pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use span::{Span, SpanGuard, Trace, TraceRecord, Tracer};
+
+use std::sync::Arc;
+
+/// How many finished traces the per-service ring buffer retains.
+pub const TRACE_RING_CAPACITY: usize = 64;
+
+/// The observability bundle one service owns: a registry plus a tracer
+/// sharing the same sampling flag. Cloning shares both.
+#[derive(Clone)]
+pub struct Obs {
+    registry: Arc<MetricsRegistry>,
+    tracer: Arc<Tracer>,
+}
+
+impl Obs {
+    /// Fresh registry + tracer (ring of [`TRACE_RING_CAPACITY`]),
+    /// sampling enabled.
+    pub fn new() -> Obs {
+        let registry = MetricsRegistry::shared();
+        let tracer =
+            Arc::new(Tracer::with_sampling_flag(TRACE_RING_CAPACITY, registry.sampling_flag()));
+        Obs { registry, tracer }
+    }
+
+    /// The metrics registry.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// The request tracer.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Enable/disable latency sampling (histograms and traces at once).
+    pub fn set_sampling(&self, on: bool) {
+        self.registry.set_sampling(on);
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_shares_one_sampling_flag() {
+        let obs = Obs::new();
+        let h = obs.registry().histogram("x_us");
+        obs.set_sampling(false);
+        h.record(1);
+        drop(obs.tracer().start("t"));
+        assert_eq!(h.snapshot().count, 0);
+        assert!(obs.tracer().recent(10).is_empty());
+        obs.set_sampling(true);
+        h.record(1);
+        drop(obs.tracer().start("t"));
+        assert_eq!(h.snapshot().count, 1);
+        assert_eq!(obs.tracer().recent(10).len(), 1);
+    }
+}

@@ -1,0 +1,274 @@
+//! The global-free metrics registry: named counters, gauges, and
+//! histograms behind cheap `Arc` handles.
+//!
+//! Ownership model: each service layer (coordinator, pipeline, server)
+//! holds an `Arc<MetricsRegistry>` and resolves its handles **once** at
+//! construction time — the hot paths then touch only `Relaxed` atomics
+//! through the pre-resolved `Arc<Counter>` / `Arc<Histogram>`, never
+//! the registry's name maps. `BTreeMap` keys keep snapshot/export
+//! ordering deterministic.
+//!
+//! Counters and gauges are always-on (they carry correctness-relevant
+//! totals like `pipeline_worker_panics_total` that the chaos suite pins
+//! exactly); latency **histograms** honor the sampling flag and
+//! degenerate to a single `Relaxed` load when disabled.
+
+use super::histogram::{Histogram, HistogramSnapshot};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, RwLock};
+
+/// Monotone counter (`Relaxed` adds).
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.value.load(Relaxed)
+    }
+}
+
+/// Last-write-wins level (`Relaxed` store), e.g. queue depth or active
+/// connections.
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// Overwrite the level.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Relaxed);
+    }
+
+    /// Add `n` to the level.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Relaxed);
+    }
+
+    /// Subtract `n` from the level (saturating at 0).
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        // fetch_update loop would be stronger than needed; a saturating
+        // fetch_sub is fine because all writers are paired add/sub.
+        self.value.fetch_sub(n, Relaxed);
+    }
+
+    /// Current level.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.value.load(Relaxed)
+    }
+}
+
+/// Named metric store. Construction is cheap; clone the `Arc` to share
+/// one registry across layers.
+pub struct MetricsRegistry {
+    sampling: Arc<AtomicBool>,
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry {
+            sampling: Arc::new(AtomicBool::new(true)),
+            counters: RwLock::new(BTreeMap::new()),
+            gauges: RwLock::new(BTreeMap::new()),
+            histograms: RwLock::new(BTreeMap::new()),
+        }
+    }
+}
+
+impl MetricsRegistry {
+    /// A fresh registry behind an `Arc`, sampling enabled.
+    pub fn shared() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    /// The shared sampling flag (handed to histograms and the tracer).
+    pub(crate) fn sampling_flag(&self) -> Arc<AtomicBool> {
+        self.sampling.clone()
+    }
+
+    /// Enable/disable latency sampling (histograms + traces). Counters
+    /// and gauges are unaffected.
+    pub fn set_sampling(&self, on: bool) {
+        self.sampling.store(on, Relaxed);
+    }
+
+    /// Whether latency sampling is currently enabled.
+    pub fn sampling_enabled(&self) -> bool {
+        self.sampling.load(Relaxed)
+    }
+
+    /// Get-or-register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return c.clone();
+        }
+        self.counters
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return g.clone();
+        }
+        self.gauges
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-register the histogram `name` (gated on the sampling
+    /// flag).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = self.histograms.read().unwrap().get(name) {
+            return h.clone();
+        }
+        self.histograms
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new(self.sampling.clone())))
+            .clone()
+    }
+
+    /// Point-in-time view of every registered series, names sorted.
+    /// Writers are not stopped: values lag in-flight `Relaxed` updates
+    /// but each series is internally consistent once writers quiesce.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let counters = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        RegistrySnapshot { counters, gauges, histograms }
+    }
+}
+
+/// Everything the registry knew at snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    /// `(name, value)` for every counter, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, level)` for every gauge, sorted by name.
+    pub gauges: Vec<(String, u64)>,
+    /// `(name, snapshot)` for every histogram, sorted by name.
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl RegistrySnapshot {
+    /// Total number of named series (counters + gauges + histograms).
+    pub fn series_count(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.histograms.len()
+    }
+
+    /// Counter value by name, if registered.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Gauge level by name, if registered.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Histogram snapshot by name, if registered.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let r = MetricsRegistry::default();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter("x").get(), 3);
+        assert_eq!(r.snapshot().counter("x"), Some(3));
+    }
+
+    #[test]
+    fn gauges_go_up_and_down() {
+        let r = MetricsRegistry::default();
+        let g = r.gauge("depth");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.set(7);
+        assert_eq!(r.snapshot().gauges, vec![("depth".to_string(), 7)]);
+    }
+
+    #[test]
+    fn sampling_gates_histograms_not_counters() {
+        let r = MetricsRegistry::default();
+        r.set_sampling(false);
+        r.histogram("lat_us").record(10);
+        r.counter("n").inc();
+        let s = r.snapshot();
+        assert_eq!(s.histogram("lat_us").unwrap().count, 0);
+        assert_eq!(s.counter("n"), Some(1));
+        r.set_sampling(true);
+        r.histogram("lat_us").record(10);
+        assert_eq!(r.snapshot().histogram("lat_us").unwrap().count, 1);
+    }
+
+    #[test]
+    fn snapshot_names_are_sorted() {
+        let r = MetricsRegistry::default();
+        r.counter("b");
+        r.counter("a");
+        let names: Vec<_> = r.snapshot().counters.into_iter().map(|(k, _)| k).collect();
+        assert_eq!(names, ["a", "b"]);
+    }
+}

@@ -1,0 +1,275 @@
+//! RAII-timed tracing: trace IDs that flow from a server request
+//! through the coordinator, engine dispatch, and the pipeline's
+//! supervised workers.
+//!
+//! A [`Tracer`] hands out [`Trace`]s (cheap `Arc` clones, sendable
+//! across worker threads). Each [`Trace::span`] returns a [`SpanGuard`]
+//! that records a named [`Span`] — offset from the trace start plus
+//! duration, both in microseconds — when dropped. When the last clone
+//! of a trace drops, the finished [`TraceRecord`] is pushed into the
+//! tracer's fixed-capacity ring buffer, which the TCP `trace` command
+//! and `--metrics-dump` read newest-first.
+//!
+//! When sampling is disabled (shared flag with the
+//! [`MetricsRegistry`](super::MetricsRegistry)), [`Tracer::start`]
+//! returns a disabled trace: spans neither allocate nor lock, so traced
+//! code paths pay one `Relaxed` load and an `Instant::now()`.
+
+use super::histogram::Histogram;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One completed, named phase inside a trace.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Stage name, e.g. `"compress"` or `"engine_dispatch"`.
+    pub name: String,
+    /// Microseconds from the trace start to the span start.
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+}
+
+/// A finished trace: identity, end-to-end duration, per-stage spans in
+/// completion order.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Process-unique trace ID (monotone from 1).
+    pub id: u64,
+    /// Request label, e.g. `"analyze demo/y0"`.
+    pub label: String,
+    /// End-to-end duration in microseconds.
+    pub total_us: u64,
+    /// Completed spans, in the order they finished.
+    pub spans: Vec<Span>,
+}
+
+/// Issues trace IDs and keeps the ring buffer of recent traces.
+pub struct Tracer {
+    sampling: Arc<AtomicBool>,
+    next_id: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<TraceRecord>>,
+}
+
+impl Tracer {
+    /// Tracer retaining the last `capacity` traces, always sampling.
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer::with_sampling_flag(capacity, Arc::new(AtomicBool::new(true)))
+    }
+
+    /// Tracer gated on a shared sampling flag (see
+    /// [`Obs::new`](super::Obs::new)).
+    pub fn with_sampling_flag(capacity: usize, sampling: Arc<AtomicBool>) -> Tracer {
+        Tracer {
+            sampling,
+            next_id: AtomicU64::new(1),
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Start a trace. Returns a disabled (free) trace when sampling is
+    /// off.
+    pub fn start(self: &Arc<Self>, label: &str) -> Trace {
+        if !self.sampling.load(Relaxed) {
+            return Trace::disabled();
+        }
+        Trace {
+            inner: Some(Arc::new(TraceInner {
+                tracer: self.clone(),
+                id: self.next_id.fetch_add(1, Relaxed),
+                label: label.to_string(),
+                started: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// Up to `n` most recent finished traces, newest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceRecord> {
+        let ring = self.ring.lock().unwrap();
+        ring.iter().rev().take(n).cloned().collect()
+    }
+
+    fn push(&self, rec: TraceRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+}
+
+struct TraceInner {
+    tracer: Arc<Tracer>,
+    id: u64,
+    label: String,
+    started: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Drop for TraceInner {
+    fn drop(&mut self) {
+        let total_us = self.started.elapsed().as_micros() as u64;
+        let spans = std::mem::take(self.spans.get_mut().unwrap());
+        let rec = TraceRecord {
+            id: self.id,
+            label: std::mem::take(&mut self.label),
+            total_us,
+            spans,
+        };
+        self.tracer.push(rec);
+    }
+}
+
+/// A live trace. Clone freely to hand to worker threads; the finished
+/// record is published when the last clone drops.
+#[derive(Clone, Default)]
+pub struct Trace {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl Trace {
+    /// A no-op trace: spans cost one branch, nothing is recorded.
+    pub fn disabled() -> Trace {
+        Trace { inner: None }
+    }
+
+    /// Whether this trace records anything.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The trace ID (0 for a disabled trace).
+    pub fn id(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.id)
+    }
+
+    /// Open a named span; it records itself when the guard drops.
+    pub fn span(&self, name: &str) -> SpanGuard {
+        self.span_inner(name, None)
+    }
+
+    /// Open a named span that additionally records its duration into
+    /// `hist` on drop — the histogram records even when the trace is
+    /// disabled, so per-stage histograms never depend on tracing.
+    pub fn span_timed(&self, name: &str, hist: &Arc<Histogram>) -> SpanGuard {
+        self.span_inner(name, Some(hist.clone()))
+    }
+
+    fn span_inner(&self, name: &str, hist: Option<Arc<Histogram>>) -> SpanGuard {
+        SpanGuard {
+            trace: self.inner.as_ref().map(|i| (i.clone(), name.to_string())),
+            hist,
+            started: Instant::now(),
+        }
+    }
+}
+
+/// RAII timer for one [`Span`]; created by [`Trace::span`].
+pub struct SpanGuard {
+    trace: Option<(Arc<TraceInner>, String)>,
+    hist: Option<Arc<Histogram>>,
+    started: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur = self.started.elapsed();
+        if let Some(h) = &self.hist {
+            h.record_duration(dur);
+        }
+        if let Some((inner, name)) = self.trace.take() {
+            let start_us =
+                self.started.duration_since(inner.started).as_micros() as u64;
+            inner.spans.lock().unwrap().push(Span {
+                name,
+                start_us,
+                dur_us: dur.as_micros() as u64,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_land_in_the_ring() {
+        let t = Arc::new(Tracer::new(8));
+        {
+            let tr = t.start("req one");
+            assert!(tr.enabled());
+            assert_eq!(tr.id(), 1);
+            let _a = tr.span("plan");
+            drop(tr.span("compress"));
+        }
+        let recent = t.recent(10);
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].label, "req one");
+        let names: Vec<_> = recent[0].spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["compress", "plan"]);
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let t = Arc::new(Tracer::new(2));
+        for i in 0..5 {
+            drop(t.start(&format!("r{i}")));
+        }
+        let recent = t.recent(10);
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].label, "r4");
+        assert_eq!(recent[1].label, "r3");
+    }
+
+    #[test]
+    fn disabled_sampling_records_nothing() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let t = Arc::new(Tracer::with_sampling_flag(4, flag.clone()));
+        {
+            let tr = t.start("invisible");
+            assert!(!tr.enabled());
+            assert_eq!(tr.id(), 0);
+            drop(tr.span("stage"));
+        }
+        assert!(t.recent(10).is_empty());
+        flag.store(true, Relaxed);
+        drop(t.start("visible"));
+        assert_eq!(t.recent(10).len(), 1);
+    }
+
+    #[test]
+    fn clones_share_one_record_across_threads() {
+        let t = Arc::new(Tracer::new(4));
+        let tr = t.start("multi");
+        let handles: Vec<_> = (0..3)
+            .map(|w| {
+                let tr = tr.clone();
+                std::thread::spawn(move || {
+                    drop(tr.span(&format!("worker-{w}")));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        drop(tr);
+        let recent = t.recent(1);
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].spans.len(), 3);
+    }
+
+    #[test]
+    fn span_timed_records_histogram_even_when_disabled() {
+        let on = Arc::new(AtomicBool::new(true));
+        let h = Arc::new(Histogram::new(on.clone()));
+        let tr = Trace::disabled();
+        drop(tr.span_timed("stage", &h));
+        assert_eq!(h.snapshot().count, 1);
+    }
+}

@@ -1,19 +1,34 @@
-//! Pipeline metrics: cheap atomic counters + a coherent snapshot.
+//! Pipeline metrics: a thin view over [`obs::MetricsRegistry`](crate::
+//! obs::MetricsRegistry) series, keeping the original snapshot API.
+//!
+//! Every counter lives in the registry under a `pipeline_*` name, so a
+//! coordinator that shares its registry with the store (see
+//! [`YocoStore::with_registry`](crate::coordinator::YocoStore::
+//! with_registry)) sees pipeline activity in the same `metrics` export
+//! as its own request counters. [`Metrics::new`] still works standalone
+//! (it owns a private registry), which the supervisor unit tests and
+//! direct [`Pipeline`](crate::pipeline::Pipeline) users rely on.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// Shared counters updated by the feeder and the workers.
+/// Shared counters updated by the feeder and the workers, plus the two
+/// pipeline latency histograms (`pipeline_chunk_fold_us`,
+/// `pipeline_merge_us`).
 pub struct Metrics {
     started: Instant,
-    rows_in: AtomicU64,
-    chunks_in: AtomicU64,
-    rows_compressed: AtomicU64,
-    producer_stalls: AtomicU64,
-    rebalances: AtomicU64,
-    worker_panics: AtomicU64,
-    chunk_retries: AtomicU64,
-    worker_respawns: AtomicU64,
+    registry: Arc<MetricsRegistry>,
+    rows_in: Arc<Counter>,
+    chunks_in: Arc<Counter>,
+    rows_compressed: Arc<Counter>,
+    producer_stalls: Arc<Gauge>,
+    rebalances: Arc<Counter>,
+    worker_panics: Arc<Counter>,
+    chunk_retries: Arc<Counter>,
+    worker_respawns: Arc<Counter>,
+    chunk_fold_us: Arc<Histogram>,
+    merge_us: Arc<Histogram>,
 }
 
 impl Default for Metrics {
@@ -23,70 +38,96 @@ impl Default for Metrics {
 }
 
 impl Metrics {
-    /// Fresh counters; the throughput clock starts now.
+    /// Fresh counters on a private registry; the throughput clock
+    /// starts now.
     pub fn new() -> Self {
+        Metrics::with_registry(MetricsRegistry::shared())
+    }
+
+    /// Counters registered on a shared registry (names `pipeline_*`).
+    /// Handles are resolved once here; the hot paths never touch the
+    /// registry's name maps.
+    pub fn with_registry(registry: Arc<MetricsRegistry>) -> Self {
         Metrics {
             started: Instant::now(),
-            rows_in: AtomicU64::new(0),
-            chunks_in: AtomicU64::new(0),
-            rows_compressed: AtomicU64::new(0),
-            producer_stalls: AtomicU64::new(0),
-            rebalances: AtomicU64::new(0),
-            worker_panics: AtomicU64::new(0),
-            chunk_retries: AtomicU64::new(0),
-            worker_respawns: AtomicU64::new(0),
+            rows_in: registry.counter("pipeline_rows_in_total"),
+            chunks_in: registry.counter("pipeline_chunks_in_total"),
+            rows_compressed: registry.counter("pipeline_rows_compressed_total"),
+            producer_stalls: registry.gauge("pipeline_producer_stalls"),
+            rebalances: registry.counter("pipeline_rebalances_total"),
+            worker_panics: registry.counter("pipeline_worker_panics_total"),
+            chunk_retries: registry.counter("pipeline_chunk_retries_total"),
+            worker_respawns: registry.counter("pipeline_worker_respawns_total"),
+            chunk_fold_us: registry.histogram("pipeline_chunk_fold_us"),
+            merge_us: registry.histogram("pipeline_merge_us"),
+            registry,
         }
+    }
+
+    /// The registry the counters live in.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
     }
 
     /// Record a fed chunk of `rows` rows.
     pub fn add_chunk(&self, rows: u64) {
-        self.rows_in.fetch_add(rows, Ordering::Relaxed);
-        self.chunks_in.fetch_add(1, Ordering::Relaxed);
+        self.rows_in.add(rows);
+        self.chunks_in.inc();
     }
 
     /// Record `rows` rows folded by a worker.
     pub fn add_compressed(&self, rows: u64) {
-        self.rows_compressed.fetch_add(rows, Ordering::Relaxed);
+        self.rows_compressed.add(rows);
     }
 
     /// Record producer stalls (from the queues' counters).
     pub fn set_stalls(&self, stalls: u64) {
-        self.producer_stalls.store(stalls, Ordering::Relaxed);
+        self.producer_stalls.set(stalls);
     }
 
     /// Record a rebalance pass that made moves.
     pub fn add_rebalance(&self) {
-        self.rebalances.fetch_add(1, Ordering::Relaxed);
+        self.rebalances.inc();
     }
 
     /// Record a caught worker panic (injected or genuine).
     pub fn add_worker_panic(&self) {
-        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        self.worker_panics.inc();
     }
 
     /// Record a chunk retry (requeue after a panic or a dropped enqueue).
     pub fn add_chunk_retry(&self) {
-        self.chunk_retries.fetch_add(1, Ordering::Relaxed);
+        self.chunk_retries.inc();
     }
 
     /// Record a worker respawn (a fresh incarnation after a panic).
     pub fn add_worker_respawn(&self) {
-        self.worker_respawns.fetch_add(1, Ordering::Relaxed);
+        self.worker_respawns.inc();
+    }
+
+    /// Record one supervised chunk fold's duration.
+    pub fn observe_chunk_fold(&self, d: Duration) {
+        self.chunk_fold_us.record_duration(d);
+    }
+
+    /// Record one end-of-run shard-merge duration.
+    pub fn observe_merge(&self, d: Duration) {
+        self.merge_us.record_duration(d);
     }
 
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let elapsed = self.started.elapsed().as_secs_f64();
-        let rows = self.rows_in.load(Ordering::Relaxed);
+        let rows = self.rows_in.get();
         MetricsSnapshot {
             rows_in: rows,
-            chunks_in: self.chunks_in.load(Ordering::Relaxed),
-            rows_compressed: self.rows_compressed.load(Ordering::Relaxed),
-            producer_stalls: self.producer_stalls.load(Ordering::Relaxed),
-            rebalances: self.rebalances.load(Ordering::Relaxed),
-            worker_panics: self.worker_panics.load(Ordering::Relaxed),
-            chunk_retries: self.chunk_retries.load(Ordering::Relaxed),
-            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
+            chunks_in: self.chunks_in.get(),
+            rows_compressed: self.rows_compressed.get(),
+            producer_stalls: self.producer_stalls.get(),
+            rebalances: self.rebalances.get(),
+            worker_panics: self.worker_panics.get(),
+            chunk_retries: self.chunk_retries.get(),
+            worker_respawns: self.worker_respawns.get(),
             elapsed_secs: elapsed,
             rows_per_sec: if elapsed > 0.0 { rows as f64 / elapsed } else { 0.0 },
         }
@@ -144,5 +185,16 @@ mod tests {
         assert_eq!(s.chunk_retries, 1);
         assert_eq!(s.worker_respawns, 1);
         assert!(s.elapsed_secs >= 0.0);
+    }
+
+    #[test]
+    fn shared_registry_sees_pipeline_series() {
+        let reg = MetricsRegistry::shared();
+        let m = Metrics::with_registry(reg.clone());
+        m.add_chunk(10);
+        m.observe_chunk_fold(Duration::from_micros(250));
+        let s = reg.snapshot();
+        assert_eq!(s.counter("pipeline_rows_in_total"), Some(10));
+        assert_eq!(s.histogram("pipeline_chunk_fold_us").unwrap().count, 1);
     }
 }

@@ -24,6 +24,8 @@ use crate::compress::hash_row;
 use crate::data::Batch;
 use crate::error::{Result, YocoError};
 use crate::fault::{self, FaultInjector, InjectionPoint, RetryPolicy};
+use crate::obs::{MetricsRegistry, Trace};
+use std::time::Instant;
 
 /// Pipeline tuning knobs.
 #[derive(Debug, Clone)]
@@ -121,19 +123,48 @@ pub struct Pipeline {
     mode: PipelineMode,
     metrics: Arc<Metrics>,
     injector: Option<Arc<FaultInjector>>,
+    trace: Trace,
 }
 
 impl Pipeline {
     /// Build a pipeline.
     pub fn new(cfg: PipelineConfig, mode: PipelineMode) -> Self {
         assert!(cfg.workers > 0 && cfg.chunk_rows > 0 && cfg.queue_capacity > 0);
-        Pipeline { cfg, mode, metrics: Arc::new(Metrics::new()), injector: None }
+        Pipeline {
+            cfg,
+            mode,
+            metrics: Arc::new(Metrics::new()),
+            injector: None,
+            trace: Trace::disabled(),
+        }
     }
 
     /// Attach a fault injector (chaos testing; a no-op outside
     /// `--features fault-injection` builds).
     pub fn with_fault_injector(mut self, injector: Arc<FaultInjector>) -> Self {
         self.injector = Some(injector);
+        self
+    }
+
+    /// Register the pipeline series (`pipeline_*`) on a shared registry
+    /// instead of a private one.
+    pub fn with_registry(mut self, registry: Arc<MetricsRegistry>) -> Self {
+        self.metrics = Arc::new(Metrics::with_registry(registry));
+        self
+    }
+
+    /// Reuse an existing handle set (e.g. the service-lifetime
+    /// [`Metrics`] owned by the YOCO store) so counters accumulate
+    /// across runs instead of resetting per pipeline.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// Attach a request trace: the run contributes `feed`, per-worker,
+    /// and `merge` spans (no-op for a disabled trace).
+    pub fn with_trace(mut self, trace: Trace) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -190,6 +221,7 @@ impl Pipeline {
         let metrics = &self.metrics;
         let cfg = &self.cfg;
         let injector = &self.injector;
+        let trace = &self.trace;
 
         std::thread::scope(|scope| -> Result<PipelineResult> {
             // ---- Supervised workers ----
@@ -199,7 +231,9 @@ impl Pipeline {
                     let metrics = metrics.clone();
                     let injector = injector.clone();
                     let policy = cfg.retry;
+                    let trace = trace.clone();
                     scope.spawn(move || -> Result<WorkerState> {
+                        let _worker_span = trace.span(&format!("worker-{w}"));
                         let mut state = WorkerState::new(mode, p, o);
                         while let Some(mut task) = queue.pop() {
                             let rows = task.chunk.rows as u64;
@@ -208,7 +242,13 @@ impl Pipeline {
                                 &policy,
                                 &injector,
                                 &metrics,
-                                |chunk| state.fold(chunk),
+                                |chunk| {
+                                    let t0 = Instant::now();
+                                    state.fold(chunk);
+                                    // Only successful folds are timed: a
+                                    // panicking attempt unwinds past this.
+                                    metrics.observe_chunk_fold(t0.elapsed());
+                                },
                             );
                             match outcome {
                                 ChunkOutcome::Done => metrics.add_compressed(rows),
@@ -342,7 +382,10 @@ impl Pipeline {
             }
             Ok(())
             };
-            let feed_result = feed();
+            let feed_result = {
+                let _feed_span = trace.span("feed");
+                feed()
+            };
             for q in &queues {
                 q.close();
             }
@@ -370,7 +413,11 @@ impl Pipeline {
                 return Err(e);
             }
             feed_result?;
-            merge_partials(partials, mode, cfg.workers)
+            let _merge_span = trace.span("merge");
+            let t0 = Instant::now();
+            let merged = merge_partials(partials, mode, cfg.workers);
+            metrics.observe_merge(t0.elapsed());
+            merged
         })
     }
 }
@@ -484,16 +531,20 @@ fn merge_partials(
             Ok(PipelineResult::SuffStats(CompressedData::merge_many(&shards, threads)?))
         }
         PipelineMode::ClusterStatic { .. } => {
-            let mut acc: Option<ClusterStaticCompressed> = None;
-            for p in partials {
-                let WorkerState::Static { comp, .. } = p else { unreachable!() };
-                let d = comp.finish();
-                match &mut acc {
-                    None => acc = Some(d),
-                    Some(a) => a.concat(d)?,
-                }
-            }
-            Ok(PipelineResult::ClusterStatic(acc.expect("at least one worker")))
+            // Cluster-hash routing makes the shards label-disjoint, so
+            // the label-keyed parallel merge reproduces the old
+            // sequential `concat` fold bit for bit (worker order =
+            // first-occurrence order).
+            let shards: Vec<ClusterStaticCompressed> = partials
+                .into_iter()
+                .map(|p| {
+                    let WorkerState::Static { comp, .. } = p else { unreachable!() };
+                    comp.finish()
+                })
+                .collect();
+            Ok(PipelineResult::ClusterStatic(ClusterStaticCompressed::merge_many(
+                &shards, threads,
+            )?))
         }
     }
 }

@@ -33,7 +33,16 @@ pub enum Request {
     /// List registered datasets.
     Datasets,
     /// Service metrics.
-    Metrics,
+    Metrics {
+        /// Also include the Prometheus text exposition
+        /// (`"format":"prometheus"` on the wire).
+        prometheus: bool,
+    },
+    /// Recent request traces, newest first.
+    Trace {
+        /// Maximum number of traces to return.
+        limit: usize,
+    },
 }
 
 fn str_field(j: &Json, key: &str) -> Result<String> {
@@ -143,7 +152,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }))
         }
         "datasets" => Ok(Request::Datasets),
-        "metrics" => Ok(Request::Metrics),
+        "metrics" => Ok(Request::Metrics {
+            prometheus: j.get("format").and_then(Json::as_str) == Some("prometheus"),
+        }),
+        "trace" => Ok(Request::Trace { limit: usize_field(&j, "limit", 16) }),
         other => Err(YocoError::parse(format!("unknown op '{other}'"))),
     }
 }
@@ -208,10 +220,11 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
                 c.store().dataset_names().into_iter().map(Json::Str).collect(),
             ),
         )])),
-        Request::Metrics => {
+        Request::Metrics { prometheus } => {
             let m = c.metrics();
             let (hits, misses) = c.store().cache_stats();
-            Ok(ok(vec![
+            let snap = c.obs().registry().snapshot();
+            let mut fields = vec![
                 ("requests", Json::Num(m.requests as f64)),
                 ("errors", Json::Num(m.errors as f64)),
                 ("native_fits", Json::Num(m.native_fits as f64)),
@@ -219,11 +232,27 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
                 ("runtime_retries", Json::Num(m.runtime_retries as f64)),
                 ("runtime_fallbacks", Json::Num(m.runtime_fallbacks as f64)),
                 ("mean_latency_us", Json::Num(m.mean_latency_us)),
+                ("p50_latency_us", Json::Num(m.p50_latency_us as f64)),
+                ("p95_latency_us", Json::Num(m.p95_latency_us as f64)),
+                ("p99_latency_us", Json::Num(m.p99_latency_us as f64)),
+                ("max_latency_us", Json::Num(m.max_latency_us as f64)),
                 ("cache_hits", Json::Num(hits as f64)),
                 ("cache_misses", Json::Num(misses as f64)),
                 ("runtime_available", Json::Bool(c.runtime_available())),
-            ]))
+                ("series", crate::obs::registry_json(&snap)),
+            ];
+            if prometheus {
+                fields.push((
+                    "prometheus",
+                    Json::Str(crate::obs::prometheus_text(&snap)),
+                ));
+            }
+            Ok(ok(fields))
         }
+        Request::Trace { limit } => Ok(ok(vec![(
+            "traces",
+            crate::obs::traces_json(&c.obs().tracer().recent(limit)),
+        )])),
     }
 }
 
@@ -271,6 +300,84 @@ mod tests {
         assert_eq!(r.get("datasets").unwrap().as_arr().unwrap().len(), 1);
         let r = handle_line(&c, r#"{"op":"metrics"}"#);
         assert_eq!(r.get("requests").unwrap().as_usize(), Some(1));
+    }
+
+    /// Members of one kind-group (`counters` / `gauges` / `histograms`)
+    /// in a metrics reply's `series` object.
+    fn series_members<'j>(reply: &'j Json, kind: &str) -> &'j std::collections::BTreeMap<String, Json> {
+        match reply.get("series").unwrap().get(kind).unwrap() {
+            Json::Obj(m) => m,
+            other => panic!("series.{kind} is not an object: {}", other.to_string()),
+        }
+    }
+
+    #[test]
+    fn metrics_command_exposes_the_full_registry() {
+        let c = coordinator();
+        let r = handle_line(&c, r#"{"op":"register_xp","name":"xp","n":2000}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let r = handle_line(&c, r#"{"op":"analyze","dataset":"xp","outcome":"y0"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+
+        let r = handle_line(&c, r#"{"op":"metrics"}"#);
+        // Legacy fields survive, percentiles ride along.
+        assert_eq!(r.get("requests").unwrap().as_usize(), Some(1));
+        assert!(r.get("mean_latency_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("p50_latency_us").is_some());
+        assert!(r.get("p95_latency_us").is_some());
+        assert!(r.get("p99_latency_us").is_some());
+        assert!(r.get("max_latency_us").unwrap().as_usize().unwrap() > 0);
+        // The registry view carries every layer's named series.
+        let counters = series_members(&r, "counters");
+        let gauges = series_members(&r, "gauges");
+        let histograms = series_members(&r, "histograms");
+        assert!(
+            counters.len() + gauges.len() + histograms.len() >= 12,
+            "only {} series: {:?} {:?} {:?}",
+            counters.len() + gauges.len() + histograms.len(),
+            counters.keys(),
+            gauges.keys(),
+            histograms.keys()
+        );
+        for name in
+            ["coordinator_request_us", "coordinator_engine_dispatch_us", "pipeline_chunk_fold_us"]
+        {
+            let h = &histograms[name];
+            assert!(h.get("count").unwrap().as_usize().unwrap() >= 1, "{name}");
+            assert!(h.get("p99").is_some(), "{name}");
+        }
+        assert_eq!(counters["coordinator_requests_total"].as_usize(), Some(1));
+        assert!(r.get("prometheus").is_none());
+
+        // Opt-in Prometheus text exposition.
+        let r = handle_line(&c, r#"{"op":"metrics","format":"prometheus"}"#);
+        let text = r.get("prometheus").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE coordinator_requests_total counter"), "{text}");
+        assert!(text.contains("coordinator_request_us{quantile=\"0.99\"}"), "{text}");
+    }
+
+    #[test]
+    fn trace_command_returns_per_stage_timings() {
+        let c = coordinator();
+        handle_line(&c, r#"{"op":"register_xp","name":"xp","n":2000}"#);
+        handle_line(&c, r#"{"op":"analyze","dataset":"xp","outcome":"y0"}"#);
+        handle_line(&c, r#"{"op":"analyze","dataset":"xp","outcome":"y1"}"#);
+
+        let r = handle_line(&c, r#"{"op":"trace"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let traces = r.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 2);
+        // Newest first.
+        assert_eq!(traces[0].get("label").unwrap().as_str(), Some("analyze xp/y1"));
+        let spans = traces[1].get("spans").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            spans.iter().map(|s| s.get("name").unwrap().as_str().unwrap()).collect();
+        for stage in ["plan", "compress", "native wls"] {
+            assert!(names.contains(&stage), "missing span {stage:?} in {names:?}");
+        }
+
+        let r = handle_line(&c, r#"{"op":"trace","limit":1}"#);
+        assert_eq!(r.get("traces").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

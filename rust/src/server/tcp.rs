@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::Coordinator;
 use crate::error::{Result, YocoError};
 use crate::fault::{self, FaultInjector, InjectionPoint};
+use crate::obs::{Counter, Gauge, Histogram};
 use crate::util::json::Json;
 
 use super::proto::{error_reply, handle_line};
@@ -159,6 +160,13 @@ pub fn serve_with(
     let connections = Arc::new(AtomicU64::new(0));
     let active = Arc::new(AtomicUsize::new(0));
     let shed = Arc::new(AtomicU64::new(0));
+    // Server-layer series on the coordinator's registry, resolved once
+    // so the per-connection path touches only Relaxed atomics.
+    let obs = Arc::new(ServerObs {
+        connections: coordinator.obs().registry().counter("server_connections_total"),
+        active: coordinator.obs().registry().gauge("server_active_connections"),
+        request_us: coordinator.obs().registry().histogram("server_request_us"),
+    });
     let handlers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
         Arc::new(Mutex::new(Vec::new()));
     let drain_deadline_ms = cfg.drain_deadline_ms;
@@ -175,6 +183,7 @@ pub fn serve_with(
             }
             let Ok(stream) = stream else { continue };
             let conn_id = conns2.fetch_add(1, Ordering::Relaxed);
+            obs.connections.inc();
             reap_finished(&handlers2);
             if cfg.max_connections > 0
                 && active2.load(Ordering::SeqCst) >= cfg.max_connections
@@ -184,13 +193,15 @@ pub fn serve_with(
                 continue;
             }
             active2.fetch_add(1, Ordering::SeqCst);
+            obs.active.add(1);
             let coord = coordinator.clone();
             let cfg = cfg.clone();
             let stop = stop2.clone();
-            let guard = ConnGuard(active2.clone());
+            let obs = obs.clone();
+            let guard = ConnGuard { active: active2.clone(), gauge: obs.active.clone() };
             let handle = std::thread::spawn(move || {
                 let _guard = guard;
-                let _ = client_loop(&coord, stream, &cfg, &stop, conn_id);
+                let _ = client_loop(&coord, stream, &cfg, &stop, conn_id, &obs.request_us);
             });
             handlers2.lock().unwrap().push(handle);
         }
@@ -207,13 +218,32 @@ pub fn serve_with(
     })
 }
 
+/// Server-layer series on the coordinator's [`MetricsRegistry`]
+/// (`server_*` names), resolved once at startup.
+///
+/// [`MetricsRegistry`]: crate::obs::MetricsRegistry
+struct ServerObs {
+    /// Connections accepted (shed ones included) —
+    /// `server_connections_total`.
+    connections: Arc<Counter>,
+    /// Connections currently served — `server_active_connections`.
+    active: Arc<Gauge>,
+    /// Per-request handling latency, read excluded —
+    /// `server_request_us`.
+    request_us: Arc<Histogram>,
+}
+
 /// Decrements the active-connection gauge when a handler exits, on any
 /// path (including handler panics).
-struct ConnGuard(Arc<AtomicUsize>);
+struct ConnGuard {
+    active: Arc<AtomicUsize>,
+    gauge: Arc<Gauge>,
+}
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        self.gauge.sub(1);
     }
 }
 
@@ -357,6 +387,7 @@ fn client_loop(
     cfg: &ServerConfig,
     stop: &AtomicBool,
     conn_id: u64,
+    request_us: &Histogram,
 ) -> std::io::Result<()> {
     if cfg.read_timeout_ms > 0 {
         stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)))?;
@@ -411,7 +442,9 @@ fn client_loop(
                 "injected i/o fault",
             ));
         }
+        let t0 = Instant::now();
         let reply = handle_line(coordinator, line);
+        request_us.record_duration(t0.elapsed());
         if let Some(d) = fault::slow_keyed(&cfg.fault, key) {
             std::thread::sleep(d);
         }
@@ -447,7 +480,8 @@ mod tests {
 
     #[test]
     fn tcp_roundtrip() {
-        let handle = serve(coordinator(), "127.0.0.1:0").unwrap();
+        let coord = coordinator();
+        let handle = serve(coord.clone(), "127.0.0.1:0").unwrap();
         let mut stream = TcpStream::connect(handle.addr).unwrap();
         let reply = roundtrip(&mut stream, r#"{"op":"ping"}"#);
         assert!(reply.contains(r#""pong":true"#), "{reply}");
@@ -466,6 +500,11 @@ mod tests {
         assert_eq!(handle.connections(), 1);
         let stats = handle.shutdown();
         assert_eq!(stats.leaked, 0);
+        // The transport reported itself into the shared registry.
+        let snap = coord.obs().registry().snapshot();
+        assert_eq!(snap.counter("server_connections_total"), Some(1));
+        assert_eq!(snap.histogram("server_request_us").unwrap().count, 3);
+        assert_eq!(snap.gauge("server_active_connections"), Some(0));
     }
 
     #[test]

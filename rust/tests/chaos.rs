@@ -118,6 +118,39 @@ fn chunk_drops_are_retried_and_lossless() {
     }
 }
 
+/// Counters are exact, never sampled: after a surviving run the
+/// `pipeline_worker_panics_total` / `pipeline_chunk_retries_total`
+/// series must equal the injector's own fire counts to the unit — every
+/// injected panic is one recorded panic plus one respawn-retry, and
+/// every injected feeder-side drop is one recorded retry.
+#[test]
+fn fault_counters_match_injected_fire_counts_exactly() {
+    let (batch, _) = generate_xp(&XpConfig { n: 4000, ..Default::default() });
+    let retry = quick_retry(6);
+    let mut total_fired = 0u64;
+    for seed in 0..5u64 {
+        // Fire limits (3 + 3) keep the worst single chunk within the
+        // retry budget of 6, so every seed must complete.
+        let inj = FaultPlan::new(seed)
+            .with(InjectionPoint::WorkerPanic, 0.2)
+            .with_limit(InjectionPoint::WorkerPanic, 3)
+            .with(InjectionPoint::ChunkDrop, 0.2)
+            .with_limit(InjectionPoint::ChunkDrop, 3)
+            .build();
+        let pipe = Pipeline::new(chaos_cfg(retry), PipelineMode::SuffStats)
+            .with_fault_injector(inj.clone());
+        pipe.run_batch(&batch).unwrap();
+        let m = pipe.metrics();
+        let panics = inj.fired(InjectionPoint::WorkerPanic);
+        let drops = inj.fired(InjectionPoint::ChunkDrop);
+        assert_eq!(m.worker_panics, panics, "seed {seed}");
+        assert_eq!(m.worker_respawns, panics, "seed {seed}");
+        assert_eq!(m.chunk_retries, panics + drops, "seed {seed}");
+        total_fired += panics + drops;
+    }
+    assert!(total_fired > 0, "no seed ever fired — plan misconfigured");
+}
+
 fn coordinator() -> Arc<Coordinator> {
     Arc::new(Coordinator::native_only(PipelineConfig {
         workers: 2,

@@ -1,0 +1,142 @@
+//! Observability contracts across threads: snapshots taken while
+//! writers are live must stay monotone and internally coherent, exports
+//! must render mid-write without panicking, and totals must be exact
+//! once writers quiesce.
+
+use std::sync::Arc;
+use std::thread;
+
+use yoco::obs::{prometheus_text, registry_json, MetricsRegistry};
+
+const WRITERS: u64 = 8;
+const OPS_PER_WRITER: u64 = 20_000;
+
+/// Exact value writer `w` records on iteration `i` (small, so several
+/// writers share buckets and the bucket array sees real contention).
+fn recorded(w: u64, i: u64) -> u64 {
+    (w + 1) * 10 + i % 7
+}
+
+#[test]
+fn concurrent_writers_vs_snapshot_and_export_coherence() {
+    let reg = MetricsRegistry::shared();
+    let counter = reg.counter("obs_test_ops_total");
+    let gauge = reg.gauge("obs_test_inflight");
+    let hist = reg.histogram("obs_test_latency_us");
+
+    let mut threads = Vec::new();
+    for w in 0..WRITERS {
+        let c = counter.clone();
+        let g = gauge.clone();
+        let h = hist.clone();
+        threads.push(thread::spawn(move || {
+            for i in 0..OPS_PER_WRITER {
+                g.add(1);
+                c.inc();
+                h.record(recorded(w, i));
+                g.sub(1);
+            }
+        }));
+    }
+
+    // Snapshots under live writers: counter monotone, histogram count
+    // never ahead of the writers' op budget, exports always render.
+    let mut last = 0u64;
+    for _ in 0..40 {
+        let s = reg.snapshot();
+        let c = s.counter("obs_test_ops_total").unwrap();
+        assert!(c >= last, "counter went backwards: {last} -> {c}");
+        last = c;
+        let h = s.histogram("obs_test_latency_us").unwrap();
+        assert!(h.count <= WRITERS * OPS_PER_WRITER);
+        assert!(h.max <= recorded(WRITERS - 1, 0) + 6);
+        let text = prometheus_text(&s);
+        assert!(text.contains("# TYPE obs_test_ops_total counter"));
+        assert!(text.contains("obs_test_latency_us_count"));
+        let json = registry_json(&s).to_string();
+        assert!(json.contains("obs_test_inflight"));
+        thread::yield_now();
+    }
+
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // Quiescent: every total is exact, not merely close.
+    let s = reg.snapshot();
+    let total = WRITERS * OPS_PER_WRITER;
+    assert_eq!(s.counter("obs_test_ops_total"), Some(total));
+    assert_eq!(s.gauge("obs_test_inflight"), Some(0));
+    let h = s.histogram("obs_test_latency_us").unwrap();
+    assert_eq!(h.count, total);
+    let expected_sum: u64 =
+        (0..WRITERS).map(|w| (0..OPS_PER_WRITER).map(|i| recorded(w, i)).sum::<u64>()).sum();
+    assert_eq!(h.sum, expected_sum, "histogram sum must be exact under contention");
+    // All values sit in [10, 90]: the quantiles must land there too
+    // (within the ≤12.5% bucket overshoot, clamped to the true max).
+    assert!(h.p50 >= 10 && h.p50 <= h.max, "p50={}", h.p50);
+    assert!(h.p50 <= h.p95 && h.p95 <= h.p99 && h.p99 <= h.max);
+}
+
+#[test]
+fn sampling_toggle_races_never_corrupt_counters() {
+    // Counters must stay exact while another thread flips the sampling
+    // flag (which gates only histograms) underneath the writers.
+    let reg = MetricsRegistry::shared();
+    let counter = reg.counter("obs_test_exact_total");
+    let hist = reg.histogram("obs_test_sampled_us");
+
+    let flipper = {
+        let reg = reg.clone();
+        thread::spawn(move || {
+            for on in 0..2000u32 {
+                reg.set_sampling(on % 2 == 0);
+                thread::yield_now();
+            }
+            reg.set_sampling(true);
+        })
+    };
+    let mut writers = Vec::new();
+    for _ in 0..4 {
+        let c = counter.clone();
+        let h = hist.clone();
+        writers.push(thread::spawn(move || {
+            for i in 0..10_000u64 {
+                c.inc();
+                h.record(i % 100);
+            }
+        }));
+    }
+    for t in writers {
+        t.join().unwrap();
+    }
+    flipper.join().unwrap();
+
+    let s = reg.snapshot();
+    // The counter is exact regardless of the sampling races; the
+    // histogram saw some subset of records but stays self-consistent.
+    assert_eq!(s.counter("obs_test_exact_total"), Some(40_000));
+    let h = s.histogram("obs_test_sampled_us").unwrap();
+    assert!(h.count <= 40_000);
+    assert!(h.p99 <= h.max && h.max <= 99);
+}
+
+#[test]
+fn registry_snapshot_is_deterministically_ordered() {
+    let reg = Arc::new(MetricsRegistry::default());
+    // Register in shuffled order from several threads; export order
+    // must still be sorted by name (BTreeMap-backed).
+    let names = ["z_total", "a_total", "m_total", "k_total"];
+    let mut threads = Vec::new();
+    for (i, name) in names.into_iter().enumerate() {
+        let reg = reg.clone();
+        threads.push(thread::spawn(move || {
+            reg.counter(name).add(i as u64 + 1);
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let got: Vec<String> = reg.snapshot().counters.into_iter().map(|(k, _)| k).collect();
+    assert_eq!(got, ["a_total", "k_total", "m_total", "z_total"]);
+}
