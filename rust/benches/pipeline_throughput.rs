@@ -10,6 +10,9 @@
 //!
 //! Run: `cargo bench --bench pipeline_throughput` (`--quick` for CI smoke).
 
+use yoco::compress::{
+    merge_many, ClusterStaticCompressor, SuffStatsCompressor, WeightedSuffStatsCompressor,
+};
 use yoco::data::gen::{generate_xp, XpConfig};
 use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
 use yoco::util::bench::{bench, black_box, report, BenchSuite};
@@ -79,6 +82,65 @@ fn main() {
         m.producer_stalls,
         m.chunks_in
     );
+
+    println!("\n-- cross-container merge: ONE generic engine, 8 shards --");
+    let shard_count = 8usize;
+    let groups = if quick { 2_048 } else { 8_192 };
+    let rows_per_shard = groups * 4;
+    // Feature cell (g % 97, g / 97) uniquely identifies group g, so
+    // every shard contributes the same `groups` keys and the merged
+    // output has exactly `groups` records — the worst case for the
+    // engine (every slot folds all 8 shards).
+    let cell = |g: usize| [1.0, (g % 97) as f64, (g / 97) as f64, 0.5];
+
+    let suff: Vec<_> = (0..shard_count)
+        .map(|s| {
+            let mut c = SuffStatsCompressor::new(4, 2);
+            for i in 0..rows_per_shard {
+                let g = (i * 7 + s) % groups;
+                c.push(&cell(g), &[g as f64 * 0.5, 1.0 - g as f64 * 0.25]);
+            }
+            c.finish()
+        })
+        .collect();
+    let weighted: Vec<_> = (0..shard_count)
+        .map(|s| {
+            let mut c = WeightedSuffStatsCompressor::new(4, 2);
+            for i in 0..rows_per_shard {
+                let g = (i * 7 + s) % groups;
+                c.push(&cell(g), &[g as f64 * 0.5, 1.0 - g as f64 * 0.25], 1.5);
+            }
+            c.finish()
+        })
+        .collect();
+    let cluster: Vec<_> = (0..shard_count)
+        .map(|s| {
+            let mut c = ClusterStaticCompressor::new(4);
+            for i in 0..rows_per_shard {
+                let g = (i * 7 + s) % groups;
+                c.push(&cell(g), g as f64 * 0.5, g as f64);
+            }
+            c.finish()
+        })
+        .collect();
+    let total_rows = (shard_count * rows_per_shard) as u64;
+    for threads in [1usize, 4] {
+        let r = bench(&format!("merge/suffstats/threads={threads}"), || {
+            black_box(merge_many(&suff, threads).unwrap())
+        });
+        report(&r);
+        suite.push_groups(r, groups as u64, Some(total_rows));
+        let r = bench(&format!("merge/weighted/threads={threads}"), || {
+            black_box(merge_many(&weighted, threads).unwrap())
+        });
+        report(&r);
+        suite.push_groups(r, groups as u64, Some(total_rows));
+        let r = bench(&format!("merge/cluster_static/threads={threads}"), || {
+            black_box(merge_many(&cluster, threads).unwrap())
+        });
+        report(&r);
+        suite.push_groups(r, groups as u64, Some(total_rows));
+    }
 
     match suite.write_json("BENCH_pipeline.json") {
         Ok(()) => println!("\nwrote BENCH_pipeline.json ({} records)", suite.len()),

@@ -25,6 +25,7 @@
 //! all for the bread). Estimation lives in
 //! [`estimator::balanced_panel`](crate::estimator).
 
+use super::core::{CompressedContainer, ContainerKind, SufficientStatistics, WireContainer};
 use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
 
@@ -120,6 +121,76 @@ impl BalancedPanelCompressed {
         (m, y)
     }
 
+    fn check_mergeable(&self, other: &BalancedPanelCompressed) -> Result<()> {
+        if other.p1() != self.p1() {
+            return Err(YocoError::shape(format!(
+                "merge static-feature mismatch: {} vs {}",
+                self.p1(),
+                other.p1()
+            )));
+        }
+        if other.m2.rows() != self.m2.rows() || other.m2.cols() != self.m2.cols() {
+            return Err(YocoError::shape(format!(
+                "merge time-design mismatch: {}×{} vs {}×{}",
+                self.m2.rows(),
+                self.m2.cols(),
+                other.m2.rows(),
+                other.m2.cols()
+            )));
+        }
+        let same = self
+            .m2
+            .as_slice()
+            .iter()
+            .zip(other.m2.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            return Err(YocoError::shape(
+                "merge time-design mismatch: shards share M̃₂ bit-for-bit or not at all",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Merge two compressed panels sharing the same (bit-identical)
+    /// time design M̃₂: clusters concatenate — `other`'s M̃₁ rows and
+    /// outcome columns append after `self`'s. Two clusters with
+    /// identical statistics stay distinct (collapsing them would
+    /// wrongly sum their outcome series). The sequential reference
+    /// left-fold for [`merge_many`](Self::merge_many).
+    pub fn merge(&self, other: &BalancedPanelCompressed) -> Result<BalancedPanelCompressed> {
+        self.check_mergeable(other)?;
+        let (c1, c2, t) = (self.num_clusters(), other.num_clusters(), self.t_len());
+        let mut m1 = Vec::with_capacity((c1 + c2) * self.p1());
+        m1.extend_from_slice(self.m1.as_slice());
+        m1.extend_from_slice(other.m1.as_slice());
+        let mut y = Matrix::zeros(t, c1 + c2);
+        for tt in 0..t {
+            for c in 0..c1 {
+                y[(tt, c)] = self.y[(tt, c)];
+            }
+            for c in 0..c2 {
+                y[(tt, c1 + c)] = other.y[(tt, c)];
+            }
+        }
+        Ok(BalancedPanelCompressed {
+            m1: Matrix::from_vec(c1 + c2, self.p1(), m1),
+            m2: self.m2.clone(),
+            y,
+        })
+    }
+
+    /// Merge `K` shard compressions via the generic engine in
+    /// [`core`](super::core) — byte-identical to folding
+    /// [`merge`](Self::merge) left to right (pure concatenation: the
+    /// balanced panel is the family's one keyless container).
+    pub fn merge_many(
+        shards: &[BalancedPanelCompressed],
+        threads: usize,
+    ) -> Result<BalancedPanelCompressed> {
+        super::core::merge_many(shards, threads)
+    }
+
     /// Materialize the plain (no-interaction) design.
     pub fn materialize_plain(&self) -> (Matrix, Vec<f64>) {
         let (c_n, t, p1, p2) = (self.num_clusters(), self.t_len(), self.p1(), self.p2());
@@ -135,6 +206,113 @@ impl BalancedPanelCompressed {
             }
         }
         (m, y)
+    }
+}
+
+/// One cluster detached from [`BalancedPanelCompressed`] storage, for
+/// the generic merge engine: its static feature row and outcome series
+/// (the shared time design rides on the shard metadata).
+pub struct BalancedPanelSlot {
+    m1_row: Vec<f64>,
+    y_col: Vec<f64>,
+}
+
+impl CompressedContainer for BalancedPanelCompressed {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::BalancedPanel
+    }
+
+    fn num_records(&self) -> usize {
+        self.num_clusters()
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_rows()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        BalancedPanelCompressed::memory_bytes(self)
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(
+            ContainerKind::BalancedPanel,
+            &[self.p1() as u64, self.p2() as u64, self.t_len() as u64],
+        )
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        WireContainer {
+            kind: ContainerKind::BalancedPanel,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p1", self.p1() as u64),
+                ("p2", self.p2() as u64),
+                ("t", self.t_len() as u64),
+                ("c", self.num_clusters() as u64),
+            ],
+            sections: vec![
+                ("m1", self.m1.as_slice().to_vec()),
+                ("m2", self.m2.as_slice().to_vec()),
+                ("y", self.y.as_slice().to_vec()),
+            ],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for BalancedPanelCompressed {
+    type Slot = BalancedPanelSlot;
+
+    /// Keyless: merge is pure concatenation (see [`merge`](Self::merge)
+    /// on why clusters never collapse).
+    const KEYED: bool = false;
+
+    fn num_slots(&self) -> usize {
+        self.num_clusters()
+    }
+
+    fn key_words(&self, _c: usize, out: &mut Vec<u64>) {
+        out.clear(); // keyless: never consulted by the engine
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        BalancedPanelCompressed::check_mergeable(self, other)
+    }
+
+    fn load_slot(&self, c: usize) -> BalancedPanelSlot {
+        BalancedPanelSlot { m1_row: self.m1.row(c).to_vec(), y_col: self.y.col(c) }
+    }
+
+    fn fold_slot(&self, _c: usize, _acc: &mut BalancedPanelSlot) {
+        unreachable!("keyless container: slots never collide");
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<BalancedPanelSlot>) -> Self {
+        let (t, p1) = (shards[0].t_len(), shards[0].p1());
+        let c_n = slots.len();
+        let mut m1 = Vec::with_capacity(c_n * p1);
+        let mut y = Matrix::zeros(t, c_n);
+        for (c, slot) in slots.iter().enumerate() {
+            m1.extend_from_slice(&slot.m1_row);
+            for (tt, &v) in slot.y_col.iter().enumerate() {
+                y[(tt, c)] = v;
+            }
+        }
+        BalancedPanelCompressed {
+            m1: Matrix::from_vec(c_n, p1, m1),
+            m2: shards[0].m2.clone(),
+            y,
+        }
     }
 }
 

@@ -13,7 +13,9 @@
 
 use std::collections::HashMap;
 
-use super::key::{FeatureKey, FxHasherBuilder};
+use super::core::{CompressedContainer, ContainerKind, SufficientStatistics, WireContainer};
+use super::key::{canonicalize_into, FeatureKey, FxHasherBuilder};
+use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
 
 /// One group of clusters sharing a feature matrix.
@@ -82,6 +84,167 @@ impl BetweenClusterCompressed {
                     + 1)
             })
             .sum()
+    }
+
+    fn check_mergeable(&self, other: &BetweenClusterCompressed) -> Result<()> {
+        if other.p != self.p {
+            return Err(YocoError::shape(format!(
+                "merge feature mismatch: {} vs {}",
+                self.p, other.p
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merge two compressions, keyed on the group's (bit-identical)
+    /// feature matrix — `n_clusters`, `Σ_c y_c`, and `Σ_c y_c y_cᵀ` add.
+    /// The sequential reference left-fold for
+    /// [`merge_many`](Self::merge_many).
+    pub fn merge(&self, other: &BetweenClusterCompressed) -> Result<BetweenClusterCompressed> {
+        self.check_mergeable(other)?;
+        let cap = self.groups.len() + other.groups.len();
+        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(cap * 2, FxHasherBuilder);
+        let mut groups = self.groups.clone();
+        for (g, grp) in groups.iter().enumerate() {
+            index.insert(FeatureKey::from_row(grp.features.as_slice()), g);
+        }
+        for grp in &other.groups {
+            let key = FeatureKey::from_row(grp.features.as_slice());
+            match index.get(&key) {
+                Some(&j) => add_group(&mut groups[j], grp),
+                None => {
+                    index.insert(key, groups.len());
+                    groups.push(grp.clone());
+                }
+            }
+        }
+        Ok(BetweenClusterCompressed {
+            p: self.p,
+            groups,
+            total_rows: self.total_rows + other.total_rows,
+            total_clusters: self.total_clusters + other.total_clusters,
+        })
+    }
+
+    /// Merge `K` shard compressions via the generic engine in
+    /// [`core`](super::core) — byte-identical to folding
+    /// [`merge`](Self::merge) left to right.
+    pub fn merge_many(
+        shards: &[BetweenClusterCompressed],
+        threads: usize,
+    ) -> Result<BetweenClusterCompressed> {
+        super::core::merge_many(shards, threads)
+    }
+}
+
+/// Add one group's statistics into another (same feature matrix):
+/// `n_clusters`, then `y_sum` elementwise, then `y_outer` elementwise —
+/// the fixed fold order the byte-identity guarantee pins.
+fn add_group(acc: &mut ClusterGroup, other: &ClusterGroup) {
+    acc.n_clusters += other.n_clusters;
+    for (a, b) in acc.y_sum.iter_mut().zip(&other.y_sum) {
+        *a += b;
+    }
+    for (a, b) in acc.y_outer.as_mut_slice().iter_mut().zip(other.y_outer.as_slice()) {
+        *a += b;
+    }
+}
+
+impl CompressedContainer for BetweenClusterCompressed {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::BetweenCluster
+    }
+
+    fn num_records(&self) -> usize {
+        BetweenClusterCompressed::num_records(self)
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_rows
+    }
+
+    fn memory_bytes(&self) -> usize {
+        BetweenClusterCompressed::memory_bytes(self)
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(ContainerKind::BetweenCluster, &[self.p as u64])
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        let mut group_t = Vec::with_capacity(self.groups.len());
+        let mut n_clusters = Vec::with_capacity(self.groups.len());
+        let mut features = Vec::new();
+        let mut y_sum = Vec::new();
+        let mut y_outer = Vec::new();
+        for g in &self.groups {
+            group_t.push(g.features.rows() as f64);
+            n_clusters.push(g.n_clusters);
+            features.extend_from_slice(g.features.as_slice());
+            y_sum.extend_from_slice(&g.y_sum);
+            y_outer.extend_from_slice(g.y_outer.as_slice());
+        }
+        WireContainer {
+            kind: ContainerKind::BetweenCluster,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p", self.p as u64),
+                ("g", self.groups.len() as u64),
+                ("total_rows", self.total_rows),
+                ("total_clusters", self.total_clusters),
+            ],
+            sections: vec![
+                ("group_t", group_t),
+                ("n_clusters", n_clusters),
+                ("features", features),
+                ("y_sum", y_sum),
+                ("y_outer", y_outer),
+            ],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for BetweenClusterCompressed {
+    type Slot = ClusterGroup;
+
+    fn num_slots(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn key_words(&self, g: usize, out: &mut Vec<u64>) {
+        canonicalize_into(self.groups[g].features.as_slice(), out);
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        BetweenClusterCompressed::check_mergeable(self, other)
+    }
+
+    fn load_slot(&self, g: usize) -> ClusterGroup {
+        self.groups[g].clone()
+    }
+
+    fn fold_slot(&self, g: usize, acc: &mut ClusterGroup) {
+        add_group(acc, &self.groups[g]);
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<ClusterGroup>) -> Self {
+        BetweenClusterCompressed {
+            p: shards[0].p,
+            groups: slots,
+            total_rows: shards.iter().map(|s| s.total_rows).sum(),
+            total_clusters: shards.iter().map(|s| s.total_clusters).sum(),
+        }
     }
 }
 

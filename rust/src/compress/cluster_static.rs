@@ -18,7 +18,7 @@
 
 use std::collections::HashMap;
 
-use super::sufficient::PARALLEL_MERGE_MIN_GROUPS;
+use super::core::{CompressedContainer, ContainerKind, SufficientStatistics, WireContainer};
 use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
 
@@ -200,12 +200,8 @@ impl ClusterStaticCompressed {
     }
 
     /// Merge `K` shard compressions, filling the output in parallel with
-    /// up to `threads` OS threads — same two-phase scheme as
-    /// [`CompressedData::merge_many`](super::CompressedData::merge_many):
-    /// a sequential scan assigns each cluster label an output slot in
-    /// first-occurrence order (the sequential left-fold's cluster
-    /// order), then disjoint slot ranges accumulate per thread in shard
-    /// order, so the result is byte-identical to folding
+    /// up to `threads` OS threads. Delegates to the generic engine in
+    /// [`core`](super::core), which is byte-identical to folding
     /// [`merge`](Self::merge) left to right — and, for label-disjoint
     /// shards (the pipeline's cluster-hash routing), to the old
     /// sequential [`concat`](Self::concat) fold.
@@ -213,68 +209,123 @@ impl ClusterStaticCompressed {
         shards: &[ClusterStaticCompressed],
         threads: usize,
     ) -> Result<ClusterStaticCompressed> {
-        let first = shards
-            .first()
-            .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
-        let p = first.p;
-        for s in &shards[1..] {
-            if s.p != p {
-                return Err(YocoError::shape(format!(
-                    "merge feature mismatch: {} vs {}",
-                    p, s.p
-                )));
-            }
-        }
+        super::core::merge_many(shards, threads)
+    }
+}
 
-        // Phase 1: label-keyed slot assignment, first-occurrence order.
-        let total: usize = shards.iter().map(|s| s.clusters.len()).sum();
-        let mut index: HashMap<u64, u32> = HashMap::with_capacity(total * 2);
-        let mut labels: Vec<f64> = Vec::new();
-        let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
-        for s in shards {
-            let mut shard_slots = Vec::with_capacity(s.clusters.len());
-            for &label in &s.labels {
-                let slot = match index.get(&label.to_bits()) {
-                    Some(&sl) => sl,
-                    None => {
-                        let sl = labels.len() as u32;
-                        index.insert(label.to_bits(), sl);
-                        labels.push(label);
-                        sl
-                    }
-                };
-                shard_slots.push(slot);
-            }
-            slots.push(shard_slots);
-        }
-        let g_out = labels.len();
+/// One cluster's record detached from [`ClusterStaticCompressed`]
+/// storage, for the generic merge engine: the moments plus the cluster
+/// label (the slot key).
+pub struct ClusterStaticSlot {
+    moments: ClusterMoments,
+    label: f64,
+}
 
-        // Phase 2: fill disjoint slot ranges (no locks, no atomics).
-        let mut clusters =
-            vec![ClusterMoments { k1: Vec::new(), k2: Vec::new(), yy: 0.0, n: 0.0 }; g_out];
-        let threads = threads.clamp(1, g_out.max(1));
-        if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
-            fill_cluster_slot_range(shards, &slots, 0, g_out, &mut clusters);
-        } else {
-            let per = g_out.div_ceil(threads);
-            let slots_ref = &slots;
-            std::thread::scope(|scope| {
-                for (i, chunk) in clusters.chunks_mut(per).enumerate() {
-                    let lo = i * per;
-                    let hi = lo + chunk.len();
-                    scope.spawn(move || {
-                        fill_cluster_slot_range(shards, slots_ref, lo, hi, chunk)
-                    });
-                }
-            });
-        }
+impl CompressedContainer for ClusterStaticCompressed {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::ClusterStatic
+    }
 
-        Ok(ClusterStaticCompressed {
-            p,
+    fn num_records(&self) -> usize {
+        self.num_clusters()
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_rows
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ClusterStaticCompressed::memory_bytes(self)
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(ContainerKind::ClusterStatic, &[self.p as u64])
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        let tri = self.p * (self.p + 1) / 2;
+        let mut k1 = Vec::with_capacity(self.clusters.len() * tri);
+        let mut k2 = Vec::with_capacity(self.clusters.len() * self.p);
+        let mut yy = Vec::with_capacity(self.clusters.len());
+        let mut n = Vec::with_capacity(self.clusters.len());
+        for c in &self.clusters {
+            k1.extend_from_slice(&c.k1);
+            k2.extend_from_slice(&c.k2);
+            yy.push(c.yy);
+            n.push(c.n);
+        }
+        WireContainer {
+            kind: ContainerKind::ClusterStatic,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p", self.p as u64),
+                ("c", self.clusters.len() as u64),
+                ("total_rows", self.total_rows),
+            ],
+            sections: vec![
+                ("labels", self.labels.clone()),
+                ("k1", k1),
+                ("k2", k2),
+                ("yy", yy),
+                ("n", n),
+            ],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for ClusterStaticCompressed {
+    type Slot = ClusterStaticSlot;
+
+    fn num_slots(&self) -> usize {
+        self.clusters.len()
+    }
+
+    fn key_words(&self, c: usize, out: &mut Vec<u64>) {
+        out.clear();
+        out.push(self.labels[c].to_bits());
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        if other.p != self.p {
+            return Err(YocoError::shape(format!(
+                "merge feature mismatch: {} vs {}",
+                self.p, other.p
+            )));
+        }
+        Ok(())
+    }
+
+    fn load_slot(&self, c: usize) -> ClusterStaticSlot {
+        ClusterStaticSlot { moments: self.clusters[c].clone(), label: self.labels[c] }
+    }
+
+    fn fold_slot(&self, c: usize, acc: &mut ClusterStaticSlot) {
+        add_moments(&mut acc.moments, &self.clusters[c]);
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<ClusterStaticSlot>) -> Self {
+        let mut clusters = Vec::with_capacity(slots.len());
+        let mut labels = Vec::with_capacity(slots.len());
+        for s in slots {
+            labels.push(s.label);
+            clusters.push(s.moments);
+        }
+        ClusterStaticCompressed {
+            p: shards[0].p,
             clusters,
             labels,
             total_rows: shards.iter().map(|s| s.total_rows).sum(),
-        })
+        }
     }
 }
 
@@ -288,35 +339,6 @@ fn add_moments(acc: &mut ClusterMoments, other: &ClusterMoments) {
     }
     acc.yy += other.yy;
     acc.n += other.n;
-}
-
-/// Accumulate every shard's contribution to output slots `[lo, hi)`
-/// (`out[0]` is slot `lo`). First occurrence of a slot clones the
-/// shard's moments; later occurrences add, visiting shards in order —
-/// the sequential left-fold's accumulation order exactly.
-fn fill_cluster_slot_range(
-    shards: &[ClusterStaticCompressed],
-    slots: &[Vec<u32>],
-    lo: usize,
-    hi: usize,
-    out: &mut [ClusterMoments],
-) {
-    let mut seen = vec![false; hi - lo];
-    for (s, shard_slots) in shards.iter().zip(slots) {
-        for (c, &slot) in shard_slots.iter().enumerate() {
-            let slot = slot as usize;
-            if slot < lo || slot >= hi {
-                continue;
-            }
-            let j = slot - lo;
-            if seen[j] {
-                add_moments(&mut out[j], &s.clusters[c]);
-            } else {
-                seen[j] = true;
-                out[j] = s.clusters[c].clone();
-            }
-        }
-    }
 }
 
 /// Streaming builder for [`ClusterStaticCompressed`]. Rows may arrive in

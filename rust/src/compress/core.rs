@@ -1,0 +1,543 @@
+//! The container-family core: one trait, one merge engine.
+//!
+//! The paper's claim is that *one* compression serves every estimator;
+//! this module is the code-level mirror of that claim. Every compressed
+//! container — sufficient statistics (§4), weighted moments (§7.2),
+//! f-weights (§3.3), and the three cluster compressions (§5.3.1–§5.3.3)
+//! — implements [`SufficientStatistics`], and a **single** generic
+//! slot-partitioned [`merge_many`] engine replaces the per-container
+//! hand-rolled copies that used to live in `sufficient.rs`,
+//! `weighted.rs`, and `cluster_static.rs`.
+//!
+//! # The fold-order guarantee
+//!
+//! [`merge_many`] is **byte-identical to the sequential left-fold** of
+//! the container's own `merge` (or `concat`) for *all* inputs, not just
+//! exactly-summable ones. Two phases make this hold:
+//!
+//! 1. A cheap sequential scan assigns every (shard, record) pair an
+//!    output slot in **first-occurrence order** over the shard sequence
+//!    — exactly the record order a sequential left-fold produces.
+//! 2. The slot space is split into contiguous ranges, one thread each
+//!    (disjoint `&mut` chunks — no locks, no atomics). Within a range,
+//!    the first occurrence of a slot copies the shard's record
+//!    ([`SufficientStatistics::load_slot`]); later occurrences add
+//!    ([`SufficientStatistics::fold_slot`]), **visiting shards in
+//!    order**. Each output slot therefore sees the same floating-point
+//!    additions in the same order as the left-fold — no pairwise-tree
+//!    reassociation anywhere.
+//!
+//! # Key-word layout
+//!
+//! Keyed containers identify a record by a canonical `u64`-word key
+//! ([`SufficientStatistics::key_words`]): each feature value's bit
+//! pattern with `-0.0` collapsed to `+0.0` and NaN collapsed to one
+//! pattern (see [`super::key`]), plus container-specific suffix words
+//! (a cluster id for §5.3.1 tagging, the outcome value for f-weights,
+//! the flattened `T_g×p` feature matrix for between-cluster groups).
+//! Keyless containers ([`SufficientStatistics::KEYED`]` = false`, the
+//! balanced panel) concatenate instead: every (shard, record) pair gets
+//! a fresh slot in shard order.
+
+use std::any::Any;
+use std::collections::HashMap;
+
+use super::key::{FeatureKey, FxHasher, FxHasherBuilder};
+use crate::error::{Result, YocoError};
+use crate::util::json::Json;
+use std::hash::Hasher as _;
+
+/// Below this many output slots the parallel fill's thread spawn costs
+/// more than the copy it distributes; fall back to a single pass.
+pub(crate) const PARALLEL_MERGE_MIN_GROUPS: usize = 1024;
+
+/// Which concrete compressed container a trait object is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ContainerKind {
+    /// [`CompressedData`](super::CompressedData) — §4 sufficient
+    /// statistics (optionally §5.3.1 cluster-tagged).
+    SuffStats,
+    /// [`WeightedCompressedData`](super::WeightedCompressedData) — §7.2
+    /// weighted moments.
+    Weighted,
+    /// [`FWeightCompressed`](super::FWeightCompressed) — §3.3 frequency
+    /// weights.
+    FWeight,
+    /// [`ClusterStaticCompressed`](super::ClusterStaticCompressed) —
+    /// §5.3.3 per-cluster moments.
+    ClusterStatic,
+    /// [`BetweenClusterCompressed`](super::BetweenClusterCompressed) —
+    /// §5.3.2 between-cluster groups.
+    BetweenCluster,
+    /// [`BalancedPanelCompressed`](super::BalancedPanelCompressed) —
+    /// §5.3.2 balanced-panel Kronecker form.
+    BalancedPanel,
+}
+
+impl ContainerKind {
+    /// Stable name used in cache keys, the wire form, and metrics.
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// The registry entry for this kind.
+    pub fn spec(self) -> &'static ContainerSpec {
+        registry().iter().find(|s| s.kind == self).expect("every kind registered")
+    }
+}
+
+/// One registry row: everything the planner / cache / wire layers need
+/// to dispatch over a container family member without matching on
+/// concrete types all over the codebase.
+#[derive(Debug)]
+pub struct ContainerSpec {
+    /// The concrete container this row describes.
+    pub kind: ContainerKind,
+    /// Stable name (cache keys, wire `kind` field, metric labels).
+    pub name: &'static str,
+    /// Whether records carry a group key (false ⇒ merge = concatenation).
+    pub keyed: bool,
+    /// The estimator family that consumes this container.
+    pub estimator: &'static str,
+}
+
+/// The single strategy → container registry. Order is stable and
+/// matches the paper's presentation (§4 first, cluster strategies last).
+pub fn registry() -> &'static [ContainerSpec] {
+    const REGISTRY: &[ContainerSpec] = &[
+        ContainerSpec {
+            kind: ContainerKind::SuffStats,
+            name: "suffstats",
+            keyed: true,
+            estimator: "wls",
+        },
+        ContainerSpec {
+            kind: ContainerKind::Weighted,
+            name: "weighted",
+            keyed: true,
+            estimator: "wls_weighted",
+        },
+        ContainerSpec {
+            kind: ContainerKind::FWeight,
+            name: "fweight",
+            keyed: true,
+            estimator: "wls_fweight",
+        },
+        ContainerSpec {
+            kind: ContainerKind::ClusterStatic,
+            name: "cluster_static",
+            keyed: true,
+            estimator: "cluster_static",
+        },
+        ContainerSpec {
+            kind: ContainerKind::BetweenCluster,
+            name: "between_cluster",
+            keyed: true,
+            estimator: "between_cluster",
+        },
+        ContainerSpec {
+            kind: ContainerKind::BalancedPanel,
+            name: "balanced_panel",
+            keyed: false,
+            estimator: "balanced_panel",
+        },
+    ];
+    REGISTRY
+}
+
+/// Look up a registry row by its stable name.
+pub fn spec_by_name(name: &str) -> Option<&'static ContainerSpec> {
+    registry().iter().find(|s| s.name == name)
+}
+
+/// Object-safe view shared by every compressed container: what the
+/// dataset cache, serving tier, and wire layers need without knowing
+/// the concrete type. The merge machinery lives in the non-object-safe
+/// extension [`SufficientStatistics`].
+pub trait CompressedContainer: Send + Sync + 'static {
+    /// Which concrete container this is.
+    fn kind(&self) -> ContainerKind;
+
+    /// Number of compressed records (G, Gᶜ, or C depending on strategy).
+    fn num_records(&self) -> usize;
+
+    /// Original (uncompressed) observation count n.
+    fn total_records(&self) -> u64;
+
+    /// Approximate in-memory footprint in bytes.
+    fn memory_bytes(&self) -> usize;
+
+    /// Hash of the container's kind and shape (p, o, tagging, …).
+    /// Two containers merge only if their fingerprints agree; the wire
+    /// form carries it so a shard tier can reject mismatched shards
+    /// before decoding payloads.
+    fn schema_fingerprint(&self) -> u64;
+
+    /// The container-agnostic wire form (see [`WireContainer`]).
+    fn to_wire(&self) -> WireContainer;
+
+    /// Downcasting support for typed cache reads.
+    fn as_any(&self) -> &dyn Any;
+
+    /// Arc-level downcasting support (`Arc<dyn CompressedContainer>` →
+    /// `Arc<ConcreteType>` without cloning the payload).
+    fn as_any_arc(self: std::sync::Arc<Self>) -> std::sync::Arc<dyn Any + Send + Sync>;
+}
+
+/// The unifying abstraction over the compressed-container family: a
+/// container is a sequence of *slots* (compressed records), each
+/// identified by a canonical key (unless [`KEYED`](Self::KEYED) is
+/// false), whose statistics add under merge.
+///
+/// The contract the generic [`merge_many`] relies on:
+///
+/// * [`key_words`](Self::key_words) is canonical — equal records
+///   produce equal words (and each shard's slots have unique keys; any
+///   compressor or merge output does).
+/// * [`load_slot`](Self::load_slot) copies a slot's statistics exactly
+///   (bit-level), and [`fold_slot`](Self::fold_slot) adds a slot into
+///   an accumulator with a fixed field order — so `load` then `fold`s
+///   in shard order reproduces the sequential left-fold byte-for-byte.
+/// * [`assemble`](Self::assemble) lays slots out in slot order exactly
+///   as the container's own builder would.
+pub trait SufficientStatistics: CompressedContainer + Sized {
+    /// One record's complete statistics, detached from container
+    /// storage.
+    type Slot: Send;
+
+    /// Whether records carry a group key. When `false` the engine
+    /// concatenates: every (shard, slot) pair gets a fresh output slot
+    /// in shard order (the balanced panel — collapsing two clusters
+    /// with identical statistics would wrongly sum their outcome
+    /// series).
+    const KEYED: bool = true;
+
+    /// Number of slots in this shard.
+    fn num_slots(&self) -> usize;
+
+    /// Write slot `i`'s canonical key words into `out` (cleared first).
+    /// Unused when [`KEYED`](Self::KEYED) is false.
+    fn key_words(&self, i: usize, out: &mut Vec<u64>);
+
+    /// Shape/tagging compatibility check, done before any state is
+    /// touched.
+    fn check_mergeable(&self, other: &Self) -> Result<()>;
+
+    /// Copy slot `i` out of the container (bit-exact).
+    fn load_slot(&self, i: usize) -> Self::Slot;
+
+    /// Add slot `i`'s statistics into `acc` (same key; fixed field
+    /// order).
+    fn fold_slot(&self, i: usize, acc: &mut Self::Slot);
+
+    /// Rebuild a container from merged slots (in slot order) plus the
+    /// shard metadata (shape, totals). `shards` is non-empty and
+    /// pre-checked mergeable.
+    fn assemble(shards: &[Self], slots: Vec<Self::Slot>) -> Self;
+}
+
+/// Merge `K` shard compressions in one call, filling the output in
+/// parallel with up to `threads` OS threads — the ONE merge engine for
+/// the whole container family. Byte-identical to sequentially folding
+/// the container's own `merge` left to right (see the module docs for
+/// why).
+pub fn merge_many<T: SufficientStatistics>(shards: &[T], threads: usize) -> Result<T> {
+    let first = shards
+        .first()
+        .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
+    for s in &shards[1..] {
+        first.check_mergeable(s)?;
+    }
+
+    // Phase 1: slot assignment, first-occurrence order.
+    let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
+    let g_out: usize;
+    if T::KEYED {
+        let total: usize = shards.iter().map(|s| s.num_slots()).sum();
+        let mut index: HashMap<FeatureKey, u32, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(total * 2, FxHasherBuilder);
+        let mut scratch = Vec::new();
+        let mut next: u32 = 0;
+        for s in shards {
+            let mut shard_slots = Vec::with_capacity(s.num_slots());
+            for i in 0..s.num_slots() {
+                s.key_words(i, &mut scratch);
+                let slot = match index.get(scratch.as_slice()) {
+                    Some(&sl) => sl,
+                    None => {
+                        let sl = next;
+                        index.insert(FeatureKey::from_words(&scratch), sl);
+                        next += 1;
+                        sl
+                    }
+                };
+                shard_slots.push(slot);
+            }
+            slots.push(shard_slots);
+        }
+        g_out = next as usize;
+    } else {
+        // Keyless: pure concatenation in shard order.
+        let mut next: u32 = 0;
+        for s in shards {
+            let k = s.num_slots() as u32;
+            slots.push((next..next + k).collect());
+            next += k;
+        }
+        g_out = next as usize;
+    }
+
+    // Phase 2: fill disjoint slot ranges, one contiguous range per
+    // thread (disjoint &mut chunks — no locks, no atomics).
+    let mut out: Vec<Option<T::Slot>> = Vec::with_capacity(g_out);
+    out.resize_with(g_out, || None);
+    let threads = threads.clamp(1, g_out.max(1));
+    if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
+        fill_slot_range(shards, &slots, 0, &mut out);
+    } else {
+        let per = g_out.div_ceil(threads);
+        let slots_ref = &slots;
+        std::thread::scope(|scope| {
+            for (i, chunk) in out.chunks_mut(per).enumerate() {
+                let lo = i * per;
+                scope.spawn(move || fill_slot_range(shards, slots_ref, lo, chunk));
+            }
+        });
+    }
+
+    let merged: Vec<T::Slot> =
+        out.into_iter().map(|s| s.expect("every slot assigned in phase 1")).collect();
+    Ok(T::assemble(shards, merged))
+}
+
+/// Accumulate every shard's contribution to output slots
+/// `[lo, lo + out.len())` (`out[0]` is slot `lo`). First occurrence of
+/// a slot copies the shard's record; later occurrences add — visiting
+/// shards in order, which reproduces the sequential left-fold's
+/// accumulation order exactly.
+fn fill_slot_range<T: SufficientStatistics>(
+    shards: &[T],
+    slots: &[Vec<u32>],
+    lo: usize,
+    out: &mut [Option<T::Slot>],
+) {
+    let hi = lo + out.len();
+    for (s, shard_slots) in shards.iter().zip(slots) {
+        for (g, &slot) in shard_slots.iter().enumerate() {
+            let slot = slot as usize;
+            if slot < lo || slot >= hi {
+                continue;
+            }
+            match &mut out[slot - lo] {
+                Some(acc) => s.fold_slot(g, acc),
+                empty @ None => *empty = Some(s.load_slot(g)),
+            }
+        }
+    }
+}
+
+/// Fold a kind tag and shape words into a schema fingerprint (FxHash
+/// over the words — stable within a build, cheap to compare).
+pub fn fingerprint_words(kind: ContainerKind, words: &[u64]) -> u64 {
+    let mut h = FxHasher::default();
+    h.write_u64(kind.name().len() as u64);
+    for b in kind.name().bytes() {
+        h.write_u64(b as u64);
+    }
+    for &w in words {
+        h.write_u64(w);
+    }
+    h.finish()
+}
+
+/// The container-agnostic wire form: kind + schema fingerprint + named
+/// integer metadata + named `f64` payload sections. One serialization
+/// path serves the whole family (the future shard tier ships these
+/// between nodes; [`to_json`](Self::to_json) / [`from_json`](Self::
+/// from_json) are bit-lossless because the JSON layer prints `f64`s in
+/// shortest-round-trip form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireContainer {
+    /// Which container this is.
+    pub kind: ContainerKind,
+    /// [`CompressedContainer::schema_fingerprint`] of the source.
+    pub fingerprint: u64,
+    /// Named integer metadata (shape, totals), in a fixed per-kind
+    /// order.
+    pub meta: Vec<(&'static str, u64)>,
+    /// Named `f64` payload sections, in a fixed per-kind order.
+    pub sections: Vec<(&'static str, Vec<f64>)>,
+}
+
+impl WireContainer {
+    /// Integer metadata field by name.
+    pub fn meta_u64(&self, name: &str) -> Option<u64> {
+        self.meta.iter().find(|(k, _)| *k == name).map(|(_, v)| *v)
+    }
+
+    /// Payload section by name.
+    pub fn section(&self, name: &str) -> Option<&[f64]> {
+        self.sections.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_slice())
+    }
+
+    /// Serialize to the wire JSON object:
+    /// `{"kind","fingerprint","meta":{..},"sections":{..}}`.
+    /// The fingerprint is hex-encoded (JSON numbers are f64 and would
+    /// truncate 64-bit hashes).
+    pub fn to_json(&self) -> Json {
+        let meta = self
+            .meta
+            .iter()
+            .map(|(k, v)| (*k, Json::Num(*v as f64)))
+            .collect::<Vec<_>>();
+        let sections = self
+            .sections
+            .iter()
+            .map(|(k, v)| (*k, Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.name().to_string())),
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint))),
+            ("meta", Json::obj(meta)),
+            ("sections", Json::obj(sections)),
+        ])
+    }
+
+    /// Parse a wire JSON object back (the inverse of
+    /// [`to_json`](Self::to_json), bit-exact on every section value).
+    pub fn from_json(j: &Json) -> Result<WireContainer> {
+        let kind_name = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| YocoError::parse("wire container: missing 'kind'"))?;
+        let spec = spec_by_name(kind_name).ok_or_else(|| {
+            YocoError::parse(format!("wire container: unknown kind '{kind_name}'"))
+        })?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| YocoError::parse("wire container: bad 'fingerprint'"))?;
+        let mut meta = Vec::new();
+        if let Some(Json::Obj(m)) = j.get("meta") {
+            for (k, v) in m {
+                let name = spec_meta_name(spec.kind, k)?;
+                let v = v
+                    .as_f64()
+                    .ok_or_else(|| YocoError::parse("wire container: bad meta value"))?;
+                meta.push((name, v as u64));
+            }
+        }
+        let mut sections = Vec::new();
+        if let Some(Json::Obj(m)) = j.get("sections") {
+            for (k, v) in m {
+                let name = spec_meta_name(spec.kind, k)?;
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| YocoError::parse("wire container: bad section"))?;
+                let mut vals = Vec::with_capacity(arr.len());
+                for x in arr {
+                    vals.push(x.as_f64().ok_or_else(|| {
+                        YocoError::parse("wire container: non-numeric section value")
+                    })?);
+                }
+                sections.push((name, vals));
+            }
+        }
+        Ok(WireContainer { kind: spec.kind, fingerprint, meta, sections })
+    }
+}
+
+/// Intern a wire field name to a `&'static str` (the wire form stores
+/// static names; decoding matches against the known vocabulary).
+fn spec_meta_name(kind: ContainerKind, name: &str) -> Result<&'static str> {
+    const NAMES: &[&str] = &[
+        "p", "o", "p1", "p2", "t", "g", "c", "total_n", "total_rows", "total_clusters",
+        "num_clusters", "tagged", "features", "counts", "sums", "sumsqs", "cluster_of",
+        "w", "w2", "wy", "wy2", "w2y", "w2y2", "total_w", "outcome", "weights", "k1",
+        "k2", "yy", "n", "labels", "n_clusters", "y_sum", "y_outer", "group_t", "m1",
+        "m2", "y",
+    ];
+    NAMES
+        .iter()
+        .find(|&&n| n == name)
+        .copied()
+        .ok_or_else(|| {
+            YocoError::parse(format!("wire container: unknown {:?} field '{name}'", kind))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_kinds_with_unique_names() {
+        let specs = registry();
+        assert_eq!(specs.len(), 6);
+        let mut names: Vec<&str> = specs.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6, "duplicate registry names");
+        for s in specs {
+            assert_eq!(s.kind.name(), s.name);
+            assert!(std::ptr::eq(spec_by_name(s.name).unwrap(), s.kind.spec()));
+        }
+        assert!(spec_by_name("nope").is_none());
+        // The balanced panel is the one keyless (concat-merge) member.
+        let keyless: Vec<_> = specs.iter().filter(|s| !s.keyed).collect();
+        assert_eq!(keyless.len(), 1);
+        assert_eq!(keyless[0].kind, ContainerKind::BalancedPanel);
+    }
+
+    #[test]
+    fn fingerprints_separate_kinds_and_shapes() {
+        let a = fingerprint_words(ContainerKind::SuffStats, &[3, 1, 0]);
+        let b = fingerprint_words(ContainerKind::SuffStats, &[3, 2, 0]);
+        let c = fingerprint_words(ContainerKind::Weighted, &[3, 1, 0]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, fingerprint_words(ContainerKind::SuffStats, &[3, 1, 0]));
+    }
+
+    #[test]
+    fn wire_json_roundtrip_is_bit_exact() {
+        // Full-mantissa values: shortest-round-trip printing must bring
+        // every bit back.
+        let vals: Vec<f64> = (0..64)
+            .map(|i| {
+                let h =
+                    (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xabcd);
+                (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+            })
+            .collect();
+        let w = WireContainer {
+            kind: ContainerKind::SuffStats,
+            fingerprint: 0xdead_beef_0123_4567,
+            meta: vec![("p", 3), ("o", 1), ("total_n", 64)],
+            sections: vec![("features", vals.clone()), ("counts", vec![1.0; 4])],
+        };
+        let j = crate::util::json::parse(&w.to_json().to_string()).unwrap();
+        let back = WireContainer::from_json(&j).unwrap();
+        assert_eq!(back.kind, ContainerKind::SuffStats);
+        assert_eq!(back.fingerprint, w.fingerprint);
+        assert_eq!(back.meta_u64("total_n"), Some(64));
+        let round: Vec<u64> =
+            back.section("features").unwrap().iter().map(|v| v.to_bits()).collect();
+        let orig: Vec<u64> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(round, orig);
+    }
+
+    #[test]
+    fn wire_json_rejects_garbage() {
+        for bad in [
+            r#"{"fingerprint":"00"}"#,
+            r#"{"kind":"nope","fingerprint":"00"}"#,
+            r#"{"kind":"suffstats","fingerprint":"zz"}"#,
+            r#"{"kind":"suffstats","fingerprint":"00","meta":{"hack":1}}"#,
+        ] {
+            let j = crate::util::json::parse(bad).unwrap();
+            assert!(WireContainer::from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

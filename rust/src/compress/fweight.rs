@@ -9,7 +9,9 @@
 
 use std::collections::HashMap;
 
-use super::key::{FeatureKey, FxHasherBuilder};
+use super::core::{CompressedContainer, ContainerKind, SufficientStatistics, WireContainer};
+use super::key::{canonical_bits, canonicalize_into, FeatureKey, FxHasherBuilder};
+use crate::error::{Result, YocoError};
 
 /// (y, M)-compressed records: Table 1(b).
 #[derive(Debug, Clone)]
@@ -66,6 +68,170 @@ impl FWeightCompressed {
     /// Compression ratio n / Ġ.
     pub fn compression_ratio(&self) -> f64 {
         self.total_n as f64 / self.num_records().max(1) as f64
+    }
+
+    fn check_mergeable(&self, other: &FWeightCompressed) -> Result<()> {
+        if other.p != self.p {
+            return Err(YocoError::shape(format!(
+                "merge feature mismatch: {} vs {}",
+                self.p, other.p
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merge two compressions, keyed on the joint `(m, y)` record —
+    /// duplicate records add their f-weights. The sequential reference
+    /// left-fold for [`merge_many`](Self::merge_many).
+    pub fn merge(&self, other: &FWeightCompressed) -> Result<FWeightCompressed> {
+        self.check_mergeable(other)?;
+        let cap = self.num_records() + other.num_records();
+        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(cap * 2, FxHasherBuilder);
+        let mut features = self.features.clone();
+        let mut outcome = self.outcome.clone();
+        let mut weights = self.weights.clone();
+        let mut key_buf = vec![0.0; self.p + 1];
+        for g in 0..self.num_records() {
+            key_buf[..self.p].copy_from_slice(self.feature_row(g));
+            key_buf[self.p] = self.outcome[g];
+            index.insert(FeatureKey::from_row(&key_buf), g);
+        }
+        for g in 0..other.num_records() {
+            key_buf[..self.p].copy_from_slice(other.feature_row(g));
+            key_buf[self.p] = other.outcome[g];
+            let key = FeatureKey::from_row(&key_buf);
+            match index.get(&key) {
+                Some(&j) => weights[j] += other.weights[g],
+                None => {
+                    let j = weights.len();
+                    features.extend_from_slice(other.feature_row(g));
+                    outcome.push(other.outcome[g]);
+                    weights.push(other.weights[g]);
+                    index.insert(key, j);
+                }
+            }
+        }
+        Ok(FWeightCompressed {
+            p: self.p,
+            features,
+            outcome,
+            weights,
+            total_n: self.total_n + other.total_n,
+        })
+    }
+
+    /// Merge `K` shard compressions via the generic engine in
+    /// [`core`](super::core) — byte-identical to folding
+    /// [`merge`](Self::merge) left to right.
+    pub fn merge_many(shards: &[FWeightCompressed], threads: usize) -> Result<FWeightCompressed> {
+        super::core::merge_many(shards, threads)
+    }
+}
+
+/// One f-weight record detached from [`FWeightCompressed`] storage, for
+/// the generic merge engine: the joint `(m, y)` key plus its duplicate
+/// count.
+pub struct FWeightSlot {
+    features: Box<[f64]>,
+    y: f64,
+    weight: f64,
+}
+
+impl CompressedContainer for FWeightCompressed {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::FWeight
+    }
+
+    fn num_records(&self) -> usize {
+        FWeightCompressed::num_records(self)
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_n
+    }
+
+    fn memory_bytes(&self) -> usize {
+        8 * (self.features.len() + self.outcome.len() + self.weights.len())
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(ContainerKind::FWeight, &[self.p as u64])
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        WireContainer {
+            kind: ContainerKind::FWeight,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p", self.p as u64),
+                ("g", self.weights.len() as u64),
+                ("total_n", self.total_n),
+            ],
+            sections: vec![
+                ("features", self.features.clone()),
+                ("outcome", self.outcome.clone()),
+                ("weights", self.weights.clone()),
+            ],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for FWeightCompressed {
+    type Slot = FWeightSlot;
+
+    fn num_slots(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn key_words(&self, g: usize, out: &mut Vec<u64>) {
+        canonicalize_into(self.feature_row(g), out);
+        out.push(canonical_bits(self.outcome[g]));
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        FWeightCompressed::check_mergeable(self, other)
+    }
+
+    fn load_slot(&self, g: usize) -> FWeightSlot {
+        FWeightSlot {
+            features: self.feature_row(g).into(),
+            y: self.outcome[g],
+            weight: self.weights[g],
+        }
+    }
+
+    fn fold_slot(&self, g: usize, acc: &mut FWeightSlot) {
+        acc.weight += self.weights[g];
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<FWeightSlot>) -> Self {
+        let p = shards[0].p;
+        let mut features = Vec::with_capacity(slots.len() * p);
+        let mut outcome = Vec::with_capacity(slots.len());
+        let mut weights = Vec::with_capacity(slots.len());
+        for s in slots {
+            features.extend_from_slice(&s.features);
+            outcome.push(s.y);
+            weights.push(s.weight);
+        }
+        FWeightCompressed {
+            p,
+            features,
+            outcome,
+            weights,
+            total_n: shards.iter().map(|s| s.total_n).sum(),
+        }
     }
 }
 

@@ -65,8 +65,9 @@ pub fn canonicalize_into(row: &[f64], out: &mut Vec<u64>) {
     out.extend(row.iter().map(|&v| canonical_bits(v)));
 }
 
+/// Canonical bit pattern of one value (`-0.0` → `+0.0`, NaN collapsed).
 #[inline]
-fn canonical_bits(v: f64) -> u64 {
+pub(crate) fn canonical_bits(v: f64) -> u64 {
     if v == 0.0 {
         0 // collapses -0.0 and +0.0
     } else if v.is_nan() {

@@ -23,6 +23,7 @@ pub mod binning;
 mod cluster_between;
 mod cluster_static;
 mod cluster_within;
+pub mod core;
 mod fweight;
 mod groups;
 mod key;
@@ -33,6 +34,10 @@ pub use balanced_panel::{BalancedPanelCompressed, BalancedPanelCompressor};
 pub use cluster_between::{BetweenClusterCompressed, BetweenClusterCompressor};
 pub use cluster_static::{ClusterStaticCompressed, ClusterStaticCompressor};
 pub use cluster_within::WithinClusterCompressor;
+pub use self::core::{
+    merge_many, registry, spec_by_name, CompressedContainer, ContainerKind, ContainerSpec,
+    SufficientStatistics, WireContainer,
+};
 pub use fweight::{FWeightCompressed, FWeightCompressor};
 pub use groups::{GroupMeansCompressed, GroupMeansCompressor};
 pub use key::{hash_row, FeatureKey, FxHasherBuilder};

@@ -8,6 +8,9 @@
 
 use std::collections::HashMap;
 
+use super::core::{
+    CompressedContainer, ContainerKind, SufficientStatistics, WireContainer,
+};
 use super::key::{FeatureKey, FxHasherBuilder};
 use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
@@ -183,117 +186,12 @@ impl CompressedData {
     }
 
     /// Merge `K` shard compressions in one call, filling the output in
-    /// parallel with up to `threads` OS threads.
-    ///
-    /// Two phases: a cheap sequential scan assigns every (shard, group)
-    /// pair an output slot in first-occurrence order — exactly the group
-    /// order a sequential left-fold produces — then the slot space is
-    /// split into contiguous ranges and each range's statistics are
-    /// accumulated by one thread, **in shard order** per slot. Because
-    /// each output element keeps a single accumulator visited in the
-    /// same order as the sequential fold, the result is byte-identical
-    /// to `fold(merge)` for *all* inputs, not just exactly-summable ones
-    /// (no pairwise-tree reassociation of fp adds).
-    ///
-    /// Shards must each have unique group keys (any compressor output
-    /// does; so does any merge output).
+    /// parallel with up to `threads` OS threads. Delegates to the
+    /// generic engine in [`core`](super::core), which is byte-identical
+    /// to folding [`merge`](Self::merge) left to right (see the core
+    /// module docs for the fold-order guarantee).
     pub fn merge_many(shards: &[CompressedData], threads: usize) -> Result<CompressedData> {
-        let first = shards
-            .first()
-            .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
-        let (p, o) = (first.p, first.o);
-        let tagged = first.cluster_of.is_some();
-        for s in &shards[1..] {
-            first.check_mergeable(s)?;
-        }
-
-        // Phase 1: slot assignment, first-occurrence order.
-        let total_groups: usize = shards.iter().map(|s| s.num_groups()).sum();
-        let mut index: HashMap<FeatureKey, u32, FxHasherBuilder> =
-            HashMap::with_capacity_and_hasher(total_groups * 2, FxHasherBuilder);
-        let mut scratch = Vec::new();
-        let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
-        let mut g_out: u32 = 0;
-        for s in shards {
-            let mut shard_slots = Vec::with_capacity(s.num_groups());
-            for g in 0..s.num_groups() {
-                s.key_words_into(g, s.cluster_of.as_ref().map(|c| c[g]), &mut scratch);
-                let slot = match index.get(scratch.as_slice()) {
-                    Some(&sl) => sl,
-                    None => {
-                        let sl = g_out;
-                        index.insert(FeatureKey::from_words(&scratch), sl);
-                        g_out += 1;
-                        sl
-                    }
-                };
-                shard_slots.push(slot);
-            }
-            slots.push(shard_slots);
-        }
-        let g_out = g_out as usize;
-
-        // Phase 2: fill the output arrays, one contiguous slot range per
-        // thread (disjoint &mut chunks — no locks, no atomics).
-        let mut features = vec![0.0; g_out * p];
-        let mut counts = vec![0.0; g_out];
-        let mut sums = vec![0.0; g_out * o];
-        let mut sumsqs = vec![0.0; g_out * o];
-        let mut cluster = vec![0u32; if tagged { g_out } else { 0 }];
-
-        let threads = threads.clamp(1, g_out.max(1));
-        if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
-            fill_slot_range(
-                shards,
-                &slots,
-                p,
-                o,
-                0,
-                g_out,
-                &mut features,
-                &mut counts,
-                &mut sums,
-                &mut sumsqs,
-                &mut cluster,
-            );
-        } else {
-            let per = g_out.div_ceil(threads);
-            let slots_ref = &slots;
-            std::thread::scope(|scope| {
-                let mut f_it = features.chunks_mut((per * p).max(1));
-                let mut c_it = counts.chunks_mut(per);
-                let mut s_it = sums.chunks_mut((per * o).max(1));
-                let mut q_it = sumsqs.chunks_mut((per * o).max(1));
-                let mut t_it = cluster.chunks_mut(per);
-                let mut lo = 0usize;
-                while lo < g_out {
-                    let hi = (lo + per).min(g_out);
-                    let f = f_it.next().unwrap_or(&mut []);
-                    let c = c_it.next().unwrap_or(&mut []);
-                    let s = s_it.next().unwrap_or(&mut []);
-                    let q = q_it.next().unwrap_or(&mut []);
-                    let t = t_it.next().unwrap_or(&mut []);
-                    scope.spawn(move || {
-                        fill_slot_range(shards, slots_ref, p, o, lo, hi, f, c, s, q, t)
-                    });
-                    lo = hi;
-                }
-            });
-        }
-
-        let total_n = shards.iter().map(|s| s.total_n).sum();
-        let num_clusters = shards.iter().map(|s| s.num_clusters).max().unwrap_or(0);
-        Ok(CompressedData::from_parts(
-            p,
-            o,
-            features,
-            counts,
-            sums,
-            sumsqs,
-            total_n,
-            tagged.then_some(cluster),
-            num_clusters,
-        ))
+        super::core::merge_many(shards, threads)
     }
 
     /// Shape/tagging compatibility check shared by every merge entry
@@ -409,57 +307,142 @@ impl CompressedData {
     }
 }
 
-/// Below this many output groups the parallel fill's thread spawn costs
-/// more than the copy it distributes; fall back to a single pass.
-/// Shared by every `merge_many` in the compress layer.
-pub(crate) const PARALLEL_MERGE_MIN_GROUPS: usize = 1024;
+/// One group's statistics detached from [`CompressedData`] storage, for
+/// the generic merge engine: `[ñ | ỹ'(o) | ỹ''(o) | m̃(p)]` in one
+/// contiguous allocation, plus the §5.3.1 cluster id when tagged.
+pub struct SuffSlot {
+    stats: Box<[f64]>,
+    cluster: u32,
+}
 
-/// Accumulate every shard's contribution to output slots `[lo, hi)`.
-///
-/// The slices are the output arrays *for this range only* (`counts[0]`
-/// is slot `lo`). First occurrence of a slot copies the shard's record;
-/// later occurrences add — visiting shards in order, which reproduces
-/// the sequential left-fold's accumulation order exactly.
-#[allow(clippy::too_many_arguments)]
-fn fill_slot_range(
-    shards: &[CompressedData],
-    slots: &[Vec<u32>],
-    p: usize,
-    o: usize,
-    lo: usize,
-    hi: usize,
-    features: &mut [f64],
-    counts: &mut [f64],
-    sums: &mut [f64],
-    sumsqs: &mut [f64],
-    cluster: &mut [u32],
-) {
-    let mut seen = vec![false; hi - lo];
-    for (s, shard_slots) in shards.iter().zip(slots) {
-        for (g, &slot) in shard_slots.iter().enumerate() {
-            let slot = slot as usize;
-            if slot < lo || slot >= hi {
-                continue;
-            }
-            let j = slot - lo;
-            if seen[j] {
-                counts[j] += s.counts[g];
-                for k in 0..o {
-                    sums[j * o + k] += s.sums[g * o + k];
-                    sumsqs[j * o + k] += s.sumsqs[g * o + k];
-                }
-            } else {
-                seen[j] = true;
-                features[j * p..(j + 1) * p].copy_from_slice(s.feature_row(g));
-                counts[j] = s.counts[g];
-                sums[j * o..(j + 1) * o].copy_from_slice(&s.sums[g * o..(g + 1) * o]);
-                sumsqs[j * o..(j + 1) * o]
-                    .copy_from_slice(&s.sumsqs[g * o..(g + 1) * o]);
-                if let Some(c) = &s.cluster_of {
-                    cluster[j] = c[g];
-                }
+impl CompressedContainer for CompressedData {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::SuffStats
+    }
+
+    fn num_records(&self) -> usize {
+        self.num_groups()
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_n
+    }
+
+    fn memory_bytes(&self) -> usize {
+        CompressedData::memory_bytes(self)
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(
+            ContainerKind::SuffStats,
+            &[self.p as u64, self.o as u64, self.cluster_of.is_some() as u64],
+        )
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        let mut sections = vec![
+            ("features", self.features.clone()),
+            ("counts", self.counts.clone()),
+            ("sums", self.sums.clone()),
+            ("sumsqs", self.sumsqs.clone()),
+        ];
+        if let Some(cl) = &self.cluster_of {
+            sections.push(("cluster_of", cl.iter().map(|&c| c as f64).collect()));
+        }
+        WireContainer {
+            kind: ContainerKind::SuffStats,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p", self.p as u64),
+                ("o", self.o as u64),
+                ("total_n", self.total_n),
+                ("num_clusters", self.num_clusters as u64),
+                ("tagged", self.cluster_of.is_some() as u64),
+            ],
+            sections,
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for CompressedData {
+    type Slot = SuffSlot;
+
+    fn num_slots(&self) -> usize {
+        self.num_groups()
+    }
+
+    fn key_words(&self, g: usize, out: &mut Vec<u64>) {
+        self.key_words_into(g, self.cluster_of.as_ref().map(|c| c[g]), out);
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        CompressedData::check_mergeable(self, other)
+    }
+
+    fn load_slot(&self, g: usize) -> SuffSlot {
+        let o = self.o;
+        let mut stats = Vec::with_capacity(1 + 2 * o + self.p);
+        stats.push(self.counts[g]);
+        stats.extend_from_slice(&self.sums[g * o..(g + 1) * o]);
+        stats.extend_from_slice(&self.sumsqs[g * o..(g + 1) * o]);
+        stats.extend_from_slice(self.feature_row(g));
+        SuffSlot {
+            stats: stats.into_boxed_slice(),
+            cluster: self.cluster_of.as_ref().map_or(0, |c| c[g]),
+        }
+    }
+
+    fn fold_slot(&self, g: usize, acc: &mut SuffSlot) {
+        let o = self.o;
+        acc.stats[0] += self.counts[g];
+        for k in 0..o {
+            acc.stats[1 + k] += self.sums[g * o + k];
+            acc.stats[1 + o + k] += self.sumsqs[g * o + k];
+        }
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<SuffSlot>) -> Self {
+        let first = &shards[0];
+        let (p, o) = (first.p, first.o);
+        let tagged = first.cluster_of.is_some();
+        let g_out = slots.len();
+        let mut features = Vec::with_capacity(g_out * p);
+        let mut counts = Vec::with_capacity(g_out);
+        let mut sums = Vec::with_capacity(g_out * o);
+        let mut sumsqs = Vec::with_capacity(g_out * o);
+        let mut cluster = Vec::with_capacity(if tagged { g_out } else { 0 });
+        for s in &slots {
+            counts.push(s.stats[0]);
+            sums.extend_from_slice(&s.stats[1..1 + o]);
+            sumsqs.extend_from_slice(&s.stats[1 + o..1 + 2 * o]);
+            features.extend_from_slice(&s.stats[1 + 2 * o..]);
+            if tagged {
+                cluster.push(s.cluster);
             }
         }
+        let total_n = shards.iter().map(|s| s.total_n).sum();
+        let num_clusters = shards.iter().map(|s| s.num_clusters).max().unwrap_or(0);
+        CompressedData::from_parts(
+            p,
+            o,
+            features,
+            counts,
+            sums,
+            sumsqs,
+            total_n,
+            tagged.then_some(cluster),
+            num_clusters,
+        )
     }
 }
 
@@ -707,6 +690,7 @@ impl SuffStatsCompressor {
 
 #[cfg(test)]
 mod tests {
+    use super::super::core::PARALLEL_MERGE_MIN_GROUPS;
     use super::*;
 
     /// Table 1's running example: features A/B/C as rows of a dummy

@@ -13,8 +13,10 @@
 
 use std::collections::HashMap;
 
+use super::core::{
+    CompressedContainer, ContainerKind, SufficientStatistics, WireContainer,
+};
 use super::key::{canonicalize_into, FeatureKey, FxHasherBuilder};
-use super::sufficient::PARALLEL_MERGE_MIN_GROUPS;
 use crate::error::{Result, YocoError};
 use crate::linalg::Matrix;
 
@@ -180,102 +182,154 @@ impl WeightedCompressedData {
     }
 
     /// Merge `K` weighted shard compressions, filling the output in
-    /// parallel with up to `threads` OS threads — same two-phase scheme
-    /// as [`CompressedData::merge_many`](super::CompressedData::
-    /// merge_many): a sequential scan assigns output slots in
-    /// first-occurrence order (the sequential left-fold's group order),
-    /// then disjoint slot ranges are accumulated per thread in shard
-    /// order, so the result is byte-identical to folding
-    /// [`merge`](Self::merge) left to right.
+    /// parallel with up to `threads` OS threads. Delegates to the
+    /// generic engine in [`core`](super::core), which is byte-identical
+    /// to folding [`merge`](Self::merge) left to right (see the core
+    /// module docs for the fold-order guarantee).
     pub fn merge_many(
         shards: &[WeightedCompressedData],
         threads: usize,
     ) -> Result<WeightedCompressedData> {
-        let first = shards
-            .first()
-            .ok_or_else(|| YocoError::invalid("merge_many: no shards"))?;
+        super::core::merge_many(shards, threads)
+    }
+}
+
+/// One group's statistics detached from [`WeightedCompressedData`]
+/// storage, for the generic merge engine:
+/// `[ñ | w̃ | w̃₂ | ỹ'(w)(o) | ỹ''(w)(o) | ỹ'(w²)(o) | ỹ''(w²)(o) | m̃(p)]`
+/// in one contiguous allocation.
+pub struct WeightedSlot {
+    stats: Box<[f64]>,
+}
+
+impl CompressedContainer for WeightedCompressedData {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::Weighted
+    }
+
+    fn num_records(&self) -> usize {
+        self.num_groups()
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_n
+    }
+
+    fn memory_bytes(&self) -> usize {
+        8 * (self.features.len()
+            + 3 * self.counts.len()
+            + self.wy.len()
+            + self.wy2.len()
+            + self.w2y.len()
+            + self.w2y2.len())
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(
+            ContainerKind::Weighted,
+            &[self.p as u64, self.o as u64],
+        )
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        WireContainer {
+            kind: ContainerKind::Weighted,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p", self.p as u64),
+                ("o", self.o as u64),
+                ("total_n", self.total_n),
+            ],
+            sections: vec![
+                ("features", self.features.clone()),
+                ("counts", self.counts.clone()),
+                ("w", self.w.clone()),
+                ("w2", self.w2.clone()),
+                ("wy", self.wy.clone()),
+                ("wy2", self.wy2.clone()),
+                ("w2y", self.w2y.clone()),
+                ("w2y2", self.w2y2.clone()),
+                ("total_w", vec![self.total_w]),
+            ],
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for WeightedCompressedData {
+    type Slot = WeightedSlot;
+
+    fn num_slots(&self) -> usize {
+        self.num_groups()
+    }
+
+    fn key_words(&self, g: usize, out: &mut Vec<u64>) {
+        canonicalize_into(self.feature_row(g), out);
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        WeightedCompressedData::check_mergeable(self, other)
+    }
+
+    fn load_slot(&self, g: usize) -> WeightedSlot {
+        let o = self.o;
+        let mut stats = Vec::with_capacity(3 + 4 * o + self.p);
+        stats.push(self.counts[g]);
+        stats.push(self.w[g]);
+        stats.push(self.w2[g]);
+        stats.extend_from_slice(&self.wy[g * o..(g + 1) * o]);
+        stats.extend_from_slice(&self.wy2[g * o..(g + 1) * o]);
+        stats.extend_from_slice(&self.w2y[g * o..(g + 1) * o]);
+        stats.extend_from_slice(&self.w2y2[g * o..(g + 1) * o]);
+        stats.extend_from_slice(self.feature_row(g));
+        WeightedSlot { stats: stats.into_boxed_slice() }
+    }
+
+    fn fold_slot(&self, g: usize, acc: &mut WeightedSlot) {
+        let o = self.o;
+        acc.stats[0] += self.counts[g];
+        acc.stats[1] += self.w[g];
+        acc.stats[2] += self.w2[g];
+        for k in 0..o {
+            acc.stats[3 + k] += self.wy[g * o + k];
+            acc.stats[3 + o + k] += self.wy2[g * o + k];
+            acc.stats[3 + 2 * o + k] += self.w2y[g * o + k];
+            acc.stats[3 + 3 * o + k] += self.w2y2[g * o + k];
+        }
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<WeightedSlot>) -> Self {
+        let first = &shards[0];
         let (p, o) = (first.p, first.o);
-        for s in &shards[1..] {
-            first.check_mergeable(s)?;
+        let g_out = slots.len();
+        let mut features = Vec::with_capacity(g_out * p);
+        let mut counts = Vec::with_capacity(g_out);
+        let mut w = Vec::with_capacity(g_out);
+        let mut w2 = Vec::with_capacity(g_out);
+        let mut wy = Vec::with_capacity(g_out * o);
+        let mut wy2 = Vec::with_capacity(g_out * o);
+        let mut w2y = Vec::with_capacity(g_out * o);
+        let mut w2y2 = Vec::with_capacity(g_out * o);
+        for s in &slots {
+            counts.push(s.stats[0]);
+            w.push(s.stats[1]);
+            w2.push(s.stats[2]);
+            wy.extend_from_slice(&s.stats[3..3 + o]);
+            wy2.extend_from_slice(&s.stats[3 + o..3 + 2 * o]);
+            w2y.extend_from_slice(&s.stats[3 + 2 * o..3 + 3 * o]);
+            w2y2.extend_from_slice(&s.stats[3 + 3 * o..3 + 4 * o]);
+            features.extend_from_slice(&s.stats[3 + 4 * o..]);
         }
-
-        // Phase 1: slot assignment, first-occurrence order.
-        let total_groups: usize = shards.iter().map(|s| s.num_groups()).sum();
-        let mut index: HashMap<FeatureKey, u32, FxHasherBuilder> =
-            HashMap::with_capacity_and_hasher(total_groups * 2, FxHasherBuilder);
-        let mut scratch = Vec::new();
-        let mut slots: Vec<Vec<u32>> = Vec::with_capacity(shards.len());
-        let mut g_out: u32 = 0;
-        for s in shards {
-            let mut shard_slots = Vec::with_capacity(s.num_groups());
-            for g in 0..s.num_groups() {
-                canonicalize_into(s.feature_row(g), &mut scratch);
-                let slot = match index.get(scratch.as_slice()) {
-                    Some(&sl) => sl,
-                    None => {
-                        let sl = g_out;
-                        index.insert(FeatureKey::from_words(&scratch), sl);
-                        g_out += 1;
-                        sl
-                    }
-                };
-                shard_slots.push(slot);
-            }
-            slots.push(shard_slots);
-        }
-        let g_out = g_out as usize;
-
-        // Phase 2: fill the output arrays, one contiguous slot range per
-        // thread (disjoint &mut chunks — no locks, no atomics).
-        let mut features = vec![0.0; g_out * p];
-        let mut counts = vec![0.0; g_out];
-        let mut w = vec![0.0; g_out];
-        let mut w2 = vec![0.0; g_out];
-        let mut wy = vec![0.0; g_out * o];
-        let mut wy2 = vec![0.0; g_out * o];
-        let mut w2y = vec![0.0; g_out * o];
-        let mut w2y2 = vec![0.0; g_out * o];
-
-        let threads = threads.clamp(1, g_out.max(1));
-        if threads <= 1 || g_out < PARALLEL_MERGE_MIN_GROUPS {
-            fill_weighted_slot_range(
-                shards, &slots, p, o, 0, g_out, &mut features, &mut counts, &mut w,
-                &mut w2, &mut wy, &mut wy2, &mut w2y, &mut w2y2,
-            );
-        } else {
-            let per = g_out.div_ceil(threads);
-            let slots_ref = &slots;
-            std::thread::scope(|scope| {
-                let mut f_it = features.chunks_mut((per * p).max(1));
-                let mut c_it = counts.chunks_mut(per);
-                let mut w_it = w.chunks_mut(per);
-                let mut w2_it = w2.chunks_mut(per);
-                let mut wy_it = wy.chunks_mut((per * o).max(1));
-                let mut wy2_it = wy2.chunks_mut((per * o).max(1));
-                let mut w2y_it = w2y.chunks_mut((per * o).max(1));
-                let mut w2y2_it = w2y2.chunks_mut((per * o).max(1));
-                let mut lo = 0usize;
-                while lo < g_out {
-                    let hi = (lo + per).min(g_out);
-                    let f = f_it.next().unwrap_or(&mut []);
-                    let c = c_it.next().unwrap_or(&mut []);
-                    let wv = w_it.next().unwrap_or(&mut []);
-                    let w2v = w2_it.next().unwrap_or(&mut []);
-                    let a = wy_it.next().unwrap_or(&mut []);
-                    let b = wy2_it.next().unwrap_or(&mut []);
-                    let x = w2y_it.next().unwrap_or(&mut []);
-                    let z = w2y2_it.next().unwrap_or(&mut []);
-                    scope.spawn(move || {
-                        fill_weighted_slot_range(
-                            shards, slots_ref, p, o, lo, hi, f, c, wv, w2v, a, b, x, z,
-                        )
-                    });
-                    lo = hi;
-                }
-            });
-        }
-
-        Ok(WeightedCompressedData {
+        WeightedCompressedData {
             p,
             o,
             features,
@@ -288,61 +342,6 @@ impl WeightedCompressedData {
             w2y2,
             total_n: shards.iter().map(|s| s.total_n).sum(),
             total_w: shards.iter().map(|s| s.total_w).sum(),
-        })
-    }
-}
-
-/// Accumulate every shard's contribution to output slots `[lo, hi)`.
-/// First occurrence of a slot copies the shard's record; later
-/// occurrences add, visiting shards in order — the sequential
-/// left-fold's accumulation order exactly.
-#[allow(clippy::too_many_arguments)]
-fn fill_weighted_slot_range(
-    shards: &[WeightedCompressedData],
-    slots: &[Vec<u32>],
-    p: usize,
-    o: usize,
-    lo: usize,
-    hi: usize,
-    features: &mut [f64],
-    counts: &mut [f64],
-    w: &mut [f64],
-    w2: &mut [f64],
-    wy: &mut [f64],
-    wy2: &mut [f64],
-    w2y: &mut [f64],
-    w2y2: &mut [f64],
-) {
-    let mut seen = vec![false; hi - lo];
-    for (s, shard_slots) in shards.iter().zip(slots) {
-        for (g, &slot) in shard_slots.iter().enumerate() {
-            let slot = slot as usize;
-            if slot < lo || slot >= hi {
-                continue;
-            }
-            let j = slot - lo;
-            if seen[j] {
-                counts[j] += s.counts[g];
-                w[j] += s.w[g];
-                w2[j] += s.w2[g];
-                for k in 0..o {
-                    wy[j * o + k] += s.wy[g * o + k];
-                    wy2[j * o + k] += s.wy2[g * o + k];
-                    w2y[j * o + k] += s.w2y[g * o + k];
-                    w2y2[j * o + k] += s.w2y2[g * o + k];
-                }
-            } else {
-                seen[j] = true;
-                features[j * p..(j + 1) * p].copy_from_slice(s.feature_row(g));
-                counts[j] = s.counts[g];
-                w[j] = s.w[g];
-                w2[j] = s.w2[g];
-                wy[j * o..(j + 1) * o].copy_from_slice(&s.wy[g * o..(g + 1) * o]);
-                wy2[j * o..(j + 1) * o].copy_from_slice(&s.wy2[g * o..(g + 1) * o]);
-                w2y[j * o..(j + 1) * o].copy_from_slice(&s.w2y[g * o..(g + 1) * o]);
-                w2y2[j * o..(j + 1) * o]
-                    .copy_from_slice(&s.w2y2[g * o..(g + 1) * o]);
-            }
         }
     }
 }

@@ -4,6 +4,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::compress::core::CompressedContainer;
 use crate::compress::CompressedData;
 use crate::data::Batch;
 use crate::error::{Result, YocoError};
@@ -23,7 +24,18 @@ pub struct CacheKey {
 
 struct DatasetEntry {
     batch: Batch,
-    compressed: HashMap<CacheKey, Arc<CompressedData>>,
+    /// Any container family member, behind the shared trait — the cache
+    /// no longer cares which concrete compression a strategy produced.
+    compressed: HashMap<CacheKey, Arc<dyn CompressedContainer>>,
+}
+
+/// Downcast a cached trait object to the concrete container a typed
+/// read expects.
+fn downcast<T: CompressedContainer>(c: Arc<dyn CompressedContainer>) -> Result<Arc<T>> {
+    let kind = c.kind();
+    c.as_any_arc().downcast::<T>().map_err(|_| {
+        YocoError::invalid(format!("cached container is {}, not the requested type", kind.name()))
+    })
 }
 
 /// Thread-safe dataset registry + compressed-data cache.
@@ -105,7 +117,8 @@ impl YocoStore {
 
     /// [`YocoStore::compressed`] with a request trace: the pipeline run
     /// (if the cache misses) records its feed/worker/merge spans into
-    /// `trace`.
+    /// `trace`. A typed read over
+    /// [`compressed_container_traced`](Self::compressed_container_traced).
     pub fn compressed_traced(
         &self,
         dataset: &str,
@@ -113,6 +126,21 @@ impl YocoStore {
         strategy: Strategy,
         trace: &Trace,
     ) -> Result<(Arc<CompressedData>, bool)> {
+        let (c, hit) = self.compressed_container_traced(dataset, features, strategy, trace)?;
+        Ok((downcast::<CompressedData>(c)?, hit))
+    }
+
+    /// Get-or-compute the compressed container for (dataset, features,
+    /// strategy) as a trait object — the container-agnostic path the
+    /// serving tier exports over the wire. Returns `(container,
+    /// cache_hit)`.
+    pub fn compressed_container_traced(
+        &self,
+        dataset: &str,
+        features: &[String],
+        strategy: Strategy,
+        trace: &Trace,
+    ) -> Result<(Arc<dyn CompressedContainer>, bool)> {
         let key = CacheKey { strategy: strategy.name(), features: features.to_vec() };
         // Fast path under the lock.
         {
@@ -141,7 +169,7 @@ impl YocoStore {
         let pipe = Pipeline::new(self.pipeline_cfg.clone(), mode)
             .with_metrics(self.pipeline_metrics.clone())
             .with_trace(trace.clone());
-        let data = Arc::new(pipe.run_batch(&projected)?.into_suffstats()?);
+        let data: Arc<dyn CompressedContainer> = pipe.run_batch(&projected)?.into_container();
         let mut g = self.datasets.lock().unwrap();
         let e = g
             .get_mut(dataset)

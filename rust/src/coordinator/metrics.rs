@@ -9,13 +9,28 @@
 //! old field performed, so existing output is unchanged). Engine
 //! dispatch latency (including each retry attempt) lands in
 //! `coordinator_engine_dispatch_us`.
+//!
+//! Request latency additionally carries a per-dataset label dimension:
+//! each served request also records into
+//! `coordinator_request_us{dataset="…"}`, minted lazily per dataset and
+//! capped at [`MAX_DATASET_LABELS`] distinct labels (later datasets
+//! collapse into `dataset="other"`), so a client registering many
+//! datasets cannot blow up series cardinality. Labeled series ride the
+//! ordinary registry, so both the JSON `series` view and the Prometheus
+//! exposition include them with no extra plumbing.
 
 use crate::obs::{Counter, Histogram, MetricsRegistry};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Maximum distinct `dataset` label values before later datasets share
+/// the `other` label.
+pub const MAX_DATASET_LABELS: usize = 32;
 
 /// Request counters + latency histograms.
 pub struct CoordinatorMetrics {
+    registry: Arc<MetricsRegistry>,
     requests: Arc<Counter>,
     errors: Arc<Counter>,
     native_fits: Arc<Counter>,
@@ -23,19 +38,24 @@ pub struct CoordinatorMetrics {
     runtime_retries: Arc<Counter>,
     runtime_fallbacks: Arc<Counter>,
     request_us: Arc<Histogram>,
+    /// dataset → labeled request histogram, resolved once per dataset
+    /// (cold path only; the handles themselves are lock-free).
+    dataset_request_us: Mutex<HashMap<String, Arc<Histogram>>>,
     dispatch_us: Arc<Histogram>,
 }
 
 impl Default for CoordinatorMetrics {
     fn default() -> Self {
-        CoordinatorMetrics::with_registry(&MetricsRegistry::default())
+        CoordinatorMetrics::with_registry(&MetricsRegistry::shared())
     }
 }
 
 impl CoordinatorMetrics {
     /// Resolve the coordinator's handles on `registry` (names
-    /// `coordinator_*`). Called once at service construction.
-    pub fn with_registry(registry: &MetricsRegistry) -> Self {
+    /// `coordinator_*`). Called once at service construction; the
+    /// registry handle is kept to mint per-dataset labeled histograms
+    /// lazily.
+    pub fn with_registry(registry: &Arc<MetricsRegistry>) -> Self {
         CoordinatorMetrics {
             requests: registry.counter("coordinator_requests_total"),
             errors: registry.counter("coordinator_errors_total"),
@@ -44,18 +64,46 @@ impl CoordinatorMetrics {
             runtime_retries: registry.counter("coordinator_runtime_retries_total"),
             runtime_fallbacks: registry.counter("coordinator_runtime_fallbacks_total"),
             request_us: registry.histogram("coordinator_request_us"),
+            dataset_request_us: Mutex::new(HashMap::new()),
             dispatch_us: registry.histogram("coordinator_engine_dispatch_us"),
+            registry: registry.clone(),
         }
     }
 
-    /// Record one served request.
-    pub fn record(&self, engine: &str, elapsed_us: u128) {
+    /// Record one served request against its dataset label.
+    pub fn record(&self, dataset: &str, engine: &str, elapsed_us: u128) {
+        let us = elapsed_us.min(u128::from(u64::MAX)) as u64;
         self.requests.inc();
-        self.request_us.record(elapsed_us.min(u128::from(u64::MAX)) as u64);
+        self.request_us.record(us);
+        self.dataset_histogram(dataset).record(us);
         match engine {
             "pjrt" => self.pjrt_fits.inc(),
             _ => self.native_fits.inc(),
         };
+    }
+
+    /// Get-or-mint `coordinator_request_us{dataset="…"}` for one
+    /// dataset, collapsing into the `other` label past the cardinality
+    /// cap.
+    fn dataset_histogram(&self, dataset: &str) -> Arc<Histogram> {
+        let mut map = self.dataset_request_us.lock().unwrap();
+        if let Some(h) = map.get(dataset) {
+            return h.clone();
+        }
+        if map.len() >= MAX_DATASET_LABELS {
+            return self.registry.histogram("coordinator_request_us{dataset=\"other\"}");
+        }
+        // Keep the label a valid Prometheus value: no quotes, escapes,
+        // or newlines survive into the series name.
+        let safe: String = dataset
+            .chars()
+            .map(|c| if c == '"' || c == '\\' || c == '\n' { '_' } else { c })
+            .collect();
+        let h = self
+            .registry
+            .histogram(&format!("coordinator_request_us{{dataset=\"{safe}\"}}"));
+        map.insert(dataset.to_string(), h.clone());
+        h
     }
 
     /// Record one failed request.
@@ -140,8 +188,8 @@ mod tests {
     #[test]
     fn counters() {
         let m = CoordinatorMetrics::default();
-        m.record("native", 100);
-        m.record("pjrt", 300);
+        m.record("xp", "native", 100);
+        m.record("xp", "pjrt", 300);
         m.record_error();
         m.add_runtime_retry();
         m.add_runtime_retry();
@@ -160,7 +208,7 @@ mod tests {
     fn latency_percentiles_come_from_the_histogram() {
         let m = CoordinatorMetrics::default();
         for us in [100u128, 100, 100, 100, 100, 100, 100, 100, 100, 5000] {
-            m.record("native", us);
+            m.record("xp", "native", us);
         }
         let s = m.snapshot();
         // p50 sits in 100's bucket (≤ 12.5% over), p99/max catch the tail.
@@ -174,11 +222,37 @@ mod tests {
     fn registers_on_a_shared_registry() {
         let reg = MetricsRegistry::shared();
         let m = CoordinatorMetrics::with_registry(&reg);
-        m.record("native", 42);
+        m.record("xp", "native", 42);
         m.record_dispatch(Duration::from_micros(7));
         let s = reg.snapshot();
         assert_eq!(s.counter("coordinator_requests_total"), Some(1));
         assert_eq!(s.histogram("coordinator_request_us").unwrap().count, 1);
         assert_eq!(s.histogram("coordinator_engine_dispatch_us").unwrap().count, 1);
+    }
+
+    #[test]
+    fn per_dataset_labels_with_capped_cardinality() {
+        let reg = MetricsRegistry::shared();
+        let m = CoordinatorMetrics::with_registry(&reg);
+        m.record("xp", "native", 100);
+        m.record("xp", "native", 200);
+        m.record("panel", "pjrt", 300);
+        let s = reg.snapshot();
+        assert_eq!(s.histogram("coordinator_request_us").unwrap().count, 3);
+        assert_eq!(s.histogram("coordinator_request_us{dataset=\"xp\"}").unwrap().count, 2);
+        assert_eq!(s.histogram("coordinator_request_us{dataset=\"panel\"}").unwrap().count, 1);
+        // Label values are sanitized before they reach a series name.
+        m.record("we\"ird\\", "native", 10);
+        assert!(reg
+            .snapshot()
+            .histogram("coordinator_request_us{dataset=\"we_ird_\"}")
+            .is_some());
+        // Datasets past the cap collapse into `other`.
+        for i in 0..(MAX_DATASET_LABELS + 5) {
+            m.record(&format!("d{i}"), "native", 10);
+        }
+        let s = reg.snapshot();
+        let other = s.histogram("coordinator_request_us{dataset=\"other\"}").unwrap();
+        assert_eq!(other.count as usize, 8, "3 labels used before the sweep");
     }
 }

@@ -19,7 +19,7 @@ mod request;
 mod service;
 
 pub use cache::{CacheKey, YocoStore};
-pub use metrics::{CoordinatorMetrics, CoordinatorMetricsSnapshot};
+pub use metrics::{CoordinatorMetrics, CoordinatorMetricsSnapshot, MAX_DATASET_LABELS};
 pub use planner::{plan, EnginePref, Plan, PlannedEngine, Strategy};
 pub use request::{AnalysisRequest, AnalysisResponse, EstimatorKind};
 pub use service::Coordinator;

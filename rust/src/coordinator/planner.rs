@@ -1,5 +1,6 @@
 //! Strategy + engine planning.
 
+use crate::compress::core::{ContainerKind, ContainerSpec};
 use crate::data::Schema;
 use crate::error::{Result, YocoError};
 use crate::estimator::CovarianceKind;
@@ -28,12 +29,31 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// Human-readable name (used in responses/metrics).
+    /// Human-readable name (used in responses/metrics and cache keys —
+    /// finer-grained than the container kind, since within-cluster is a
+    /// cluster-tagged variant of the same container).
     pub fn name(self) -> &'static str {
         match self {
             Strategy::SuffStats => "suffstats",
             Strategy::WithinCluster => "within_cluster",
         }
+    }
+
+    /// The container family member this strategy produces. Both
+    /// coordinator strategies today resolve to the §4 sufficient-
+    /// statistics container (within-cluster is the §5.3.1 cluster-tagged
+    /// variant); strategy → container → estimator dispatch all reads
+    /// from the single [`core`](crate::compress::core) registry.
+    pub fn container_kind(self) -> ContainerKind {
+        match self {
+            Strategy::SuffStats | Strategy::WithinCluster => ContainerKind::SuffStats,
+        }
+    }
+
+    /// The registry row for the produced container (name, keyedness,
+    /// estimator family).
+    pub fn container_spec(self) -> &'static ContainerSpec {
+        self.container_kind().spec()
     }
 }
 
@@ -164,6 +184,17 @@ mod tests {
         // Schema without cluster column:
         let s2 = Schema::simple(2, 1);
         assert!(plan(&req, &s2, false, 100).is_err());
+    }
+
+    #[test]
+    fn strategies_resolve_containers_through_the_registry() {
+        for s in [Strategy::SuffStats, Strategy::WithinCluster] {
+            let spec = s.container_spec();
+            assert_eq!(spec.kind, ContainerKind::SuffStats);
+            assert_eq!(spec.name, "suffstats");
+            assert_eq!(spec.estimator, crate::estimator::estimator_for(s.container_kind()));
+            assert!(spec.keyed);
+        }
     }
 
     #[test]

@@ -333,7 +333,7 @@ impl Coordinator {
             };
 
         let elapsed_us = start.elapsed().as_micros();
-        self.metrics.record(engine_used, elapsed_us);
+        self.metrics.record(&req.dataset, engine_used, elapsed_us);
         Ok(AnalysisResponse {
             beta: fit_beta,
             se: fit_se,

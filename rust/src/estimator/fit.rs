@@ -1,6 +1,15 @@
 //! Fit results and covariance-estimator kinds.
 
+use crate::compress::core::ContainerKind;
 use crate::linalg::Matrix;
+
+/// Resolve which estimator family serves a compressed container, read
+/// from the single [`core`](crate::compress::core) registry — the
+/// coordinator's strategy → container → estimator chain has one source
+/// of truth instead of per-layer matches on concrete types.
+pub fn estimator_for(kind: ContainerKind) -> &'static str {
+    kind.spec().estimator
+}
 
 /// Which structure of Ω the sandwich covariance assumes (§5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -29,7 +29,7 @@ mod wls;
 
 pub use balanced_panel::{fit_balanced_panel, PanelModel};
 pub use cluster::{fit_between_cluster, fit_cluster_static};
-pub use fit::{cr1_factor, CovarianceKind, Fit, WeightKind};
+pub use fit::{cr1_factor, estimator_for, CovarianceKind, Fit, WeightKind};
 pub use groups::fit_group_means;
 pub use kernels::gram_xtwx_xtwy;
 pub use logistic::{
@@ -41,4 +41,7 @@ pub use ols::fit_ols;
 pub use sgd::{fit_sgd, fit_sgd_compressed, SgdOptions};
 pub use ttest::{ttest, TTestResult};
 pub use weights::fit_weighted_suffstats;
-pub use wls::{fit_all_outcomes, fit_wls_suffstats, fit_wls_suffstats_observed};
+pub use wls::{
+    fit_all_outcomes, fit_all_outcomes_with_threads, fit_wls_suffstats,
+    fit_wls_suffstats_observed,
+};

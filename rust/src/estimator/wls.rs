@@ -145,15 +145,47 @@ fn fit_wls_impl(
     })
 }
 
-/// YOCO in action: fit every outcome from the same compressed dataset,
-/// reusing the factorized bread (one Cholesky for o outcomes).
+/// YOCO in action: fit every outcome from the same compressed dataset.
+/// Outcomes are independent fits over disjoint output slots, so they
+/// run in parallel on up to `available_parallelism` (capped at 8, the
+/// pipeline's default worker count) scoped threads — and since no
+/// floating-point state is shared across outcomes, the results are
+/// bit-identical to the sequential loop.
 pub fn fit_all_outcomes(
     data: &CompressedData,
     kind: CovarianceKind,
 ) -> Result<Vec<Fit>> {
-    (0..data.num_outcomes())
-        .map(|k| fit_wls_suffstats(data, k, kind))
-        .collect()
+    let threads = std::thread::available_parallelism().map_or(4, |n| n.get().min(8));
+    fit_all_outcomes_with_threads(data, kind, threads)
+}
+
+/// [`fit_all_outcomes`] with an explicit thread count (1 = the old
+/// sequential path; results are bit-identical for any count).
+pub fn fit_all_outcomes_with_threads(
+    data: &CompressedData,
+    kind: CovarianceKind,
+    threads: usize,
+) -> Result<Vec<Fit>> {
+    let o = data.num_outcomes();
+    let threads = threads.clamp(1, o.max(1));
+    if threads <= 1 || o <= 1 {
+        return (0..o).map(|k| fit_wls_suffstats(data, k, kind)).collect();
+    }
+    // One contiguous outcome range per thread (disjoint &mut chunks).
+    let mut out: Vec<Option<Result<Fit>>> = Vec::with_capacity(o);
+    out.resize_with(o, || None);
+    let per = o.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (i, chunk) in out.chunks_mut(per).enumerate() {
+            let lo = i * per;
+            scope.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(fit_wls_suffstats(data, lo + j, kind));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("every outcome fitted")).collect()
 }
 
 #[cfg(test)]
@@ -258,6 +290,38 @@ mod tests {
         // Second outcome is affine in the first: slopes double.
         assert!((fits[1].beta[1] - 2.0 * fits[0].beta[1]).abs() < 1e-9);
         assert!((fits[1].beta[0] - (2.0 * fits[0].beta[0] + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_outcome_fits_bit_identical_to_sequential() {
+        // More outcomes than threads so chunk boundaries are exercised.
+        let (m, y) = make_data(400);
+        let o = 7;
+        let mut c = SuffStatsCompressor::new(m.cols(), o);
+        for i in 0..m.rows() {
+            let outs: Vec<f64> =
+                (0..o).map(|k| y[i] * (k as f64 + 1.0) + noise(i * o + k)).collect();
+            c.push(m.row(i), &outs);
+        }
+        let d = c.finish();
+        for kind in [CovarianceKind::Homoskedastic, CovarianceKind::Heteroskedastic] {
+            let seq = fit_all_outcomes_with_threads(&d, kind, 1).unwrap();
+            for threads in [2, 3, 8] {
+                let par = fit_all_outcomes_with_threads(&d, kind, threads).unwrap();
+                assert_eq!(par.len(), seq.len());
+                for (a, b) in par.iter().zip(&seq) {
+                    let bits = |v: &[f64]| -> Vec<u64> {
+                        v.iter().map(|x| x.to_bits()).collect()
+                    };
+                    assert_eq!(bits(&a.beta), bits(&b.beta));
+                    assert_eq!(bits(a.cov.as_slice()), bits(b.cov.as_slice()));
+                    assert_eq!(
+                        a.sigma2.map(f64::to_bits),
+                        b.sigma2.map(f64::to_bits)
+                    );
+                }
+            }
+        }
     }
 
     #[test]

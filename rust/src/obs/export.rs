@@ -5,13 +5,28 @@
 //! Histograms render as Prometheus summaries (`{quantile="…"}` series
 //! plus `_sum`/`_count`, and a non-standard `_max` gauge); names are
 //! emitted exactly as registered, already namespaced per layer
-//! (`coordinator_*`, `pipeline_*`, `server_*`, `estimator_*`).
+//! (`coordinator_*`, `pipeline_*`, `server_*`, `estimator_*`). A
+//! registered histogram name may carry a label set (`name{k="v"}`, e.g.
+//! the coordinator's per-dataset request series): the quantile label is
+//! spliced *inside* the existing braces, `_sum`/`_count`/`_max` keep
+//! the labels after the suffix, and one `# TYPE` line per base name
+//! covers every labeled sibling.
 
 use super::histogram::HistogramSnapshot;
 use super::registry::RegistrySnapshot;
 use super::span::TraceRecord;
 use crate::util::json::Json;
+use std::collections::BTreeSet;
 use std::fmt::Write as _;
+
+/// Split a registered series name into `(base, labels)` where `labels`
+/// is the brace-free label body (`""` when unlabeled).
+fn split_labels(name: &str) -> (&str, &str) {
+    match (name.find('{'), name.ends_with('}')) {
+        (Some(i), true) => (&name[..i], &name[i + 1..name.len() - 1]),
+        _ => (name, ""),
+    }
+}
 
 /// Prometheus text exposition of a registry snapshot.
 pub fn prometheus_text(snap: &RegistrySnapshot) -> String {
@@ -22,14 +37,23 @@ pub fn prometheus_text(snap: &RegistrySnapshot) -> String {
     for (name, v) in &snap.gauges {
         let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
     }
+    let mut typed: BTreeSet<&str> = BTreeSet::new();
     for (name, h) in &snap.histograms {
-        let _ = writeln!(out, "# TYPE {name} summary");
-        for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
-            let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+        let (base, labels) = split_labels(name);
+        if typed.insert(base) {
+            let _ = writeln!(out, "# TYPE {base} summary");
         }
-        let _ = writeln!(out, "{name}_sum {}", h.sum);
-        let _ = writeln!(out, "{name}_count {}", h.count);
-        let _ = writeln!(out, "{name}_max {}", h.max);
+        for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+            if labels.is_empty() {
+                let _ = writeln!(out, "{base}{{quantile=\"{q}\"}} {v}");
+            } else {
+                let _ = writeln!(out, "{base}{{{labels},quantile=\"{q}\"}} {v}");
+            }
+        }
+        let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{base}_sum{brace} {}", h.sum);
+        let _ = writeln!(out, "{base}_count{brace} {}", h.count);
+        let _ = writeln!(out, "{base}_max{brace} {}", h.max);
     }
     out
 }
@@ -135,6 +159,23 @@ mod tests {
         assert!(text.contains("coordinator_request_us{quantile=\"0.5\"}"));
         assert!(text.contains("coordinator_request_us_sum 600"));
         assert!(text.contains("coordinator_request_us_count 3"));
+    }
+
+    #[test]
+    fn labeled_histograms_splice_quantiles_into_the_label_set() {
+        let r = MetricsRegistry::default();
+        r.histogram("coordinator_request_us").record(100);
+        let h = r.histogram("coordinator_request_us{dataset=\"xp\"}");
+        h.record(100);
+        let text = prometheus_text(&r.snapshot());
+        assert!(
+            text.contains("coordinator_request_us{dataset=\"xp\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(text.contains("coordinator_request_us_sum{dataset=\"xp\"} 100"), "{text}");
+        assert!(text.contains("coordinator_request_us_count{dataset=\"xp\"} 1"), "{text}");
+        // Exactly one TYPE line covers the base and its labeled siblings.
+        assert_eq!(text.matches("# TYPE coordinator_request_us summary").count(), 1, "{text}");
     }
 
     #[test]

@@ -5,15 +5,17 @@
 //! quantile error is bounded by 1/8 = 12.5% while the whole `u64` range
 //! fits in [`BUCKET_COUNT`] = 496 fixed slots. Recording is four
 //! `Relaxed` atomic RMWs (count, sum, max, bucket) with no allocation
-//! and no locking; when sampling is disabled ([`MetricsRegistry::
-//! set_sampling`](super::MetricsRegistry::set_sampling)) the record path
-//! is a single `Relaxed` load followed by an early return.
+//! and no locking; the record path first consults the registry's
+//! deterministic [`SamplingGate`] ([`MetricsRegistry::
+//! set_sampling_rate`](super::MetricsRegistry::set_sampling_rate)) —
+//! a single `Relaxed` load plus early return when sampling is off.
 //!
 //! Snapshots read the buckets without stopping writers, so a snapshot
 //! taken mid-record is approximate (bounded by in-flight records); once
 //! writers are quiescent it is exact.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use super::registry::SamplingGate;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -54,7 +56,7 @@ fn bucket_upper(i: usize) -> u64 {
 /// Obtained from [`MetricsRegistry::histogram`](super::MetricsRegistry::
 /// histogram); all handles to the same name share one instance.
 pub struct Histogram {
-    enabled: Arc<AtomicBool>,
+    gate: Arc<SamplingGate>,
     count: AtomicU64,
     sum: AtomicU64,
     max: AtomicU64,
@@ -62,10 +64,10 @@ pub struct Histogram {
 }
 
 impl Histogram {
-    /// New histogram gated on the shared sampling flag.
-    pub(crate) fn new(enabled: Arc<AtomicBool>) -> Histogram {
+    /// New histogram gated on the given sampling gate.
+    pub(crate) fn new(gate: Arc<SamplingGate>) -> Histogram {
         Histogram {
-            enabled,
+            gate,
             count: AtomicU64::new(0),
             sum: AtomicU64::new(0),
             max: AtomicU64::new(0),
@@ -73,11 +75,11 @@ impl Histogram {
         }
     }
 
-    /// Record one value (microseconds by convention). No-op when
-    /// sampling is disabled.
+    /// Record one value (microseconds by convention). Candidates the
+    /// sampling gate rejects are dropped deterministically.
     #[inline]
     pub fn record(&self, v: u64) {
-        if !self.enabled.load(Relaxed) {
+        if !self.gate.admit() {
             return;
         }
         self.count.fetch_add(1, Relaxed);
@@ -158,10 +160,9 @@ impl HistogramSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicBool;
 
     fn hist() -> Histogram {
-        Histogram::new(Arc::new(AtomicBool::new(true)))
+        Histogram::new(SamplingGate::always())
     }
 
     #[test]
@@ -221,13 +222,18 @@ mod tests {
 
     #[test]
     fn disabled_sampling_is_a_no_op() {
-        let flag = Arc::new(AtomicBool::new(false));
-        let h = Histogram::new(flag.clone());
+        let h = Histogram::new(SamplingGate::with_rate(0.0));
         h.record(42);
         assert_eq!(h.snapshot(), HistogramSnapshot::default());
-        flag.store(true, Relaxed);
-        h.record(42);
-        assert_eq!(h.snapshot().count, 1);
+    }
+
+    #[test]
+    fn fractional_rate_admits_every_nth_record() {
+        let h = Histogram::new(SamplingGate::with_rate(0.25));
+        for v in 0..100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.snapshot().count, 25);
     }
 
     #[test]

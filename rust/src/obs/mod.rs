@@ -17,10 +17,12 @@
 //! - **Handles, not lookups**: layers resolve `Arc<Counter>` /
 //!   `Arc<Histogram>` once at construction; hot paths touch only
 //!   `Relaxed` atomics.
-//! - **No-op when off**: [`MetricsRegistry::set_sampling`] gates every
-//!   histogram record and trace start behind a single `Relaxed` load.
-//!   Counters stay exact regardless (the chaos suite pins them against
-//!   injected fault counts).
+//! - **Deterministic sampling**: [`MetricsRegistry::set_sampling_rate`]
+//!   admits a 0.0–1.0 fraction of histogram records and trace starts by
+//!   error diffusion (no RNG), so sampled counts are reproducible; the
+//!   endpoint rates cost a single `Relaxed` load. Counters stay exact
+//!   regardless of the rate (the chaos suite pins them against injected
+//!   fault counts).
 
 mod export;
 mod histogram;
@@ -29,7 +31,7 @@ mod span;
 
 pub use export::{prometheus_text, registry_json, traces_json};
 pub use histogram::{Histogram, HistogramSnapshot, BUCKET_COUNT};
-pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use registry::{Counter, Gauge, MetricsRegistry, RegistrySnapshot, SamplingGate};
 pub use span::{Span, SpanGuard, Trace, TraceRecord, Tracer};
 
 use std::sync::Arc;
@@ -47,11 +49,11 @@ pub struct Obs {
 
 impl Obs {
     /// Fresh registry + tracer (ring of [`TRACE_RING_CAPACITY`]),
-    /// sampling enabled.
+    /// sampling rate 1.0.
     pub fn new() -> Obs {
         let registry = MetricsRegistry::shared();
         let tracer =
-            Arc::new(Tracer::with_sampling_flag(TRACE_RING_CAPACITY, registry.sampling_flag()));
+            Arc::new(Tracer::with_sampling_gate(TRACE_RING_CAPACITY, registry.sampling_gate()));
         Obs { registry, tracer }
     }
 
@@ -68,6 +70,17 @@ impl Obs {
     /// Enable/disable latency sampling (histograms and traces at once).
     pub fn set_sampling(&self, on: bool) {
         self.registry.set_sampling(on);
+    }
+
+    /// Set the deterministic 0.0–1.0 sampling rate for histogram
+    /// records and trace starts (counters stay exact).
+    pub fn set_sampling_rate(&self, rate: f64) {
+        self.registry.set_sampling_rate(rate);
+    }
+
+    /// The current sampling rate in [0.0, 1.0].
+    pub fn sampling_rate(&self) -> f64 {
+        self.registry.sampling_rate()
     }
 }
 
@@ -95,5 +108,21 @@ mod tests {
         drop(obs.tracer().start("t"));
         assert_eq!(h.snapshot().count, 1);
         assert_eq!(obs.tracer().recent(10).len(), 1);
+    }
+
+    #[test]
+    fn obs_rate_applies_to_histograms_and_traces() {
+        let obs = Obs::new();
+        obs.set_sampling_rate(0.5);
+        assert!((obs.sampling_rate() - 0.5).abs() < 1e-12);
+        let h = obs.registry().histogram("y_us");
+        for _ in 0..10 {
+            h.record(1);
+        }
+        assert_eq!(h.snapshot().count, 5);
+        for i in 0..10 {
+            drop(obs.tracer().start(&format!("t{i}")));
+        }
+        assert_eq!(obs.tracer().recent(64).len(), 5);
     }
 }

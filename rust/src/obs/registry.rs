@@ -10,13 +10,83 @@
 //!
 //! Counters and gauges are always-on (they carry correctness-relevant
 //! totals like `pipeline_worker_panics_total` that the chaos suite pins
-//! exactly); latency **histograms** honor the sampling flag and
-//! degenerate to a single `Relaxed` load when disabled.
+//! exactly); latency **histograms** and trace starts honor the
+//! registry's deterministic 0.0–1.0 sampling rate
+//! ([`MetricsRegistry::set_sampling_rate`]) through a shared
+//! [`SamplingGate`], and degenerate to a single `Relaxed` load at the
+//! endpoint rates 0.0 and 1.0.
 
 use super::histogram::{Histogram, HistogramSnapshot};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, RwLock};
+
+/// log2 of the fixed-point scale sampling rates are stored at.
+const RATE_SHIFT: u32 = 32;
+/// Fixed-point representation of rate 1.0 (2³²).
+const RATE_ONE: u64 = 1 << RATE_SHIFT;
+
+/// Rate in [0.0, 1.0] → fixed-point numerator out of 2³². NaN means
+/// "no opinion" and maps to full sampling.
+fn rate_to_fixed(rate: f64) -> u64 {
+    if rate.is_nan() {
+        return RATE_ONE;
+    }
+    (rate.clamp(0.0, 1.0) * RATE_ONE as f64).round() as u64
+}
+
+/// Fixed-point numerator → rate in [0.0, 1.0].
+fn fixed_to_rate(num: u64) -> f64 {
+    num.min(RATE_ONE) as f64 / RATE_ONE as f64
+}
+
+/// Deterministic sampling gate: the registry-wide admission rate plus a
+/// **private** error-diffusion accumulator, so each consumer's
+/// admissions depend only on its own event sequence. The endpoint rates
+/// are branch-only fast paths — 1.0 admits everything (exact-count
+/// tests stay exact) and 0.0 admits nothing; fractional rates add the
+/// fixed-point rate per candidate and admit exactly when the integer
+/// part advances, so `k` consecutive candidates admit `⌊k·rate⌋` or
+/// `⌈k·rate⌉` with no RNG anywhere.
+pub struct SamplingGate {
+    rate: Arc<AtomicU64>,
+    acc: AtomicU64,
+}
+
+impl SamplingGate {
+    fn new(rate: Arc<AtomicU64>) -> SamplingGate {
+        SamplingGate { rate, acc: AtomicU64::new(0) }
+    }
+
+    /// Always-admitting gate (rate 1.0) for standalone consumers.
+    pub fn always() -> Arc<SamplingGate> {
+        SamplingGate::with_rate(1.0)
+    }
+
+    /// Gate on a private fixed rate, detached from any registry.
+    pub fn with_rate(rate: f64) -> Arc<SamplingGate> {
+        Arc::new(SamplingGate::new(Arc::new(AtomicU64::new(rate_to_fixed(rate)))))
+    }
+
+    /// Decide one event (see the type docs for the guarantees).
+    #[inline]
+    pub fn admit(&self) -> bool {
+        let num = self.rate.load(Relaxed);
+        if num >= RATE_ONE {
+            return true;
+        }
+        if num == 0 {
+            return false;
+        }
+        let old = self.acc.fetch_add(num, Relaxed);
+        (old.wrapping_add(num) >> RATE_SHIFT) != (old >> RATE_SHIFT)
+    }
+
+    /// The current admission rate in [0.0, 1.0].
+    pub fn rate(&self) -> f64 {
+        fixed_to_rate(self.rate.load(Relaxed))
+    }
+}
 
 /// Monotone counter (`Relaxed` adds).
 #[derive(Default)]
@@ -82,7 +152,7 @@ impl Gauge {
 /// Named metric store. Construction is cheap; clone the `Arc` to share
 /// one registry across layers.
 pub struct MetricsRegistry {
-    sampling: Arc<AtomicBool>,
+    rate: Arc<AtomicU64>,
     counters: RwLock<BTreeMap<String, Arc<Counter>>>,
     gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
     histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
@@ -91,7 +161,7 @@ pub struct MetricsRegistry {
 impl Default for MetricsRegistry {
     fn default() -> Self {
         MetricsRegistry {
-            sampling: Arc::new(AtomicBool::new(true)),
+            rate: Arc::new(AtomicU64::new(RATE_ONE)),
             counters: RwLock::new(BTreeMap::new()),
             gauges: RwLock::new(BTreeMap::new()),
             histograms: RwLock::new(BTreeMap::new()),
@@ -100,25 +170,42 @@ impl Default for MetricsRegistry {
 }
 
 impl MetricsRegistry {
-    /// A fresh registry behind an `Arc`, sampling enabled.
+    /// A fresh registry behind an `Arc`, sampling rate 1.0.
     pub fn shared() -> Arc<MetricsRegistry> {
         Arc::new(MetricsRegistry::default())
     }
 
-    /// The shared sampling flag (handed to histograms and the tracer).
-    pub(crate) fn sampling_flag(&self) -> Arc<AtomicBool> {
-        self.sampling.clone()
+    /// A fresh gate on the registry-wide sampling rate (handed to
+    /// histograms and the tracer; each gate diffuses rounding error
+    /// privately).
+    pub(crate) fn sampling_gate(&self) -> Arc<SamplingGate> {
+        Arc::new(SamplingGate::new(self.rate.clone()))
     }
 
-    /// Enable/disable latency sampling (histograms + traces). Counters
+    /// Enable/disable latency sampling (histograms + traces):
+    /// compatibility alias for `set_sampling_rate(1.0 / 0.0)`. Counters
     /// and gauges are unaffected.
     pub fn set_sampling(&self, on: bool) {
-        self.sampling.store(on, Relaxed);
+        self.set_sampling_rate(if on { 1.0 } else { 0.0 });
     }
 
-    /// Whether latency sampling is currently enabled.
+    /// Set the deterministic sampling rate in [0.0, 1.0] applied to
+    /// every histogram record and trace start (counters and gauges stay
+    /// exact). 1.0 — the default — admits every event; 0.0 admits none;
+    /// fractional rates admit by error diffusion, so sampled counts are
+    /// reproducible, not random. Out-of-range values are clamped.
+    pub fn set_sampling_rate(&self, rate: f64) {
+        self.rate.store(rate_to_fixed(rate), Relaxed);
+    }
+
+    /// The current sampling rate in [0.0, 1.0].
+    pub fn sampling_rate(&self) -> f64 {
+        fixed_to_rate(self.rate.load(Relaxed))
+    }
+
+    /// Whether latency sampling admits any events (rate > 0).
     pub fn sampling_enabled(&self) -> bool {
-        self.sampling.load(Relaxed)
+        self.rate.load(Relaxed) > 0
     }
 
     /// Get-or-register the counter `name`.
@@ -147,8 +234,8 @@ impl MetricsRegistry {
             .clone()
     }
 
-    /// Get-or-register the histogram `name` (gated on the sampling
-    /// flag).
+    /// Get-or-register the histogram `name` (gated on the registry's
+    /// sampling rate).
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         if let Some(h) = self.histograms.read().unwrap().get(name) {
             return h.clone();
@@ -157,7 +244,7 @@ impl MetricsRegistry {
             .write()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(|| Arc::new(Histogram::new(self.sampling.clone())))
+            .or_insert_with(|| Arc::new(Histogram::new(self.sampling_gate())))
             .clone()
     }
 
@@ -261,6 +348,41 @@ mod tests {
         r.set_sampling(true);
         r.histogram("lat_us").record(10);
         assert_eq!(r.snapshot().histogram("lat_us").unwrap().count, 1);
+    }
+
+    #[test]
+    fn fractional_sampling_rate_is_deterministic() {
+        let r = MetricsRegistry::default();
+        assert!((r.sampling_rate() - 1.0).abs() < 1e-12);
+        r.set_sampling_rate(0.25);
+        assert!((r.sampling_rate() - 0.25).abs() < 1e-12);
+        assert!(r.sampling_enabled());
+        let h = r.histogram("lat_us");
+        for v in 0..100u64 {
+            h.record(v);
+        }
+        // Error diffusion admits exactly every 4th candidate.
+        assert_eq!(r.snapshot().histogram("lat_us").unwrap().count, 25);
+        r.set_sampling_rate(0.0);
+        assert!(!r.sampling_enabled());
+        h.record(1);
+        assert_eq!(r.snapshot().histogram("lat_us").unwrap().count, 25);
+        // Out-of-range rates clamp to the endpoints.
+        r.set_sampling_rate(7.5);
+        assert!((r.sampling_rate() - 1.0).abs() < 1e-12);
+        r.set_sampling_rate(-3.0);
+        assert!((r.sampling_rate() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gates_diffuse_error_privately() {
+        let r = MetricsRegistry::default();
+        r.set_sampling_rate(0.5);
+        let (a, b) = (r.sampling_gate(), r.sampling_gate());
+        let admits = |g: &SamplingGate| (0..10).filter(|_| g.admit()).count();
+        // Each gate sees its own accumulator: both admit 5 of 10.
+        assert_eq!(admits(&a), 5);
+        assert_eq!(admits(&b), 5);
     }
 
     #[test]

@@ -10,14 +10,17 @@
 //! tracer's fixed-capacity ring buffer, which the TCP `trace` command
 //! and `--metrics-dump` read newest-first.
 //!
-//! When sampling is disabled (shared flag with the
-//! [`MetricsRegistry`](super::MetricsRegistry)), [`Tracer::start`]
-//! returns a disabled trace: spans neither allocate nor lock, so traced
-//! code paths pay one `Relaxed` load and an `Instant::now()`.
+//! Trace starts honor the deterministic sampling rate (shared
+//! [`SamplingGate`] with the
+//! [`MetricsRegistry`](super::MetricsRegistry)): when the gate rejects
+//! a start, [`Tracer::start`] returns a disabled trace whose spans
+//! neither allocate nor lock, so traced code paths pay one `Relaxed`
+//! load and an `Instant::now()`.
 
 use super::histogram::Histogram;
+use super::registry::SamplingGate;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -48,7 +51,7 @@ pub struct TraceRecord {
 
 /// Issues trace IDs and keeps the ring buffer of recent traces.
 pub struct Tracer {
-    sampling: Arc<AtomicBool>,
+    sampling: Arc<SamplingGate>,
     next_id: AtomicU64,
     capacity: usize,
     ring: Mutex<VecDeque<TraceRecord>>,
@@ -57,12 +60,12 @@ pub struct Tracer {
 impl Tracer {
     /// Tracer retaining the last `capacity` traces, always sampling.
     pub fn new(capacity: usize) -> Tracer {
-        Tracer::with_sampling_flag(capacity, Arc::new(AtomicBool::new(true)))
+        Tracer::with_sampling_gate(capacity, SamplingGate::always())
     }
 
-    /// Tracer gated on a shared sampling flag (see
+    /// Tracer gated on a shared sampling gate (see
     /// [`Obs::new`](super::Obs::new)).
-    pub fn with_sampling_flag(capacity: usize, sampling: Arc<AtomicBool>) -> Tracer {
+    pub fn with_sampling_gate(capacity: usize, sampling: Arc<SamplingGate>) -> Tracer {
         Tracer {
             sampling,
             next_id: AtomicU64::new(1),
@@ -71,10 +74,10 @@ impl Tracer {
         }
     }
 
-    /// Start a trace. Returns a disabled (free) trace when sampling is
-    /// off.
+    /// Start a trace. Returns a disabled (free) trace when the sampling
+    /// gate rejects the start.
     pub fn start(self: &Arc<Self>, label: &str) -> Trace {
-        if !self.sampling.load(Relaxed) {
+        if !self.sampling.admit() {
             return Trace::disabled();
         }
         Trace {
@@ -229,8 +232,9 @@ mod tests {
 
     #[test]
     fn disabled_sampling_records_nothing() {
-        let flag = Arc::new(AtomicBool::new(false));
-        let t = Arc::new(Tracer::with_sampling_flag(4, flag.clone()));
+        let reg = crate::obs::MetricsRegistry::default();
+        reg.set_sampling(false);
+        let t = Arc::new(Tracer::with_sampling_gate(4, reg.sampling_gate()));
         {
             let tr = t.start("invisible");
             assert!(!tr.enabled());
@@ -238,9 +242,18 @@ mod tests {
             drop(tr.span("stage"));
         }
         assert!(t.recent(10).is_empty());
-        flag.store(true, Relaxed);
+        reg.set_sampling(true);
         drop(t.start("visible"));
         assert_eq!(t.recent(10).len(), 1);
+    }
+
+    #[test]
+    fn fractional_rate_samples_trace_starts() {
+        let t = Arc::new(Tracer::with_sampling_gate(16, SamplingGate::with_rate(0.5)));
+        for i in 0..10 {
+            drop(t.start(&format!("r{i}")));
+        }
+        assert_eq!(t.recent(16).len(), 5);
     }
 
     #[test]
@@ -266,8 +279,7 @@ mod tests {
 
     #[test]
     fn span_timed_records_histogram_even_when_disabled() {
-        let on = Arc::new(AtomicBool::new(true));
-        let h = Arc::new(Histogram::new(on.clone()));
+        let h = Arc::new(Histogram::new(SamplingGate::always()));
         let tr = Trace::disabled();
         drop(tr.span_timed("stage", &h));
         assert_eq!(h.snapshot().count, 1);

@@ -17,6 +17,7 @@ use super::backpressure::BoundedQueue;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::rebalance::ShardMap;
 use super::supervisor::{supervise_chunk, ChunkOutcome, ChunkTask};
+use crate::compress::core::{self, CompressedContainer, ContainerKind, SufficientStatistics};
 use crate::compress::{
     ClusterStaticCompressed, ClusterStaticCompressor, CompressedData, SuffStatsCompressor,
 };
@@ -105,6 +106,30 @@ impl PipelineResult {
             PipelineResult::SuffStats(_) => {
                 Err(YocoError::invalid("pipeline produced sufficient statistics"))
             }
+        }
+    }
+
+    /// Which container family member the run produced.
+    pub fn kind(&self) -> ContainerKind {
+        self.as_container().kind()
+    }
+
+    /// Borrowed trait-object view of whichever container the run
+    /// produced — lets the cache/serving layers inspect results without
+    /// matching on concrete types.
+    pub fn as_container(&self) -> &dyn CompressedContainer {
+        match self {
+            PipelineResult::SuffStats(d) => d,
+            PipelineResult::ClusterStatic(d) => d,
+        }
+    }
+
+    /// Move the result into a shared trait object (the form the dataset
+    /// cache stores).
+    pub fn into_container(self) -> Arc<dyn CompressedContainer> {
+        match self {
+            PipelineResult::SuffStats(d) => Arc::new(d),
+            PipelineResult::ClusterStatic(d) => Arc::new(d),
         }
     }
 }
@@ -491,12 +516,18 @@ impl WorkerState {
     }
 }
 
-/// Merge worker results. The sufficient-statistics modes go through
-/// [`CompressedData::merge_many`], which assigns output slots in the
-/// same first-occurrence order as a sequential left-fold and then fills
-/// disjoint slot ranges on `threads` threads — byte-identical to the
-/// old sequential merge (the chaos suite's losslessness pins rely on
-/// this), but the end-of-run barrier no longer serializes on one core.
+/// Merge worker results through the ONE generic engine,
+/// [`core::merge_many`]: output slots are assigned in the same
+/// first-occurrence order as a sequential left-fold, then disjoint slot
+/// ranges fill on `threads` threads — byte-identical to the old
+/// sequential merge (the chaos suite's losslessness pins rely on this),
+/// but the end-of-run barrier no longer serializes on one core. Any
+/// [`SufficientStatistics`] container merges here; the mode match below
+/// only finalizes worker state into shards.
+fn merge_shards<T: SufficientStatistics>(shards: Vec<T>, threads: usize) -> Result<T> {
+    core::merge_many(&shards, threads)
+}
+
 fn merge_partials(
     partials: Vec<WorkerState>,
     mode: PipelineMode,
@@ -511,7 +542,7 @@ fn merge_partials(
                     c.finish()
                 })
                 .collect();
-            Ok(PipelineResult::SuffStats(CompressedData::merge_many(&shards, threads)?))
+            Ok(PipelineResult::SuffStats(merge_shards(shards, threads)?))
         }
         PipelineMode::WithinCluster => {
             // Each worker used local dense ids; offset them so ids stay
@@ -528,7 +559,7 @@ fn merge_partials(
                     d
                 })
                 .collect();
-            Ok(PipelineResult::SuffStats(CompressedData::merge_many(&shards, threads)?))
+            Ok(PipelineResult::SuffStats(merge_shards(shards, threads)?))
         }
         PipelineMode::ClusterStatic { .. } => {
             // Cluster-hash routing makes the shards label-disjoint, so
@@ -542,9 +573,7 @@ fn merge_partials(
                     comp.finish()
                 })
                 .collect();
-            Ok(PipelineResult::ClusterStatic(ClusterStaticCompressed::merge_many(
-                &shards, threads,
-            )?))
+            Ok(PipelineResult::ClusterStatic(merge_shards(shards, threads)?))
         }
     }
 }

@@ -1,10 +1,12 @@
 //! Wire protocol: JSON line → [`Request`] → coordinator call → JSON line.
 
-use crate::coordinator::{AnalysisRequest, Coordinator, EnginePref, EstimatorKind};
+use crate::compress::core::CompressedContainer;
+use crate::coordinator::{AnalysisRequest, Coordinator, EnginePref, EstimatorKind, Strategy};
 use crate::data::gen::{generate_xp, XpConfig};
 use crate::data::{read_csv, ColumnRole};
 use crate::error::{Result, YocoError};
 use crate::estimator::CovarianceKind;
+use crate::obs::Trace;
 use crate::util::json::{parse, Json};
 
 /// A decoded wire request.
@@ -37,11 +39,27 @@ pub enum Request {
         /// Also include the Prometheus text exposition
         /// (`"format":"prometheus"` on the wire).
         prometheus: bool,
+        /// When present, set the deterministic 0.0–1.0 sampling rate
+        /// for histograms and trace starts before snapshotting.
+        sampling_rate: Option<f64>,
     },
     /// Recent request traces, newest first.
     Trace {
         /// Maximum number of traces to return.
         limit: usize,
+    },
+    /// Serialize a compressed container in its container-agnostic wire
+    /// form (the shard-tier export path): any
+    /// [`CompressedContainer`] the store can produce goes out through
+    /// the same [`WireContainer`](crate::compress::WireContainer) JSON.
+    Export {
+        /// Dataset name.
+        dataset: String,
+        /// Feature columns in model order (empty = schema default).
+        features: Vec<String>,
+        /// Compression strategy name (`"suffstats"` default, or
+        /// `"within_cluster"`).
+        strategy: String,
     },
 }
 
@@ -154,8 +172,36 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "datasets" => Ok(Request::Datasets),
         "metrics" => Ok(Request::Metrics {
             prometheus: j.get("format").and_then(Json::as_str) == Some("prometheus"),
+            sampling_rate: j.get("sampling_rate").and_then(Json::as_f64),
         }),
         "trace" => Ok(Request::Trace { limit: usize_field(&j, "limit", 16) }),
+        "export" => {
+            let features = match j.get("features").and_then(Json::as_arr) {
+                None => Vec::new(),
+                Some(arr) => {
+                    let mut v = Vec::with_capacity(arr.len());
+                    for f in arr {
+                        v.push(
+                            f.as_str()
+                                .ok_or_else(|| {
+                                    YocoError::parse("features must be strings")
+                                })?
+                                .to_string(),
+                        );
+                    }
+                    v
+                }
+            };
+            Ok(Request::Export {
+                dataset: str_field(&j, "dataset")?,
+                features,
+                strategy: j
+                    .get("strategy")
+                    .and_then(Json::as_str)
+                    .unwrap_or("suffstats")
+                    .to_string(),
+            })
+        }
         other => Err(YocoError::parse(format!("unknown op '{other}'"))),
     }
 }
@@ -220,7 +266,15 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
                 c.store().dataset_names().into_iter().map(Json::Str).collect(),
             ),
         )])),
-        Request::Metrics { prometheus } => {
+        Request::Metrics { prometheus, sampling_rate } => {
+            if let Some(rate) = sampling_rate {
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(YocoError::invalid(format!(
+                        "sampling_rate must be in [0.0, 1.0], got {rate}"
+                    )));
+                }
+                c.obs().set_sampling_rate(rate);
+            }
             let m = c.metrics();
             let (hits, misses) = c.store().cache_stats();
             let snap = c.obs().registry().snapshot();
@@ -239,6 +293,7 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
                 ("cache_hits", Json::Num(hits as f64)),
                 ("cache_misses", Json::Num(misses as f64)),
                 ("runtime_available", Json::Bool(c.runtime_available())),
+                ("sampling_rate", Json::Num(c.obs().sampling_rate())),
                 ("series", crate::obs::registry_json(&snap)),
             ];
             if prometheus {
@@ -253,6 +308,39 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
             "traces",
             crate::obs::traces_json(&c.obs().tracer().recent(limit)),
         )])),
+        Request::Export { dataset, features, strategy } => {
+            let strategy = match strategy.as_str() {
+                "suffstats" => Strategy::SuffStats,
+                "within_cluster" => Strategy::WithinCluster,
+                other => {
+                    return Err(YocoError::parse(format!("unknown strategy '{other}'")))
+                }
+            };
+            let features: Vec<String> = if features.is_empty() {
+                let schema = c.store().schema(&dataset)?;
+                schema
+                    .feature_indices()
+                    .into_iter()
+                    .map(|i| schema.names()[i].clone())
+                    .collect()
+            } else {
+                features
+            };
+            let (container, cache_hit) = c.store().compressed_container_traced(
+                &dataset,
+                &features,
+                strategy,
+                &Trace::disabled(),
+            )?;
+            Ok(ok(vec![
+                ("dataset", Json::Str(dataset)),
+                ("strategy", Json::Str(strategy.name().to_string())),
+                ("kind", Json::Str(container.kind().name().to_string())),
+                ("records", Json::Num(container.num_records() as f64)),
+                ("cache_hit", Json::Bool(cache_hit)),
+                ("container", container.to_wire().to_json()),
+            ]))
+        }
     }
 }
 
@@ -354,6 +442,49 @@ mod tests {
         let text = r.get("prometheus").unwrap().as_str().unwrap();
         assert!(text.contains("# TYPE coordinator_requests_total counter"), "{text}");
         assert!(text.contains("coordinator_request_us{quantile=\"0.99\"}"), "{text}");
+    }
+
+    #[test]
+    fn metrics_op_sets_the_sampling_rate() {
+        let c = coordinator();
+        let r = handle_line(&c, r#"{"op":"metrics"}"#);
+        assert_eq!(r.get("sampling_rate").unwrap().as_f64(), Some(1.0));
+        let r = handle_line(&c, r#"{"op":"metrics","sampling_rate":0.25}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("sampling_rate").unwrap().as_f64(), Some(0.25));
+        // Out-of-range rates are rejected, leaving the knob untouched.
+        let r = handle_line(&c, r#"{"op":"metrics","sampling_rate":2.0}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let r = handle_line(&c, r#"{"op":"metrics"}"#);
+        assert_eq!(r.get("sampling_rate").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn export_returns_a_wire_container() {
+        let c = coordinator();
+        handle_line(&c, r#"{"op":"register_xp","name":"xp","n":2000}"#);
+        let r = handle_line(&c, r#"{"op":"export","dataset":"xp"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("kind").unwrap().as_str(), Some("suffstats"));
+        assert_eq!(r.get("strategy").unwrap().as_str(), Some("suffstats"));
+        assert_eq!(r.get("cache_hit").unwrap().as_bool(), Some(false));
+        assert!(r.get("records").unwrap().as_usize().unwrap() > 0);
+        // The reply's container parses back into a wire container.
+        let wire =
+            crate::compress::WireContainer::from_json(r.get("container").unwrap()).unwrap();
+        assert_eq!(wire.kind, crate::compress::ContainerKind::SuffStats);
+        // A second export of the same (features, strategy) hits the cache,
+        // and the same cached entry serves typed analyze reads.
+        let r = handle_line(&c, r#"{"op":"export","dataset":"xp"}"#);
+        assert_eq!(r.get("cache_hit").unwrap().as_bool(), Some(true));
+        let r = handle_line(&c, r#"{"op":"analyze","dataset":"xp","outcome":"y0"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("cache_hit").unwrap().as_bool(), Some(true));
+        // Unknown strategies and datasets are rejected.
+        let r = handle_line(&c, r#"{"op":"export","dataset":"xp","strategy":"zip"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let r = handle_line(&c, r#"{"op":"export","dataset":"ghost"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
     }
 
     #[test]

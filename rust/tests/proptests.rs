@@ -2,7 +2,11 @@
 //! harness — see `yoco::util::testing`). Each property runs across many
 //! independently seeded generators; failures report the seed.
 
-use yoco::compress::{compress_batch, SuffStatsCompressor, WithinClusterCompressor};
+use yoco::compress::{
+    compress_batch, merge_many, BalancedPanelCompressor, BetweenClusterCompressor,
+    ClusterStaticCompressor, CompressedContainer, FWeightCompressor, SuffStatsCompressor,
+    SufficientStatistics, WeightedSuffStatsCompressor, WireContainer, WithinClusterCompressor,
+};
 use yoco::data::gen::{generate_xp, XpConfig};
 use yoco::estimator::{fit_ols, fit_wls_suffstats, CovarianceKind};
 use yoco::linalg::Matrix;
@@ -169,6 +173,164 @@ fn prop_parallel_merge_bit_identical_to_left_fold_and_single_pass() {
                 // Same group ORDER as the fold, not just the same set.
                 assert_compressed_bytes_eq(&parallel, &folded);
             }
+        }
+    });
+}
+
+/// Full-mantissa pseudo value in [-2, 2): deterministic, every mantissa
+/// bit in play, so byte-identity can only hold if the generic engine
+/// reproduces the left-fold's exact operation order.
+fn pseudo(i: u64) -> f64 {
+    ((i.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xabcd) >> 11) as f64)
+        / (1u64 << 53) as f64
+        * 4.0
+        - 2.0
+}
+
+/// Bit-exact equality of two wire views (covers every payload section
+/// and all shape metadata of a container, whatever its concrete type).
+fn assert_wire_bits_eq(a: &WireContainer, b: &WireContainer, ctx: &str) {
+    assert_eq!(a.kind, b.kind, "{ctx}");
+    assert_eq!(a.fingerprint, b.fingerprint, "{ctx}");
+    assert_eq!(a.meta, b.meta, "{ctx}");
+    let names = |w: &WireContainer| {
+        w.sections.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+    };
+    assert_eq!(names(a), names(b), "{ctx}");
+    for ((name, av), (_, bv)) in a.sections.iter().zip(&b.sections) {
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(av), bits(bv), "{ctx}: section {name}");
+    }
+}
+
+/// The generic engine must be byte-identical to folding `fold` left to
+/// right over the same (shuffled) shard order, for any thread count.
+fn check_generic_engine<T>(
+    rng: &mut Rng,
+    name: &str,
+    mut shards: Vec<T>,
+    fold: impl Fn(&T, &T) -> T,
+) where
+    T: SufficientStatistics + Clone,
+{
+    for i in (1..shards.len()).rev() {
+        shards.swap(i, rng.below(i + 1));
+    }
+    let mut seq = shards[0].clone();
+    for s in &shards[1..] {
+        seq = fold(&seq, s);
+    }
+    for threads in [1usize, 2, 5, 8] {
+        let par = merge_many(&shards, threads).unwrap();
+        assert_wire_bits_eq(
+            &par.to_wire(),
+            &seq.to_wire(),
+            &format!("{name}, {} shards, threads={threads}", shards.len()),
+        );
+    }
+}
+
+#[test]
+fn prop_generic_merge_engine_matches_left_fold_for_all_six_containers() {
+    for_all_seeds(8, |rng| {
+        // Full-mantissa stream + a small value pool so group keys
+        // collide across shards (collisions are what exercise fold_slot).
+        let mut ctr = rng.next_u64() >> 8;
+        let pool: Vec<f64> = (0..5).map(|j| pseudo(ctr.wrapping_add(1_000 + j))).collect();
+        for k in [1usize, 2, 3, 7] {
+            let mut next = || {
+                ctr = ctr.wrapping_add(1);
+                pseudo(ctr)
+            };
+
+            // §4 sufficient statistics (2 outcomes, YOCO).
+            let n = 120 + rng.below(200);
+            let mut cs: Vec<_> = (0..k).map(|_| SuffStatsCompressor::new(3, 2)).collect();
+            for i in 0..n {
+                let f = [1.0, pool[i % pool.len()], (i % 3) as f64];
+                cs[i % k].push(&f, &[next(), next()]);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "suffstats", shards, |a, b| {
+                let mut x = a.clone();
+                x.merge(b).unwrap();
+                x
+            });
+
+            // §7.2 weighted sufficient statistics.
+            let mut cs: Vec<_> =
+                (0..k).map(|_| WeightedSuffStatsCompressor::new(3, 2)).collect();
+            for i in 0..n {
+                let f = [1.0, pool[i % pool.len()], (i % 3) as f64];
+                let w = 0.5 + next().abs();
+                cs[i % k].push(&f, &[next(), next()], w);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "weighted", shards, |a, b| {
+                let mut x = a.clone();
+                x.merge(b).unwrap();
+                x
+            });
+
+            // §3.3 frequency weights (keyed on features AND outcome).
+            let mut cs: Vec<_> = (0..k).map(|_| FWeightCompressor::new(2)).collect();
+            for i in 0..n {
+                let f = [1.0, pool[i % pool.len()]];
+                cs[i % k].push(&f, pool[(i / 2) % pool.len()]);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "fweight", shards, |a, b| a.merge(b).unwrap());
+
+            // §5.3.3 static-feature clusters (keyed on the label; the
+            // same cluster split across shards re-folds its moments).
+            let mut cs: Vec<_> = (0..k).map(|_| ClusterStaticCompressor::new(2)).collect();
+            for i in 0..n {
+                let f = [1.0, next()];
+                cs[i % k].push(&f, next(), (i % 10) as f64);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "cluster_static", shards, |a, b| {
+                let mut x = a.clone();
+                x.merge(b).unwrap();
+                x
+            });
+
+            // §5.3.2 between-cluster groups (key = whole T_g×p matrix;
+            // pool matrices of different lengths collide across shards).
+            let mats: Vec<Matrix> = (0..4)
+                .map(|j| {
+                    let t = 2 + j % 3;
+                    Matrix::from_rows(
+                        &(0..t)
+                            .map(|tt| vec![1.0, pool[j], tt as f64])
+                            .collect::<Vec<_>>(),
+                    )
+                })
+                .collect();
+            let mut cs: Vec<_> = (0..k).map(|_| BetweenClusterCompressor::new(3)).collect();
+            for i in 0..60 {
+                let m = &mats[i % mats.len()];
+                let y: Vec<f64> = (0..m.rows()).map(|_| next()).collect();
+                cs[i % k].push_cluster(m, &y);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "between_cluster", shards, |a, b| a.merge(b).unwrap());
+
+            // §5.3.3 balanced panel (keyless: pure concatenation in
+            // shard order; all shards share one bit-identical M̃₂).
+            let t = 4;
+            let m2 = Matrix::from_rows(
+                &(0..t).map(|tt| vec![1.0, tt as f64]).collect::<Vec<_>>(),
+            );
+            let mut cs: Vec<_> =
+                (0..k).map(|_| BalancedPanelCompressor::new(m2.clone(), 2)).collect();
+            for i in 0..40 {
+                let row = [1.0, next()];
+                let series: Vec<f64> = (0..t).map(|_| next()).collect();
+                cs[i % k].push_cluster(&row, &series).unwrap();
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "balanced_panel", shards, |a, b| a.merge(b).unwrap());
         }
     });
 }
