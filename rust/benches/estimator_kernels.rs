@@ -8,10 +8,10 @@
 //!
 //! Run: `cargo bench --bench estimator_kernels` (`--quick` for CI smoke).
 
-use yoco::compress::{CompressedData, SuffStatsCompressor};
+use yoco::compress::{CompressedData, IvCompressed, IvCompressor, SuffStatsCompressor};
 use yoco::estimator::{
-    fit_logistic_suffstats, fit_wls_suffstats, gram_xtwx_xtwy, CovarianceKind,
-    LogisticOptions,
+    fit_iv_2sls, fit_logistic_suffstats, fit_wls_suffstats, gram_iv_wtww_wty,
+    gram_xtwx_xtwy, CovarianceKind, LogisticOptions,
 };
 use yoco::linalg::{gram_weighted, matvec};
 use yoco::util::bench::{bench, black_box, report, BenchSuite};
@@ -41,6 +41,21 @@ fn compress(rows: &[(Vec<f64>, [f64; 2])], p: usize) -> CompressedData {
     let mut c = SuffStatsCompressor::new(p, 2);
     for (m, y) in rows {
         c.push(m, y);
+    }
+    c.finish()
+}
+
+/// Cluster-tagged IV workload: discrete instrument + confounder levels
+/// so the joint `[z | x]` keys compress hard, one endogenous regressor.
+fn synth_iv(n: usize, clusters: usize) -> IvCompressed {
+    let mut rng = Rng::seed_from_u64(7);
+    let mut c = IvCompressor::new(2, 2, 1).with_cluster_tags();
+    for _ in 0..n {
+        let zi = rng.below(5) as f64;
+        let conf = rng.below(4) as f64;
+        let x = zi + conf;
+        let y = 1.0 + 2.0 * x + 0.5 * conf + rng.normal();
+        c.push_clustered(&[1.0, zi], &[1.0, x], &[y], rng.below(clusters) as u32);
     }
     c.finish()
 }
@@ -96,6 +111,24 @@ fn main() {
     });
     report(&r);
     suite.push_groups(r, g, Some(n as u64));
+
+    // -- IV/2SLS on the conditionally-sufficient container (§7.1) --
+    let iv = synth_iv(n, 64);
+    let giv = iv.num_groups() as u64;
+    println!("\nIV workload compressed to G={giv} groups");
+    let r = bench("gram_iv_wtww_wty/fused", || black_box(gram_iv_wtww_wty(&iv, 0).unwrap()));
+    report(&r);
+    suite.push_groups(r, giv, Some(n as u64));
+    let r = bench("fit_iv_2sls/homoskedastic", || {
+        black_box(fit_iv_2sls(&iv, 0, CovarianceKind::Homoskedastic).unwrap())
+    });
+    report(&r);
+    suite.push_groups(r, giv, Some(n as u64));
+    let r = bench("fit_iv_2sls/cluster_robust", || {
+        black_box(fit_iv_2sls(&iv, 0, CovarianceKind::ClusterRobust).unwrap())
+    });
+    report(&r);
+    suite.push_groups(r, giv, Some(n as u64));
 
     // -- parallel shard merge vs sequential left-fold --
     let shards_k = 8;

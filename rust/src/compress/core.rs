@@ -72,6 +72,10 @@ pub enum ContainerKind {
     /// [`BalancedPanelCompressed`](super::BalancedPanelCompressed) —
     /// §5.3.2 balanced-panel Kronecker form.
     BalancedPanel,
+    /// [`IvCompressed`](super::IvCompressed) — §7.1 IV / 2SLS
+    /// conditionally sufficient statistics keyed on the joint `[z | x]`
+    /// row (optionally cluster-tagged).
+    Iv,
 }
 
 impl ContainerKind {
@@ -140,6 +144,12 @@ pub fn registry() -> &'static [ContainerSpec] {
             name: "balanced_panel",
             keyed: false,
             estimator: "balanced_panel",
+        },
+        ContainerSpec {
+            kind: ContainerKind::Iv,
+            name: "iv",
+            keyed: true,
+            estimator: "iv_2sls",
         },
     ];
     REGISTRY
@@ -241,6 +251,14 @@ pub trait SufficientStatistics: CompressedContainer + Sized {
 /// the whole container family. Byte-identical to sequentially folding
 /// the container's own `merge` left to right (see the module docs for
 /// why).
+///
+/// Edge cases: an **empty shard list** is a structured
+/// [`YocoError::Invalid`](crate::error::YocoError) (the output shape —
+/// p, o, tagging — is unknowable with zero shards; callers that can
+/// produce an empty list keep one representative empty shard instead).
+/// Shards with **zero records** are fine anywhere in the list: they
+/// contribute no slots, and an all-empty list of shards produces a
+/// well-formed empty container with the shared shape.
 pub fn merge_many<T: SufficientStatistics>(shards: &[T], threads: usize) -> Result<T> {
     let first = shards
         .first()
@@ -474,11 +492,11 @@ mod tests {
     #[test]
     fn registry_covers_all_kinds_with_unique_names() {
         let specs = registry();
-        assert_eq!(specs.len(), 6);
+        assert_eq!(specs.len(), 7);
         let mut names: Vec<&str> = specs.iter().map(|s| s.name).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 6, "duplicate registry names");
+        assert_eq!(names.len(), 7, "duplicate registry names");
         for s in specs {
             assert_eq!(s.kind.name(), s.name);
             assert!(std::ptr::eq(spec_by_name(s.name).unwrap(), s.kind.spec()));

@@ -1,0 +1,712 @@
+//! §7.1 — conditionally sufficient statistics for IV / 2SLS.
+//!
+//! Two-stage least squares needs the cross-moment blocks `Z'Z`, `Z'X`,
+//! `Z'y` (plus `X'X`, `X'y`, `y'y` for residual variances), all of which
+//! are *conditionally sufficient* given the joint row `w = [z | x]`:
+//! within a group of observations sharing the exact same instrument and
+//! regressor values, `Σ zᵢyᵢ = z·Σyᵢ` and `Σ zᵢxᵢᵀ = ñ·zxᵀ`. So the
+//! container groups observations by the canonical joint row and stores,
+//! per group and outcome, the same `(ñ, ỹ', ỹ'')` triple as §4 — one
+//! compression serves every outcome (YOCO) and both covariance
+//! estimators the IV estimator supports.
+//!
+//! The container implements both [`CompressedContainer`] and
+//! [`SufficientStatistics`], so the ONE generic slot-partitioned
+//! [`merge_many`](super::core::merge_many) engine serves it
+//! byte-identically to a sequential [`merge`](IvCompressed::merge)
+//! left-fold — no container-specific merge code exists here.
+
+use std::collections::HashMap;
+
+use super::core::{
+    CompressedContainer, ContainerKind, SufficientStatistics, WireContainer,
+};
+use super::key::{FeatureKey, FxHasherBuilder};
+use crate::error::{Result, YocoError};
+
+/// Keyed IV / 2SLS statistics: `G` groups of identical joint rows
+/// `w = [z | x]` (`pz` instruments, `px` regressors), each carrying
+/// `(ñ_g, ỹ'_g, ỹ''_g)` per outcome — the §7.1 conditionally sufficient
+/// statistics for two-stage least squares, optionally cluster-tagged
+/// for cluster-robust covariances.
+#[derive(Debug, Clone)]
+pub struct IvCompressed {
+    pz: usize,
+    px: usize,
+    o: usize,
+    joint: Vec<f64>,  // G × (pz + px) row-major: [z | x]
+    counts: Vec<f64>, // ñ_g
+    sums: Vec<f64>,   // G × o row-major: ỹ'
+    sumsqs: Vec<f64>, // G × o row-major: ỹ''
+    total_n: u64,
+    cluster_of: Option<Vec<u32>>,
+    num_clusters: usize,
+}
+
+impl IvCompressed {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        pz: usize,
+        px: usize,
+        o: usize,
+        joint: Vec<f64>,
+        counts: Vec<f64>,
+        sums: Vec<f64>,
+        sumsqs: Vec<f64>,
+        total_n: u64,
+        cluster_of: Option<Vec<u32>>,
+        num_clusters: usize,
+    ) -> Self {
+        let g = counts.len();
+        debug_assert_eq!(joint.len(), g * (pz + px));
+        debug_assert_eq!(sums.len(), g * o);
+        debug_assert_eq!(sumsqs.len(), g * o);
+        IvCompressed { pz, px, o, joint, counts, sums, sumsqs, total_n, cluster_of, num_clusters }
+    }
+
+    /// Number of compressed records G.
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Number of instruments pz.
+    pub fn num_instruments(&self) -> usize {
+        self.pz
+    }
+
+    /// Number of (endogenous + exogenous) regressors px.
+    pub fn num_regressors(&self) -> usize {
+        self.px
+    }
+
+    /// Joint row width pz + px.
+    pub fn joint_width(&self) -> usize {
+        self.pz + self.px
+    }
+
+    /// Number of outcomes o.
+    pub fn num_outcomes(&self) -> usize {
+        self.o
+    }
+
+    /// Original (uncompressed) sample size n = Σ ñ_g.
+    pub fn total_n(&self) -> u64 {
+        self.total_n
+    }
+
+    /// Compression ratio n / G.
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_n as f64 / self.num_groups().max(1) as f64
+    }
+
+    /// Joint row `w_g = [z_g | x_g]` of group `g`.
+    #[inline]
+    pub fn joint_row(&self, g: usize) -> &[f64] {
+        let q = self.joint_width();
+        &self.joint[g * q..(g + 1) * q]
+    }
+
+    /// Instrument part `z_g` of group `g`'s joint row.
+    #[inline]
+    pub fn z_row(&self, g: usize) -> &[f64] {
+        &self.joint_row(g)[..self.pz]
+    }
+
+    /// Regressor part `x_g` of group `g`'s joint row.
+    #[inline]
+    pub fn x_row(&self, g: usize) -> &[f64] {
+        &self.joint_row(g)[self.pz..]
+    }
+
+    /// Row-major `G × (pz+px)` joint storage, borrowed (the fused
+    /// estimator kernels stream this directly).
+    #[inline]
+    pub fn joint(&self) -> &[f64] {
+        &self.joint
+    }
+
+    /// Group sizes ñ.
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// ỹ'_g for outcome `k`.
+    #[inline]
+    pub fn sum(&self, g: usize, k: usize) -> f64 {
+        self.sums[g * self.o + k]
+    }
+
+    /// ỹ''_g for outcome `k`.
+    #[inline]
+    pub fn sumsq(&self, g: usize, k: usize) -> f64 {
+        self.sumsqs[g * self.o + k]
+    }
+
+    /// Row-major `G × o` storage of ỹ', borrowed.
+    #[inline]
+    pub fn sums(&self) -> &[f64] {
+        &self.sums
+    }
+
+    /// Row-major `G × o` storage of ỹ'', borrowed.
+    #[inline]
+    pub fn sumsqs(&self) -> &[f64] {
+        &self.sumsqs
+    }
+
+    /// Cluster assignment per group, when cluster-tagged.
+    pub fn cluster_of(&self) -> Option<&[u32]> {
+        self.cluster_of.as_deref()
+    }
+
+    /// Number of clusters C (0 when untagged).
+    pub fn num_clusters(&self) -> usize {
+        self.num_clusters
+    }
+
+    /// Approximate in-memory footprint in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        8 * (self.joint.len() + self.counts.len() + self.sums.len() + self.sumsqs.len())
+            + self.cluster_of.as_ref().map_or(0, |c| 4 * c.len())
+    }
+
+    /// Merge another IV compression of *disjoint* observations into this
+    /// one (the sequential left-fold reference the generic engine is
+    /// byte-identical to). Identical joint rows collapse; statistics add
+    /// in the fixed order ñ, ỹ', ỹ''.
+    pub fn merge(&mut self, other: &IvCompressed) -> Result<()> {
+        self.check_mergeable(other)?;
+        let o = self.o;
+        let mut index: HashMap<FeatureKey, usize, FxHasherBuilder> =
+            HashMap::with_capacity_and_hasher(self.num_groups() * 2, FxHasherBuilder);
+        let mut scratch = Vec::new();
+        for g in 0..self.num_groups() {
+            self.key_words_into(g, self.cluster_of.as_ref().map(|c| c[g]), &mut scratch);
+            index.insert(FeatureKey::from_words(&scratch), g);
+        }
+        for g in 0..other.num_groups() {
+            let oc = other.cluster_of.as_ref().map(|c| c[g]);
+            other.key_words_into(g, oc, &mut scratch);
+            match index.get(scratch.as_slice()) {
+                Some(&mine) => {
+                    self.counts[mine] += other.counts[g];
+                    for k in 0..o {
+                        self.sums[mine * o + k] += other.sums[g * o + k];
+                        self.sumsqs[mine * o + k] += other.sumsqs[g * o + k];
+                    }
+                }
+                None => {
+                    let mine = self.num_groups();
+                    self.joint.extend_from_slice(other.joint_row(g));
+                    self.counts.push(other.counts[g]);
+                    for k in 0..o {
+                        self.sums.push(other.sums[g * o + k]);
+                        self.sumsqs.push(other.sumsqs[g * o + k]);
+                    }
+                    if let Some(c) = self.cluster_of.as_mut() {
+                        c.push(oc.expect("tagged merge checked above"));
+                    }
+                    index.insert(FeatureKey::from_words(&scratch), mine);
+                }
+            }
+        }
+        self.total_n += other.total_n;
+        self.num_clusters = self.num_clusters.max(other.num_clusters);
+        Ok(())
+    }
+
+    /// Merge `K` shard compressions in one call via the generic
+    /// slot-partitioned engine in [`core`](super::core) — byte-identical
+    /// to folding [`merge`](Self::merge) left to right.
+    pub fn merge_many(shards: &[IvCompressed], threads: usize) -> Result<IvCompressed> {
+        super::core::merge_many(shards, threads)
+    }
+
+    fn check_mergeable(&self, other: &IvCompressed) -> Result<()> {
+        if self.pz != other.pz || self.px != other.px || self.o != other.o {
+            return Err(YocoError::shape(format!(
+                "iv merge shape mismatch: ({}, {}, {}) vs ({}, {}, {})",
+                self.pz, self.px, self.o, other.pz, other.px, other.o
+            )));
+        }
+        if self.cluster_of.is_some() != other.cluster_of.is_some() {
+            return Err(YocoError::invalid(
+                "cannot merge cluster-tagged with untagged IV compression",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Canonicalized key words for group `g`: the joint row plus, when
+    /// tagged, the cluster id.
+    fn key_words_into(&self, g: usize, cluster: Option<u32>, out: &mut Vec<u64>) {
+        super::key::canonicalize_into(self.joint_row(g), out);
+        if let Some(c) = cluster {
+            out.push((c as f64).to_bits());
+        }
+    }
+
+    /// Shift all cluster ids by `offset` (pipeline merge helper: worker-
+    /// local dense ids become globally unique). No-op on untagged data.
+    pub fn offset_clusters(mut self, offset: u32) -> IvCompressed {
+        if let Some(tags) = self.cluster_of.as_mut() {
+            for t in tags.iter_mut() {
+                *t += offset;
+            }
+            self.num_clusters += offset as usize;
+        }
+        self
+    }
+}
+
+/// One group's statistics detached from [`IvCompressed`] storage for the
+/// generic merge engine: `[ñ | ỹ'(o) | ỹ''(o) | w(pz+px)]` in one
+/// contiguous allocation, plus the cluster id when tagged.
+pub struct IvSlot {
+    stats: Box<[f64]>,
+    cluster: u32,
+}
+
+impl CompressedContainer for IvCompressed {
+    fn kind(&self) -> ContainerKind {
+        ContainerKind::Iv
+    }
+
+    fn num_records(&self) -> usize {
+        self.num_groups()
+    }
+
+    fn total_records(&self) -> u64 {
+        self.total_n
+    }
+
+    fn memory_bytes(&self) -> usize {
+        IvCompressed::memory_bytes(self)
+    }
+
+    fn schema_fingerprint(&self) -> u64 {
+        super::core::fingerprint_words(
+            ContainerKind::Iv,
+            &[
+                self.pz as u64,
+                self.px as u64,
+                self.o as u64,
+                self.cluster_of.is_some() as u64,
+            ],
+        )
+    }
+
+    fn to_wire(&self) -> WireContainer {
+        let mut sections = vec![
+            ("features", self.joint.clone()),
+            ("counts", self.counts.clone()),
+            ("sums", self.sums.clone()),
+            ("sumsqs", self.sumsqs.clone()),
+        ];
+        if let Some(cl) = &self.cluster_of {
+            sections.push(("cluster_of", cl.iter().map(|&c| c as f64).collect()));
+        }
+        WireContainer {
+            kind: ContainerKind::Iv,
+            fingerprint: CompressedContainer::schema_fingerprint(self),
+            meta: vec![
+                ("p1", self.pz as u64),
+                ("p2", self.px as u64),
+                ("o", self.o as u64),
+                ("total_n", self.total_n),
+                ("num_clusters", self.num_clusters as u64),
+                ("tagged", self.cluster_of.is_some() as u64),
+            ],
+            sections,
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_arc(
+        self: std::sync::Arc<Self>,
+    ) -> std::sync::Arc<dyn std::any::Any + Send + Sync> {
+        self
+    }
+}
+
+impl SufficientStatistics for IvCompressed {
+    type Slot = IvSlot;
+
+    fn num_slots(&self) -> usize {
+        self.num_groups()
+    }
+
+    fn key_words(&self, g: usize, out: &mut Vec<u64>) {
+        self.key_words_into(g, self.cluster_of.as_ref().map(|c| c[g]), out);
+    }
+
+    fn check_mergeable(&self, other: &Self) -> Result<()> {
+        IvCompressed::check_mergeable(self, other)
+    }
+
+    fn load_slot(&self, g: usize) -> IvSlot {
+        let o = self.o;
+        let mut stats = Vec::with_capacity(1 + 2 * o + self.joint_width());
+        stats.push(self.counts[g]);
+        stats.extend_from_slice(&self.sums[g * o..(g + 1) * o]);
+        stats.extend_from_slice(&self.sumsqs[g * o..(g + 1) * o]);
+        stats.extend_from_slice(self.joint_row(g));
+        IvSlot {
+            stats: stats.into_boxed_slice(),
+            cluster: self.cluster_of.as_ref().map_or(0, |c| c[g]),
+        }
+    }
+
+    fn fold_slot(&self, g: usize, acc: &mut IvSlot) {
+        let o = self.o;
+        acc.stats[0] += self.counts[g];
+        for k in 0..o {
+            acc.stats[1 + k] += self.sums[g * o + k];
+            acc.stats[1 + o + k] += self.sumsqs[g * o + k];
+        }
+    }
+
+    fn assemble(shards: &[Self], slots: Vec<IvSlot>) -> Self {
+        let first = &shards[0];
+        let (pz, px, o) = (first.pz, first.px, first.o);
+        let q = pz + px;
+        let tagged = first.cluster_of.is_some();
+        let g_out = slots.len();
+        let mut joint = Vec::with_capacity(g_out * q);
+        let mut counts = Vec::with_capacity(g_out);
+        let mut sums = Vec::with_capacity(g_out * o);
+        let mut sumsqs = Vec::with_capacity(g_out * o);
+        let mut cluster = Vec::with_capacity(if tagged { g_out } else { 0 });
+        for s in &slots {
+            counts.push(s.stats[0]);
+            sums.extend_from_slice(&s.stats[1..1 + o]);
+            sumsqs.extend_from_slice(&s.stats[1 + o..1 + 2 * o]);
+            joint.extend_from_slice(&s.stats[1 + 2 * o..]);
+            if tagged {
+                cluster.push(s.cluster);
+            }
+        }
+        let total_n = shards.iter().map(|s| s.total_n).sum();
+        let num_clusters = shards.iter().map(|s| s.num_clusters).max().unwrap_or(0);
+        IvCompressed::from_parts(
+            pz,
+            px,
+            o,
+            joint,
+            counts,
+            sums,
+            sumsqs,
+            total_n,
+            tagged.then_some(cluster),
+            num_clusters,
+        )
+    }
+}
+
+/// Streaming builder for [`IvCompressed`] (§7.1).
+///
+/// `push` one observation's instrument row, regressor row, and outcomes
+/// at a time; `finish` yields the compressed records. The pipeline
+/// feeder uses the pre-concatenated [`push_joint`](Self::push_joint)
+/// entry points on its `[z | x]` chunk buffers.
+pub struct IvCompressor {
+    pz: usize,
+    px: usize,
+    o: usize,
+    index: HashMap<FeatureKey, usize, FxHasherBuilder>,
+    joint: Vec<f64>,
+    counts: Vec<f64>,
+    sums: Vec<f64>,
+    sumsqs: Vec<f64>,
+    total_n: u64,
+    tagged: bool,
+    cluster_of: Vec<u32>,
+    max_cluster: u32,
+    scratch: Vec<u64>,
+    joint_buf: Vec<f64>,
+}
+
+impl IvCompressor {
+    /// New compressor for `pz` instruments, `px` regressors, `o` outcomes.
+    pub fn new(pz: usize, px: usize, o: usize) -> Self {
+        IvCompressor {
+            pz,
+            px,
+            o,
+            index: HashMap::with_hasher(FxHasherBuilder),
+            joint: Vec::new(),
+            counts: Vec::new(),
+            sums: Vec::new(),
+            sumsqs: Vec::new(),
+            total_n: 0,
+            tagged: false,
+            cluster_of: Vec::new(),
+            max_cluster: 0,
+            scratch: Vec::new(),
+            joint_buf: Vec::new(),
+        }
+    }
+
+    /// Enable cluster tagging: groups are keyed by (joint row, cluster)
+    /// and remember their cluster for cluster-robust covariances.
+    pub fn with_cluster_tags(mut self) -> Self {
+        self.tagged = true;
+        self
+    }
+
+    /// Add one observation: instrument row + regressor row + outcomes.
+    #[inline]
+    pub fn push(&mut self, z: &[f64], x: &[f64], outcomes: &[f64]) {
+        debug_assert!(!self.tagged, "tagged compressor needs push_clustered");
+        self.concat(z, x);
+        let w = std::mem::take(&mut self.joint_buf);
+        self.push_inner(&w, outcomes, None);
+        self.joint_buf = w;
+    }
+
+    /// Add one observation with its cluster id.
+    #[inline]
+    pub fn push_clustered(&mut self, z: &[f64], x: &[f64], outcomes: &[f64], cluster: u32) {
+        debug_assert!(self.tagged);
+        self.concat(z, x);
+        let w = std::mem::take(&mut self.joint_buf);
+        self.push_inner(&w, outcomes, Some(cluster));
+        self.joint_buf = w;
+    }
+
+    /// Add one observation given its pre-concatenated joint row
+    /// `[z | x]` (the pipeline feeder's layout).
+    #[inline]
+    pub fn push_joint(&mut self, joint: &[f64], outcomes: &[f64]) {
+        debug_assert!(!self.tagged, "tagged compressor needs push_joint_clustered");
+        self.push_inner(joint, outcomes, None);
+    }
+
+    /// Clustered twin of [`push_joint`](Self::push_joint).
+    #[inline]
+    pub fn push_joint_clustered(&mut self, joint: &[f64], outcomes: &[f64], cluster: u32) {
+        debug_assert!(self.tagged);
+        self.push_inner(joint, outcomes, Some(cluster));
+    }
+
+    #[inline]
+    fn concat(&mut self, z: &[f64], x: &[f64]) {
+        debug_assert_eq!(z.len(), self.pz);
+        debug_assert_eq!(x.len(), self.px);
+        self.joint_buf.clear();
+        self.joint_buf.extend_from_slice(z);
+        self.joint_buf.extend_from_slice(x);
+    }
+
+    #[inline]
+    fn push_inner(&mut self, joint: &[f64], outcomes: &[f64], cluster: Option<u32>) {
+        debug_assert_eq!(joint.len(), self.pz + self.px);
+        debug_assert_eq!(outcomes.len(), self.o);
+        super::key::canonicalize_into(joint, &mut self.scratch);
+        if let Some(c) = cluster {
+            self.scratch.push((c as f64).to_bits());
+        }
+        let o = self.o;
+        let g = match self.index.get(self.scratch.as_slice()) {
+            Some(&g) => g,
+            None => {
+                let g = self.counts.len();
+                self.joint.extend_from_slice(joint);
+                self.counts.push(0.0);
+                self.sums.extend(std::iter::repeat(0.0).take(o));
+                self.sumsqs.extend(std::iter::repeat(0.0).take(o));
+                if let Some(c) = cluster {
+                    self.cluster_of.push(c);
+                    self.max_cluster = self.max_cluster.max(c);
+                }
+                self.index.insert(FeatureKey::from_words(&self.scratch), g);
+                g
+            }
+        };
+        self.counts[g] += 1.0;
+        for (k, &y) in outcomes.iter().enumerate() {
+            self.sums[g * o + k] += y;
+            self.sumsqs[g * o + k] += y * y;
+        }
+        self.total_n += 1;
+    }
+
+    /// Number of groups so far.
+    pub fn num_groups(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Finalize into [`IvCompressed`].
+    pub fn finish(self) -> IvCompressed {
+        let num_clusters = if self.tagged && !self.counts.is_empty() {
+            self.max_cluster as usize + 1
+        } else {
+            0
+        };
+        IvCompressed::from_parts(
+            self.pz,
+            self.px,
+            self.o,
+            self.joint,
+            self.counts,
+            self.sums,
+            self.sumsqs,
+            self.total_n,
+            self.tagged.then_some(self.cluster_of),
+            num_clusters,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random f64 with a full-precision mantissa.
+    fn pseudo(i: usize) -> f64 {
+        let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xabcd);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+    }
+
+    fn rows(n: usize) -> Vec<(Vec<f64>, Vec<f64>, f64)> {
+        (0..n)
+            .map(|i| {
+                let z = vec![1.0, (i % 3) as f64];
+                let x = vec![1.0, (i % 4) as f64];
+                (z, x, pseudo(i))
+            })
+            .collect()
+    }
+
+    fn shards_of(rows: &[(Vec<f64>, Vec<f64>, f64)], k: usize) -> Vec<IvCompressed> {
+        let mut cs: Vec<IvCompressor> = (0..k).map(|_| IvCompressor::new(2, 2, 1)).collect();
+        for (i, (z, x, y)) in rows.iter().enumerate() {
+            cs[i % k].push(z, x, &[*y]);
+        }
+        cs.into_iter().map(|c| c.finish()).collect()
+    }
+
+    fn left_fold(shards: &[IvCompressed]) -> IvCompressed {
+        let mut acc = shards[0].clone();
+        for s in &shards[1..] {
+            acc.merge(s).unwrap();
+        }
+        acc
+    }
+
+    fn assert_bytes_eq(a: &IvCompressed, b: &IvCompressed) {
+        assert_eq!((a.pz, a.px, a.o), (b.pz, b.px, b.o));
+        assert_eq!(a.total_n, b.total_n);
+        assert_eq!(a.num_clusters, b.num_clusters);
+        assert_eq!(a.cluster_of, b.cluster_of);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.joint), bits(&b.joint));
+        assert_eq!(bits(&a.counts), bits(&b.counts));
+        assert_eq!(bits(&a.sums), bits(&b.sums));
+        assert_eq!(bits(&a.sumsqs), bits(&b.sumsqs));
+    }
+
+    #[test]
+    fn groups_by_joint_row() {
+        // 3 × 4 joint cells over 120 rows: 12 groups, exact totals.
+        let rows = rows(120);
+        let mut c = IvCompressor::new(2, 2, 1);
+        for (z, x, y) in &rows {
+            c.push(z, x, &[*y]);
+        }
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 12);
+        assert_eq!(d.total_n(), 120);
+        assert_eq!(d.counts().iter().sum::<f64>(), 120.0);
+        assert_eq!(d.z_row(0), &[1.0, 0.0]);
+        assert_eq!(d.x_row(0), &[1.0, 0.0]);
+        assert!(d.compression_ratio() > 9.0);
+    }
+
+    #[test]
+    fn same_x_different_z_stays_separate() {
+        // The key is the JOINT row: conditioning on x alone would break
+        // the Z'y cross-moment.
+        let mut c = IvCompressor::new(1, 1, 1);
+        c.push(&[0.0], &[1.0], &[1.0]);
+        c.push(&[1.0], &[1.0], &[2.0]);
+        let d = c.finish();
+        assert_eq!(d.num_groups(), 2);
+    }
+
+    #[test]
+    fn merge_many_byte_identical_to_left_fold() {
+        let rows = rows(400);
+        for k in [2usize, 3, 8] {
+            let mut shards = shards_of(&rows, k);
+            let mut rng = crate::util::rng::Rng::seed_from_u64(77 + k as u64);
+            for i in (1..shards.len()).rev() {
+                shards.swap(i, rng.below(i + 1));
+            }
+            let folded = left_fold(&shards);
+            for threads in [1usize, 4] {
+                let parallel = IvCompressed::merge_many(&shards, threads).unwrap();
+                assert_bytes_eq(&parallel, &folded);
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_merge_and_offset() {
+        let mut shards = Vec::new();
+        for sh in 0..3usize {
+            let mut c = IvCompressor::new(2, 1, 1).with_cluster_tags();
+            for i in 0..150 {
+                let cl = (i % 8) as u32;
+                c.push_clustered(
+                    &[1.0, (i % 3) as f64],
+                    &[(cl % 2) as f64],
+                    &[pseudo(i + 1000 * sh)],
+                    cl,
+                );
+            }
+            shards.push(c.finish());
+        }
+        let parallel = IvCompressed::merge_many(&shards, 4).unwrap();
+        assert_bytes_eq(&parallel, &left_fold(&shards));
+        assert!(parallel.cluster_of().is_some());
+        assert_eq!(parallel.num_clusters(), 8);
+
+        let shifted = shards[0].clone().offset_clusters(5);
+        assert_eq!(shifted.num_clusters(), 13);
+        assert!(shifted.cluster_of().unwrap().iter().all(|&c| c >= 5));
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_shapes_and_tagging() {
+        let a = IvCompressor::new(2, 2, 1).finish();
+        let b = IvCompressor::new(2, 3, 1).finish();
+        assert!(a.clone().merge(&b).is_err());
+        assert!(IvCompressed::merge_many(&[a.clone(), b], 4).is_err());
+        let tagged = IvCompressor::new(2, 2, 1).with_cluster_tags().finish();
+        assert!(IvCompressed::merge_many(&[a, tagged], 4).is_err());
+        assert!(IvCompressed::merge_many(&[], 4).is_err());
+    }
+
+    #[test]
+    fn wire_form_roundtrips_shape() {
+        let rows = rows(60);
+        let mut c = IvCompressor::new(2, 2, 1);
+        for (z, x, y) in &rows {
+            c.push(z, x, &[*y]);
+        }
+        let d = c.finish();
+        let w = CompressedContainer::to_wire(&d);
+        assert_eq!(w.kind, ContainerKind::Iv);
+        assert_eq!(w.meta_u64("p1"), Some(2));
+        assert_eq!(w.meta_u64("p2"), Some(2));
+        assert_eq!(w.meta_u64("total_n"), Some(60));
+        assert_eq!(w.section("features").unwrap().len(), d.num_groups() * 4);
+        let j = crate::util::json::parse(&w.to_json().to_string()).unwrap();
+        let back = WireContainer::from_json(&j).unwrap();
+        assert_eq!(back, w);
+    }
+}

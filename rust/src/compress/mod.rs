@@ -10,6 +10,7 @@
 //! | §5.3.3 static-feature | [`ClusterStaticCompressor`] | yes (clustered) | yes |
 //! | §5.3.3 balanced panel | [`BalancedPanelCompressor`] | yes (clustered) | yes |
 //! | §6 binning | [`binning`] | (changes the model) | — |
+//! | §7.1 IV / 2SLS | [`IvCompressor`] | yes (conditionally) | yes |
 //! | §7.2 other weights | [`WeightedSuffStatsCompressor`] | yes | yes |
 //!
 //! All compressors are **streaming folds** (push one record at a time)
@@ -26,6 +27,7 @@ mod cluster_within;
 pub mod core;
 mod fweight;
 mod groups;
+mod iv;
 mod key;
 mod sufficient;
 mod weighted;
@@ -40,6 +42,7 @@ pub use self::core::{
 };
 pub use fweight::{FWeightCompressed, FWeightCompressor};
 pub use groups::{GroupMeansCompressed, GroupMeansCompressor};
+pub use iv::{IvCompressed, IvCompressor};
 pub use key::{hash_row, FeatureKey, FxHasherBuilder};
 pub use sufficient::{CompressedData, ShardMerger, SuffStatsCompressor};
 pub use weighted::{WeightedCompressedData, WeightedSuffStatsCompressor};

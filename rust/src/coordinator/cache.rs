@@ -165,6 +165,12 @@ impl YocoStore {
         let mode = match strategy {
             Strategy::SuffStats => PipelineMode::SuffStats,
             Strategy::WithinCluster => PipelineMode::WithinCluster,
+            // Tag clusters whenever the dataset has a Cluster column so
+            // ONE compression serves both homoskedastic and
+            // cluster-robust 2SLS requests (the YOCO property).
+            Strategy::Iv => PipelineMode::Iv {
+                clustered: projected.schema().cluster_index().is_some(),
+            },
         };
         let pipe = Pipeline::new(self.pipeline_cfg.clone(), mode)
             .with_metrics(self.pipeline_metrics.clone())
@@ -202,7 +208,8 @@ impl YocoStore {
 }
 
 /// Build the projection batch the pipeline consumes: chosen features (in
-/// request order) + ALL outcomes (+ cluster column for within-cluster).
+/// request order) + ALL outcomes (+ cluster column for within-cluster,
+/// + instrument columns — and the cluster column when present — for IV).
 fn project_for(batch: &Batch, features: &[String], strategy: Strategy) -> Result<Batch> {
     use crate::data::ColumnRole;
     let schema = batch.schema();
@@ -212,6 +219,18 @@ fn project_for(batch: &Batch, features: &[String], strategy: Strategy) -> Result
             .cluster_index()
             .ok_or_else(|| YocoError::invalid("within-cluster needs a Cluster column"))?;
         cols.push((schema.names()[ci].as_str(), ColumnRole::Cluster));
+    }
+    if strategy == Strategy::Iv {
+        if let Some(ci) = schema.cluster_index() {
+            cols.push((schema.names()[ci].as_str(), ColumnRole::Cluster));
+        }
+        let zi = schema.instrument_indices();
+        if zi.is_empty() {
+            return Err(YocoError::invalid("IV estimation requires Instrument-role columns"));
+        }
+        for z in zi {
+            cols.push((schema.names()[z].as_str(), ColumnRole::Instrument));
+        }
     }
     for f in features {
         cols.push((f.as_str(), ColumnRole::Feature));
@@ -303,6 +322,31 @@ mod tests {
         assert_eq!(snap.counter("pipeline_rows_in_total"), Some(2000));
         assert!(snap.histogram("pipeline_chunk_fold_us").unwrap().count > 0);
         assert_eq!(snap.histogram("pipeline_merge_us").unwrap().count, 1);
+    }
+
+    #[test]
+    fn iv_strategy_cached_as_trait_object_with_cluster_tags() {
+        use crate::compress::IvCompressed;
+        use crate::data::gen::{generate_iv, IvConfig};
+        let s = store();
+        let batch = generate_iv(&IvConfig { n: 2000, clusters: 5, ..Default::default() });
+        s.register("iv", batch);
+        let feats: Vec<String> = vec!["const".into(), "x".into()];
+        let (c1, hit1) = s
+            .compressed_container_traced("iv", &feats, Strategy::Iv, &Trace::disabled())
+            .unwrap();
+        assert!(!hit1);
+        let d = c1.as_any_arc().downcast::<IvCompressed>().unwrap();
+        assert_eq!(d.num_instruments(), 2);
+        assert_eq!(d.num_regressors(), 2);
+        assert_eq!(d.total_n(), 2000);
+        assert!(d.cluster_of().is_some(), "cluster column present ⇒ tagged");
+        let (_, hit2) = s
+            .compressed_container_traced("iv", &feats, Strategy::Iv, &Trace::disabled())
+            .unwrap();
+        assert!(hit2, "one compression serves every later IV request");
+        // The typed suffstats read refuses to hand back an IV container.
+        assert!(s.compressed("iv", &feats, Strategy::Iv).is_err());
     }
 
     #[test]

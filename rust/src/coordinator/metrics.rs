@@ -85,25 +85,40 @@ impl CoordinatorMetrics {
     /// Get-or-mint `coordinator_request_us{dataset="…"}` for one
     /// dataset, collapsing into the `other` label past the cardinality
     /// cap.
+    ///
+    /// The cap check and the slot claim form ONE critical section
+    /// (`Entry`-based get-or-insert under the map lock), so two threads
+    /// racing distinct new datasets at the `MAX_DATASET_LABELS` boundary
+    /// can never both claim the last slot and push the labeled-series
+    /// count past the cap: exactly one wins the slot, the loser lands in
+    /// `other`. Minting `other` happens after the lock drops — it never
+    /// consumes a slot and never nests the registry lock inside the map
+    /// lock on the overflow path.
     fn dataset_histogram(&self, dataset: &str) -> Arc<Histogram> {
-        let mut map = self.dataset_request_us.lock().unwrap();
-        if let Some(h) = map.get(dataset) {
-            return h.clone();
+        {
+            let mut map = self.dataset_request_us.lock().unwrap();
+            if let Some(h) = map.get(dataset) {
+                return h.clone();
+            }
+            if map.len() < MAX_DATASET_LABELS {
+                // Keep the label a valid Prometheus value: no quotes,
+                // escapes, or newlines survive into the series name.
+                let safe: String = dataset
+                    .chars()
+                    .map(|c| if c == '"' || c == '\\' || c == '\n' { '_' } else { c })
+                    .collect();
+                let registry = &self.registry;
+                return map
+                    .entry(dataset.to_string())
+                    .or_insert_with(|| {
+                        registry.histogram(&format!(
+                            "coordinator_request_us{{dataset=\"{safe}\"}}"
+                        ))
+                    })
+                    .clone();
+            }
         }
-        if map.len() >= MAX_DATASET_LABELS {
-            return self.registry.histogram("coordinator_request_us{dataset=\"other\"}");
-        }
-        // Keep the label a valid Prometheus value: no quotes, escapes,
-        // or newlines survive into the series name.
-        let safe: String = dataset
-            .chars()
-            .map(|c| if c == '"' || c == '\\' || c == '\n' { '_' } else { c })
-            .collect();
-        let h = self
-            .registry
-            .histogram(&format!("coordinator_request_us{{dataset=\"{safe}\"}}"));
-        map.insert(dataset.to_string(), h.clone());
-        h
+        self.registry.histogram("coordinator_request_us{dataset=\"other\"}")
     }
 
     /// Record one failed request.
@@ -254,5 +269,60 @@ mod tests {
         let s = reg.snapshot();
         let other = s.histogram("coordinator_request_us{dataset=\"other\"}").unwrap();
         assert_eq!(other.count as usize, 8, "3 labels used before the sweep");
+    }
+
+    #[test]
+    fn label_slot_claiming_is_atomic_at_the_cardinality_boundary() {
+        let reg = MetricsRegistry::shared();
+        let m = CoordinatorMetrics::with_registry(&reg);
+        // More racing datasets than slots: every thread tries to claim a
+        // fresh label at once, straddling the boundary.
+        let total = MAX_DATASET_LABELS + 16;
+        std::thread::scope(|s| {
+            for t in 0..total {
+                let m = &m;
+                s.spawn(move || m.record(&format!("d{t}"), "native", 10));
+            }
+        });
+        let snap = reg.snapshot();
+        let labeled: Vec<usize> = (0..total)
+            .filter(|t| {
+                snap.histogram(&format!("coordinator_request_us{{dataset=\"d{t}\"}}"))
+                    .is_some()
+            })
+            .collect();
+        assert_eq!(
+            labeled.len(),
+            MAX_DATASET_LABELS,
+            "exactly the cap's worth of labels may mint, never more"
+        );
+        // Every record landed somewhere: the labeled series hold one
+        // observation each, `other` absorbed the rest, the unlabeled
+        // base histogram saw all of them.
+        for t in &labeled {
+            let h = snap
+                .histogram(&format!("coordinator_request_us{{dataset=\"d{t}\"}}"))
+                .unwrap();
+            assert_eq!(h.count, 1);
+        }
+        let other = snap.histogram("coordinator_request_us{dataset=\"other\"}").unwrap();
+        assert_eq!(other.count as usize, total - MAX_DATASET_LABELS);
+        assert_eq!(snap.histogram("coordinator_request_us").unwrap().count as usize, total);
+        // Hammering ONE already-claimed dataset from many threads stays
+        // on its single series.
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = &m;
+                s.spawn(move || m.record("d0", "native", 10));
+            }
+        });
+        let snap = reg.snapshot();
+        let labeled_after: usize = (0..total)
+            .filter(|t| {
+                snap.histogram(&format!("coordinator_request_us{{dataset=\"d{t}\"}}"))
+                    .is_some()
+            })
+            .count();
+        assert_eq!(labeled_after, MAX_DATASET_LABELS, "no new labels after the cap");
     }
 }

@@ -26,6 +26,9 @@ pub enum Strategy {
     SuffStats,
     /// §5.3.1 within-cluster sufficient statistics.
     WithinCluster,
+    /// §7.1 IV / 2SLS conditionally sufficient statistics keyed by the
+    /// joint `[z | x]` row (cluster-tagged when the covariance needs it).
+    Iv,
 }
 
 impl Strategy {
@@ -36,17 +39,20 @@ impl Strategy {
         match self {
             Strategy::SuffStats => "suffstats",
             Strategy::WithinCluster => "within_cluster",
+            Strategy::Iv => "iv",
         }
     }
 
-    /// The container family member this strategy produces. Both
-    /// coordinator strategies today resolve to the §4 sufficient-
-    /// statistics container (within-cluster is the §5.3.1 cluster-tagged
-    /// variant); strategy → container → estimator dispatch all reads
-    /// from the single [`core`](crate::compress::core) registry.
+    /// The container family member this strategy produces. The two WLS
+    /// strategies resolve to the §4 sufficient-statistics container
+    /// (within-cluster is the §5.3.1 cluster-tagged variant); the IV
+    /// strategy resolves to the §7.1 container. Strategy → container →
+    /// estimator dispatch all reads from the single
+    /// [`core`](crate::compress::core) registry.
     pub fn container_kind(self) -> ContainerKind {
         match self {
             Strategy::SuffStats | Strategy::WithinCluster => ContainerKind::SuffStats,
+            Strategy::Iv => ContainerKind::Iv,
         }
     }
 
@@ -118,6 +124,19 @@ pub fn plan(
     }
 
     let strategy = match (req.estimator, req.covariance) {
+        (EstimatorKind::Iv, cov) => {
+            if schema.instrument_indices().is_empty() {
+                return Err(YocoError::invalid(
+                    "IV estimation requires Instrument-role columns",
+                ));
+            }
+            if cov == CovarianceKind::ClusterRobust && schema.cluster_index().is_none() {
+                return Err(YocoError::invalid(
+                    "cluster-robust covariance requires a Cluster column",
+                ));
+            }
+            Strategy::Iv
+        }
         (EstimatorKind::Wls, CovarianceKind::ClusterRobust) => {
             if schema.cluster_index().is_none() {
                 return Err(YocoError::invalid(
@@ -128,6 +147,21 @@ pub fn plan(
         }
         _ => Strategy::SuffStats,
     };
+
+    // No PJRT graph exists for the IV family; it always runs native.
+    if strategy == Strategy::Iv {
+        if req.engine == EnginePref::Pjrt {
+            return Err(YocoError::runtime(
+                "IV/2SLS has no PJRT artifact; use engine auto or native",
+            ));
+        }
+        return Ok(Plan {
+            strategy,
+            engine: PlannedEngine::Native,
+            features,
+            outcome: req.outcome.clone(),
+        });
+    }
 
     let fits_bucket = pick_bucket(estimated_g, features.len()).is_some();
     let engine = match req.engine {
@@ -195,6 +229,38 @@ mod tests {
             assert_eq!(spec.estimator, crate::estimator::estimator_for(s.container_kind()));
             assert!(spec.keyed);
         }
+    }
+
+    #[test]
+    fn iv_routes_to_its_own_strategy_and_stays_native() {
+        let s = Schema::new(vec![
+            ("user".into(), ColumnRole::Cluster),
+            ("z_const".into(), ColumnRole::Instrument),
+            ("z".into(), ColumnRole::Instrument),
+            ("const".into(), ColumnRole::Feature),
+            ("x".into(), ColumnRole::Feature),
+            ("y0".into(), ColumnRole::Outcome),
+        ]);
+        let req = AnalysisRequest::wls("d", "y0").iv();
+        let p = plan(&req, &s, true, 100).unwrap();
+        assert_eq!(p.strategy, Strategy::Iv);
+        assert_eq!(p.engine, PlannedEngine::Native, "no PJRT artifact for IV");
+        assert_eq!(p.strategy.container_kind(), ContainerKind::Iv);
+        assert_eq!(p.strategy.container_spec().estimator, "iv_2sls");
+        // Forcing PJRT is a structured error, not a silent fallback.
+        let forced = req.clone().with_engine(EnginePref::Pjrt);
+        assert!(plan(&forced, &s, true, 100).is_err());
+        // No Instrument columns ⇒ rejected.
+        assert!(plan(&req, &schema(), false, 100).is_err());
+        // Cluster-robust IV needs a Cluster column.
+        let cr = req.with_covariance(crate::estimator::CovarianceKind::ClusterRobust);
+        assert!(plan(&cr, &s, false, 100).is_ok());
+        let s_nocluster = Schema::new(vec![
+            ("z".into(), ColumnRole::Instrument),
+            ("x".into(), ColumnRole::Feature),
+            ("y0".into(), ColumnRole::Outcome),
+        ]);
+        assert!(plan(&cr, &s_nocluster, false, 100).is_err());
     }
 
     #[test]

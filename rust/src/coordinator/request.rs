@@ -10,6 +10,9 @@ pub enum EstimatorKind {
     Wls,
     /// Logistic regression (binary outcome).
     Logistic,
+    /// Two-stage least squares over §7.1 conditionally sufficient
+    /// statistics (requires Instrument-role columns).
+    Iv,
 }
 
 /// One analysis request against a registered dataset.
@@ -58,6 +61,13 @@ impl AnalysisRequest {
     /// Builder: request logistic regression.
     pub fn logistic(mut self) -> Self {
         self.estimator = EstimatorKind::Logistic;
+        self
+    }
+
+    /// Builder: request IV / 2SLS (instruments come from the dataset
+    /// schema's Instrument-role columns).
+    pub fn iv(mut self) -> Self {
+        self.estimator = EstimatorKind::Iv;
         self
     }
 

@@ -16,8 +16,8 @@ use std::time::Instant;
 
 use crate::error::{Result, YocoError};
 use crate::estimator::{
-    fit_logistic_suffstats_observed, fit_wls_suffstats_observed, CovarianceKind, FitObs,
-    LogisticOptions,
+    fit_iv_2sls_observed, fit_logistic_suffstats_observed, fit_wls_suffstats_observed,
+    CovarianceKind, FitObs, LogisticOptions,
 };
 use crate::fault::{self, FaultInjector, InjectionPoint, RetryPolicy};
 use crate::obs::{Obs, Trace};
@@ -203,6 +203,13 @@ impl Coordinator {
             plan(req, &schema, self.runtime.is_some(), est_g.min(65536))?
         };
 
+        // IV requests read the §7.1 container from the cache as a trait
+        // object (the typed path below downcasts to the §4 container),
+        // so they branch before the suffstats-typed read.
+        if req.estimator == EstimatorKind::Iv {
+            return self.analyze_iv(req, trace, plan, start);
+        }
+
         let (data, cache_hit) = {
             let _compress_span = trace.span("compress");
             self.store.compressed_traced(&req.dataset, &plan.features, plan.strategy, trace)?
@@ -355,6 +362,69 @@ impl Coordinator {
             elapsed_us,
         })
     }
+
+    /// Serve one IV / 2SLS request: cached §7.1 container → native
+    /// two-stage fit (no PJRT artifact exists for this family, so the
+    /// dispatch is always `native iv` — still under the resilient-retry
+    /// harness and the `coordinator_engine_dispatch_us` histogram).
+    fn analyze_iv(
+        &self,
+        req: &AnalysisRequest,
+        trace: &Trace,
+        plan: super::planner::Plan,
+        start: Instant,
+    ) -> Result<AnalysisResponse> {
+        let (container, cache_hit) = {
+            let _compress_span = trace.span("compress");
+            self.store.compressed_container_traced(
+                &req.dataset,
+                &plan.features,
+                plan.strategy,
+                trace,
+            )?
+        };
+        let data = container
+            .as_any_arc()
+            .downcast::<crate::compress::IvCompressed>()
+            .map_err(|_| {
+                YocoError::invalid("cached container for the IV strategy has the wrong kind")
+            })?;
+
+        let outcome_names = self.store.outcome_names(&req.dataset)?;
+        let outcome_idx = outcome_names
+            .iter()
+            .position(|n| n == &plan.outcome)
+            .ok_or_else(|| YocoError::NotFound {
+                what: format!("outcome column '{}' (must have Outcome role)", plan.outcome),
+            })?;
+
+        let fit = self.call_engine_resilient("native iv", trace, || {
+            fit_iv_2sls_observed(&data, outcome_idx, req.covariance, &self.kernel_obs)
+        })?;
+
+        let se = fit.se();
+        let t_stats = fit.t_stats();
+        let elapsed_us = start.elapsed().as_micros();
+        self.metrics.record(&req.dataset, "native", elapsed_us);
+        Ok(AnalysisResponse {
+            beta: fit.beta,
+            se,
+            t_stats,
+            feature_names: plan.features,
+            sigma2: if req.covariance == CovarianceKind::Homoskedastic {
+                fit.sigma2
+            } else {
+                None
+            },
+            n: fit.n,
+            records_used: fit.records_used,
+            clusters: fit.clusters,
+            engine_used: "native",
+            strategy: plan.strategy.name(),
+            cache_hit,
+            elapsed_us,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -451,6 +521,39 @@ mod tests {
             c.analyze(&AnalysisRequest::wls("xp", "y0").logistic()).unwrap();
         assert_eq!(resp.engine_used, "native");
         assert!(resp.beta.iter().all(|b| b.is_finite()));
+    }
+
+    #[test]
+    fn iv_request_end_to_end() {
+        use crate::data::gen::{generate_iv, IvConfig};
+        let c = coordinator();
+        let batch = generate_iv(&IvConfig { n: 3000, clusters: 6, ..Default::default() });
+        c.store().register("ivd", batch);
+        let req = AnalysisRequest::wls("ivd", "y0").iv();
+        let resp = c.analyze(&req).unwrap();
+        assert_eq!(resp.strategy, "iv");
+        assert_eq!(resp.engine_used, "native");
+        assert_eq!(resp.n, 3000);
+        assert!(resp.records_used < 3000, "joint cells must compress");
+        assert!(!resp.cache_hit);
+        assert!(resp.sigma2.unwrap() > 0.0);
+        // The structural effect of x is 2.0; 2SLS recovers it despite
+        // the confounder that would bias OLS.
+        let xi = resp.feature_names.iter().position(|f| f == "x").unwrap();
+        assert!((resp.beta[xi] - 2.0).abs() < 0.2, "b_x={}", resp.beta[xi]);
+        // Cluster-robust on the same dataset reuses the SAME compression
+        // (the container carries cluster tags from the start — YOCO).
+        let resp2 = c
+            .analyze(&req.clone().with_covariance(CovarianceKind::ClusterRobust))
+            .unwrap();
+        assert!(resp2.cache_hit, "covariance change must not recompress");
+        assert_eq!(resp2.clusters, Some(6));
+        assert!(resp2.sigma2.is_none());
+        // The IV dispatch is traced and counted like any other engine.
+        let traces = c.obs().tracer().recent(1);
+        let names: Vec<_> = traces[0].spans.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"native iv"), "{names:?}");
+        assert_eq!(c.metrics().requests, 2);
     }
 
     #[test]

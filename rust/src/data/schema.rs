@@ -9,6 +9,8 @@ pub enum ColumnRole {
     Outcome,
     /// Cluster identifier (e.g. user id) for cluster-robust covariances.
     Cluster,
+    /// An instrument (a column of Z) for IV / 2SLS estimation — §7.1.
+    Instrument,
     /// Observation weight (analytic / probability / importance — §7.2).
     Weight,
     /// Carried through but not modeled (e.g. timestamps kept for audit).
@@ -85,6 +87,11 @@ impl Schema {
         self.indices_with_role(ColumnRole::Outcome)
     }
 
+    /// Indices of the instrument columns (IV / 2SLS).
+    pub fn instrument_indices(&self) -> Vec<usize> {
+        self.indices_with_role(ColumnRole::Instrument)
+    }
+
     /// Index of the (single) cluster column, if present.
     pub fn cluster_index(&self) -> Option<usize> {
         self.indices_with_role(ColumnRole::Cluster).first().copied()
@@ -123,6 +130,18 @@ mod tests {
         assert_eq!(s.cluster_index(), Some(0));
         assert_eq!(s.weight_index(), Some(3));
         assert_eq!(s.indices_with_role(ColumnRole::Metadata), vec![4]);
+    }
+
+    #[test]
+    fn instrument_role_lookup() {
+        let s = Schema::new(vec![
+            ("z0".into(), ColumnRole::Instrument),
+            ("z1".into(), ColumnRole::Instrument),
+            ("x0".into(), ColumnRole::Feature),
+            ("y0".into(), ColumnRole::Outcome),
+        ]);
+        assert_eq!(s.instrument_indices(), vec![0, 1]);
+        assert_eq!(s.feature_indices(), vec![2]);
     }
 
 }

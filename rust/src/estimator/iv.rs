@@ -1,0 +1,509 @@
+//! §7.1 — two-stage least squares on conditionally sufficient
+//! statistics.
+//!
+//! With `W = [Z | X]`, every 2SLS quantity is a function of the stacked
+//! moments `WᵀW` and `Wᵀy` (plus `yᵀy` for residual variances):
+//!
+//!   Γ̂  = (ZᵀZ)⁻¹ ZᵀX                      (first stage)
+//!   β̂  = (Γ̂ᵀZᵀX)⁻¹ Γ̂ᵀZᵀy = (X̂ᵀX̂)⁻¹ X̂ᵀy    (second stage)
+//!   V̂  = σ̂²(X̂ᵀX̂)⁻¹,  σ̂² = RSS/(n−p),  RSS = yᵀy − 2β̂ᵀXᵀy + β̂ᵀXᵀXβ̂
+//!   Ξ̂_NW = Σ_c v_c v_cᵀ,  v_c = Γ̂ᵀ(Zᵀy − ZᵀX β̂)|_c   (cluster-robust)
+//!
+//! All of those moments are exactly recoverable from [`IvCompressed`]
+//! (groups keyed on the joint `[z | x]` row carrying `(ñ, ỹ', ỹ'')`), so
+//! the compressed fit and the row-level fit share one post-moment code
+//! path ([`fit_iv_core`]) — the only difference is *which storage the
+//! moment sweep streams*, which is why the property tests can pin
+//! `to_bits` equality on exactly-summable inputs.
+//!
+//! EHW/HC0 (§5.2) is not offered here: this estimator family covers the
+//! classical and cluster-robust covariances named in the paper's §7.1
+//! extension.
+
+use super::fit::{cr1_factor, CovarianceKind, Fit};
+use super::kernels::{dot, gram_iv_wtww_wty, normal_equations};
+use super::observe::FitObs;
+use crate::compress::IvCompressed;
+use crate::error::{Result, YocoError};
+use crate::linalg::{matmul, matvec, outer_product_accumulate, sandwich, Cholesky, Matrix};
+
+/// Everything [`fit_iv_core`] needs, detached from the storage that
+/// produced it. The compressed and row-level paths build this struct
+/// and then share every remaining floating-point operation.
+struct IvMoments {
+    pz: usize,
+    px: usize,
+    /// `Wᵀ diag(ñ) W`, `(pz+px) × (pz+px)`.
+    ww: Matrix,
+    /// `Wᵀ ỹ'`, length `pz+px` (`Zᵀy` then `Xᵀy`).
+    wy: Vec<f64>,
+    /// `yᵀy = Σ_g ỹ''_g`.
+    yy: f64,
+    n: u64,
+    records_used: usize,
+    /// Per-cluster `Zᵀy` (C × pz) and `ZᵀX` (C × pz × px), built only
+    /// for cluster-robust fits.
+    clusters: Option<ClusterMoments>,
+}
+
+struct ClusterMoments {
+    c_count: usize,
+    zy: Vec<f64>,
+    zx: Vec<f64>,
+}
+
+/// Fit 2SLS for `outcome` from §7.1 conditionally sufficient statistics.
+/// `ClusterRobust` requires a cluster-tagged compression.
+pub fn fit_iv_2sls(
+    data: &IvCompressed,
+    outcome: usize,
+    kind: CovarianceKind,
+) -> Result<Fit> {
+    fit_iv_core(moments_from_compressed(data, outcome, kind, None)?, kind)
+}
+
+/// [`fit_iv_2sls`] recording the fused stacked-gram kernel's wall time
+/// into `obs.gram_us`. Identical numerics; the coordinator uses this
+/// entry point.
+pub fn fit_iv_2sls_observed(
+    data: &IvCompressed,
+    outcome: usize,
+    kind: CovarianceKind,
+    obs: &FitObs,
+) -> Result<Fit> {
+    fit_iv_core(moments_from_compressed(data, outcome, kind, Some(obs))?, kind)
+}
+
+/// Row-level 2SLS oracle: `z`/`x` are `n × pz` / `n × px` observation
+/// matrices, `y` the outcome, `clusters` dense cluster ids (required for
+/// `ClusterRobust`). Builds the same [`IvMoments`] as the compressed
+/// path — on exactly-summable inputs the two fits agree to the bit.
+pub fn fit_iv_rows(
+    z: &Matrix,
+    x: &Matrix,
+    y: &[f64],
+    kind: CovarianceKind,
+    clusters: Option<&[u32]>,
+) -> Result<Fit> {
+    let n = z.rows();
+    if x.rows() != n || y.len() != n {
+        return Err(YocoError::shape(format!(
+            "iv rows mismatch: z has {n} rows, x {}, y {}",
+            x.rows(),
+            y.len()
+        )));
+    }
+    let (pz, px) = (z.cols(), x.cols());
+    let q = pz + px;
+    let mut w = Vec::with_capacity(n * q);
+    for i in 0..n {
+        w.extend_from_slice(z.row(i));
+        w.extend_from_slice(x.row(i));
+    }
+    let (ww, wy) = normal_equations(&w, q, |_| 1.0, |i| y[i]);
+    let mut yy = 0.0;
+    for &v in y {
+        yy += v * v;
+    }
+    let cluster_moments = if kind == CovarianceKind::ClusterRobust {
+        let tags = clusters.ok_or_else(|| {
+            YocoError::invalid("ClusterRobust needs cluster ids for the row-level fit")
+        })?;
+        if tags.len() != n {
+            return Err(YocoError::shape(format!(
+                "iv rows mismatch: {} cluster ids for {n} rows",
+                tags.len()
+            )));
+        }
+        let c_count = tags.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
+        let mut zy = vec![0.0; c_count * pz];
+        let mut zx = vec![0.0; c_count * pz * px];
+        for i in 0..n {
+            let c = tags[i] as usize;
+            accumulate_cluster_row(
+                &mut zy[c * pz..(c + 1) * pz],
+                &mut zx[c * pz * px..(c + 1) * pz * px],
+                z.row(i),
+                x.row(i),
+                y[i],
+                1.0,
+            );
+        }
+        Some(ClusterMoments { c_count, zy, zx })
+    } else {
+        None
+    };
+    fit_iv_core(
+        IvMoments {
+            pz,
+            px,
+            ww,
+            wy,
+            yy,
+            n: n as u64,
+            records_used: n,
+            clusters: cluster_moments,
+        },
+        kind,
+    )
+}
+
+/// One record's contribution to a cluster's `Zᵀy` / `ZᵀX` blocks: for a
+/// compressed group, `sy = ỹ'_g` and `weight = ñ_g`; for a raw row,
+/// `sy = yᵢ` and `weight = 1`. Shared so both paths add the same field
+/// order.
+#[inline]
+fn accumulate_cluster_row(
+    zy: &mut [f64],
+    zx: &mut [f64],
+    z: &[f64],
+    x: &[f64],
+    sy: f64,
+    weight: f64,
+) {
+    let px = x.len();
+    for (a, &za) in z.iter().enumerate() {
+        zy[a] += za * sy;
+        let za_w = weight * za;
+        let row = &mut zx[a * px..(a + 1) * px];
+        for (b, &xb) in x.iter().enumerate() {
+            row[b] += za_w * xb;
+        }
+    }
+}
+
+fn moments_from_compressed(
+    data: &IvCompressed,
+    outcome: usize,
+    kind: CovarianceKind,
+    obs: Option<&FitObs>,
+) -> Result<IvMoments> {
+    if outcome >= data.num_outcomes() {
+        return Err(YocoError::NotFound { what: format!("outcome {outcome}") });
+    }
+    let (ww, wy) = match obs {
+        Some(o) => {
+            let t0 = std::time::Instant::now();
+            let r = gram_iv_wtww_wty(data, outcome)?;
+            o.gram_us.record_duration(t0.elapsed());
+            r
+        }
+        None => gram_iv_wtww_wty(data, outcome)?,
+    };
+    let g_count = data.num_groups();
+    let mut yy = 0.0;
+    for g in 0..g_count {
+        yy += data.sumsq(g, outcome);
+    }
+    let (pz, px) = (data.num_instruments(), data.num_regressors());
+    let clusters = if kind == CovarianceKind::ClusterRobust {
+        let tags = data.cluster_of().ok_or_else(|| {
+            YocoError::invalid("ClusterRobust needs a cluster-tagged IV compression")
+        })?;
+        let c_count = data.num_clusters();
+        let counts = data.counts();
+        let mut zy = vec![0.0; c_count * pz];
+        let mut zx = vec![0.0; c_count * pz * px];
+        for g in 0..g_count {
+            let c = tags[g] as usize;
+            accumulate_cluster_row(
+                &mut zy[c * pz..(c + 1) * pz],
+                &mut zx[c * pz * px..(c + 1) * pz * px],
+                data.z_row(g),
+                data.x_row(g),
+                data.sum(g, outcome),
+                counts[g],
+            );
+        }
+        Some(ClusterMoments { c_count, zy, zx })
+    } else {
+        None
+    };
+    Ok(IvMoments {
+        pz,
+        px,
+        ww,
+        wy,
+        yy,
+        n: data.total_n(),
+        records_used: g_count,
+        clusters,
+    })
+}
+
+/// Copy the `[r0, r1) × [c0, c1)` block of `m` (exact: no arithmetic).
+fn block(m: &Matrix, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+    let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+    for r in r0..r1 {
+        out.row_mut(r - r0).copy_from_slice(&m.row(r)[c0..c1]);
+    }
+    out
+}
+
+/// The shared post-moment 2SLS algebra: every floating-point operation
+/// after the moment sweep lives here, once, for both storage paths.
+fn fit_iv_core(mom: IvMoments, kind: CovarianceKind) -> Result<Fit> {
+    let (pz, px) = (mom.pz, mom.px);
+    let n = mom.n;
+    if pz < px {
+        return Err(YocoError::invalid(format!(
+            "under-identified IV model: {pz} instruments < {px} regressors"
+        )));
+    }
+    if n as usize <= px {
+        return Err(YocoError::invalid(format!("n={n} <= p={px}")));
+    }
+
+    let a = block(&mom.ww, 0, pz, 0, pz);
+    let b = block(&mom.ww, 0, pz, pz, pz + px);
+    let xtx = block(&mom.ww, pz, pz + px, pz, pz + px);
+    let zty = &mom.wy[..pz];
+    let xty = &mom.wy[pz..];
+
+    // First stage: Γ̂ = (ZᵀZ)⁻¹ZᵀX; second stage through X̂ᵀX̂ = Γ̂ᵀZᵀX.
+    let gamma = Cholesky::new(&a)?.solve_matrix(&b)?;
+    let gamma_t = gamma.transpose();
+    let xhat = matmul(&gamma_t, &b);
+    let rhs = matvec(&gamma_t, zty);
+    let chol = Cholesky::new(&xhat)?;
+    let beta = chol.solve_vec(&rhs)?;
+    let bread = chol.inverse()?;
+
+    let (cov, sigma2, clusters_used) = match kind {
+        CovarianceKind::Homoskedastic => {
+            // RSS against the *actual* regressors (2SLS residuals use X,
+            // not X̂): yᵀy − 2β̂ᵀXᵀy + β̂ᵀXᵀXβ̂.
+            let mut quad = 0.0;
+            for a_ in 0..px {
+                quad += beta[a_] * dot(xtx.row(a_), &beta);
+            }
+            let rss = mom.yy - 2.0 * dot(&beta, xty) + quad;
+            let s2 = rss / (n as f64 - px as f64);
+            let mut cov = bread.clone();
+            cov.scale(s2);
+            (cov, Some(s2), None)
+        }
+        CovarianceKind::Heteroskedastic => {
+            return Err(YocoError::invalid(
+                "Heteroskedastic (EHW) covariance is not supported for IV/2SLS; \
+                 use Homoskedastic or ClusterRobust",
+            ));
+        }
+        CovarianceKind::ClusterRobust => {
+            let cm = mom.clusters.as_ref().expect("built for ClusterRobust");
+            // v_c = Γ̂ᵀ u_c with u_c = (Zᵀy)|_c − (ZᵀX)|_c β̂.
+            let mut u = vec![0.0; pz];
+            let mut meat = Matrix::zeros(px, px);
+            for c in 0..cm.c_count {
+                for (a_, ua) in u.iter_mut().enumerate() {
+                    let zx_row = &cm.zx[(c * pz + a_) * px..(c * pz + a_ + 1) * px];
+                    *ua = cm.zy[c * pz + a_] - dot(zx_row, &beta);
+                }
+                let v = matvec(&gamma_t, &u);
+                outer_product_accumulate(&mut meat, &v, 1.0);
+            }
+            let mut cov = sandwich(&bread, &meat);
+            cov.scale(cr1_factor(n as f64, px as f64, cm.c_count as f64));
+            (cov, None, Some(cm.c_count))
+        }
+    };
+
+    Ok(Fit {
+        beta,
+        cov,
+        kind,
+        sigma2,
+        n,
+        p: px,
+        records_used: mom.records_used,
+        clusters: clusters_used,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::IvCompressor;
+    use crate::estimator::fit_ols;
+
+    /// Deterministic pseudo-random f64 in [-2, 2) with a full mantissa.
+    fn pseudo(i: usize) -> f64 {
+        let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0x5eed);
+        (h >> 11) as f64 / (1u64 << 53) as f64 * 4.0 - 2.0
+    }
+
+    /// Dyadic-exact test rows: small-integer instruments/regressors and
+    /// eighth-unit outcomes, so every moment sum is exact in f64.
+    fn dyadic_rows(n: usize) -> (Matrix, Matrix, Vec<f64>, Vec<u32>) {
+        let mut z_rows = Vec::with_capacity(n);
+        let mut x_rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        let mut tags = Vec::with_capacity(n);
+        for i in 0..n {
+            let z1 = (i % 3) as f64;
+            let z2 = ((i / 3) % 2) as f64;
+            let x1 = z1 + ((i / 7) % 3) as f64;
+            z_rows.push(vec![1.0, z1, z2]);
+            x_rows.push(vec![1.0, x1]);
+            y.push(((i * 13) % 64) as f64 / 8.0);
+            tags.push((i % 5) as u32);
+        }
+        (Matrix::from_rows(&z_rows), Matrix::from_rows(&x_rows), y, tags)
+    }
+
+    fn compress(
+        z: &Matrix,
+        x: &Matrix,
+        y: &[f64],
+        tags: Option<&[u32]>,
+    ) -> IvCompressed {
+        let mut c = IvCompressor::new(z.cols(), x.cols(), 1);
+        if tags.is_some() {
+            c = c.with_cluster_tags();
+        }
+        for i in 0..z.rows() {
+            match tags {
+                Some(t) => c.push_clustered(z.row(i), x.row(i), &[y[i]], t[i]),
+                None => c.push(z.row(i), x.row(i), &[y[i]]),
+            }
+        }
+        c.finish()
+    }
+
+    fn assert_fit_bits_eq(a: &Fit, b: &Fit) {
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.beta), bits(&b.beta));
+        assert_eq!(bits(a.cov.as_slice()), bits(b.cov.as_slice()));
+        assert_eq!(a.sigma2.map(f64::to_bits), b.sigma2.map(f64::to_bits));
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.clusters, b.clusters);
+    }
+
+    #[test]
+    fn just_identified_matches_wald_estimator() {
+        // Binary instrument, just-identified: the 2SLS slope is the Wald
+        // ratio (Δ mean y) / (Δ mean x) across instrument arms.
+        let n = 40;
+        let mut z_rows = Vec::new();
+        let mut x_rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let zi = (i % 2) as f64;
+            let xi = 1.0 + 2.0 * zi + ((i % 4) as f64) / 4.0;
+            z_rows.push(vec![1.0, zi]);
+            x_rows.push(vec![1.0, xi]);
+            y.push(((i * 7) % 16) as f64 / 8.0 + zi);
+        }
+        let z = Matrix::from_rows(&z_rows);
+        let x = Matrix::from_rows(&x_rows);
+        let fit = fit_iv_rows(&z, &x, &y, CovarianceKind::Homoskedastic, None).unwrap();
+
+        let arm = |on: f64, v: &dyn Fn(usize) -> f64| {
+            let sel: Vec<f64> =
+                (0..n).filter(|&i| z_rows[i][1] == on).map(v).collect();
+            sel.iter().sum::<f64>() / sel.len() as f64
+        };
+        let wald = (arm(1.0, &|i| y[i]) - arm(0.0, &|i| y[i]))
+            / (arm(1.0, &|i| x_rows[i][1]) - arm(0.0, &|i| x_rows[i][1]));
+        assert!((fit.beta[1] - wald).abs() < 1e-10, "{} vs {wald}", fit.beta[1]);
+    }
+
+    #[test]
+    fn two_sls_beats_ols_under_endogeneity() {
+        // x = z + u with u also in the outcome error: OLS is biased, the
+        // instrument recovers the structural slope.
+        let n = 4000;
+        let mut z_rows = Vec::new();
+        let mut x_rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let zi = (i % 3) as f64;
+            let u = pseudo(i);
+            let xi = zi + u;
+            z_rows.push(vec![1.0, zi]);
+            x_rows.push(vec![1.0, xi]);
+            y.push(0.5 + 2.0 * xi + u + 0.25 * pseudo(i + 77_777));
+        }
+        let z = Matrix::from_rows(&z_rows);
+        let x = Matrix::from_rows(&x_rows);
+        let iv = fit_iv_rows(&z, &x, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        let ols = fit_ols(&x, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        assert!((iv.beta[1] - 2.0).abs() < 0.15, "2sls slope {}", iv.beta[1]);
+        assert!((ols.beta[1] - 2.0).abs() > 0.3, "ols should be biased, got {}", ols.beta[1]);
+        assert!(iv.sigma2.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn compressed_matches_rows_to_full_mantissa() {
+        // The §7.1 exactness pin: on exactly-summable data the compressed
+        // fit reproduces the row-level fit bit for bit.
+        let (z, x, y, _) = dyadic_rows(600);
+        let d = compress(&z, &x, &y, None);
+        assert!(d.num_groups() < 600, "data must actually compress");
+        let oracle = fit_iv_rows(&z, &x, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        let fit = fit_iv_2sls(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+        assert_fit_bits_eq(&fit, &oracle);
+        assert_eq!(fit.records_used, d.num_groups());
+    }
+
+    #[test]
+    fn compressed_matches_rows_cluster_robust() {
+        let (z, x, y, tags) = dyadic_rows(600);
+        let d = compress(&z, &x, &y, Some(&tags));
+        let oracle =
+            fit_iv_rows(&z, &x, &y, CovarianceKind::ClusterRobust, Some(&tags)).unwrap();
+        let fit = fit_iv_2sls(&d, 0, CovarianceKind::ClusterRobust).unwrap();
+        assert_fit_bits_eq(&fit, &oracle);
+        assert_eq!(fit.clusters, Some(5));
+    }
+
+    #[test]
+    fn overidentified_model_fits() {
+        // pz = 3 > px = 2: the projection actually does work.
+        let (z, x, y, _) = dyadic_rows(300);
+        let fit = fit_iv_rows(&z, &x, &y, CovarianceKind::Homoskedastic, None).unwrap();
+        assert_eq!(fit.beta.len(), 2);
+        assert_eq!(fit.p, 2);
+        assert!(fit.se().iter().all(|s| s.is_finite() && *s > 0.0));
+    }
+
+    #[test]
+    fn heteroskedastic_rejected() {
+        let (z, x, y, _) = dyadic_rows(100);
+        let d = compress(&z, &x, &y, None);
+        assert!(fit_iv_2sls(&d, 0, CovarianceKind::Heteroskedastic).is_err());
+        assert!(fit_iv_rows(&z, &x, &y, CovarianceKind::Heteroskedastic, None).is_err());
+    }
+
+    #[test]
+    fn structural_errors_rejected() {
+        let (z, x, y, tags) = dyadic_rows(100);
+        // Under-identified: fewer instruments than regressors.
+        let fit = fit_iv_rows(&x, &z, &y, CovarianceKind::Homoskedastic, None);
+        assert!(fit.is_err());
+        // Cluster-robust without tags.
+        let d = compress(&z, &x, &y, None);
+        assert!(fit_iv_2sls(&d, 0, CovarianceKind::ClusterRobust).is_err());
+        assert!(fit_iv_rows(&z, &x, &y, CovarianceKind::ClusterRobust, None).is_err());
+        // Bad outcome index.
+        assert!(fit_iv_2sls(&d, 1, CovarianceKind::Homoskedastic).is_err());
+        // Mismatched shapes.
+        assert!(fit_iv_rows(&z, &x, &y[..50], CovarianceKind::Homoskedastic, None).is_err());
+        assert!(
+            fit_iv_rows(&z, &x, &y, CovarianceKind::ClusterRobust, Some(&tags[..50]))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn observed_records_gram_time() {
+        let reg = crate::obs::MetricsRegistry::shared();
+        let obs = FitObs::with_registry(&reg);
+        let (z, x, y, _) = dyadic_rows(200);
+        let d = compress(&z, &x, &y, None);
+        let a = fit_iv_2sls(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+        let b = fit_iv_2sls_observed(&d, 0, CovarianceKind::Homoskedastic, &obs).unwrap();
+        assert_fit_bits_eq(&a, &b);
+        assert_eq!(reg.snapshot().histogram("estimator_gram_us").unwrap().count, 1);
+    }
+}

@@ -16,7 +16,7 @@
 //! bit-for-bit (0 ULP) identical to `gram_weighted` + `matvec`
 //! (pinned by tests below and in `tests/proptests.rs`).
 
-use crate::compress::CompressedData;
+use crate::compress::{CompressedData, IvCompressed};
 use crate::error::{Result, YocoError};
 use crate::linalg::{accumulate_rank1_packed, axpy, packed_upper_len, unpack_symmetric, Matrix};
 
@@ -68,6 +68,27 @@ pub fn gram_xtwx_xtwy(data: &CompressedData, outcome: usize) -> Result<(Matrix, 
     Ok(normal_equations(
         data.features(),
         data.num_features(),
+        |g| counts[g],
+        |g| sums[g * o + outcome],
+    ))
+}
+
+/// Fused stacked normal equations for §7.1 IV/2SLS straight from
+/// [`IvCompressed`]'s storage: with `W = [Z | X]` (the container's joint
+/// rows), one sweep of the same packed-triangle microkernel that serves
+/// WLS yields `(Wᵀ diag(ñ) W, Wᵀ ỹ')` — whose blocks are every
+/// cross-moment 2SLS needs (`ZᵀZ`, `ZᵀX`, `XᵀX`, `Zᵀy`, `Xᵀy`) without
+/// materializing `Z` or `X` separately.
+pub fn gram_iv_wtww_wty(data: &IvCompressed, outcome: usize) -> Result<(Matrix, Vec<f64>)> {
+    if outcome >= data.num_outcomes() {
+        return Err(YocoError::NotFound { what: format!("outcome {outcome}") });
+    }
+    let counts = data.counts();
+    let sums = data.sums();
+    let o = data.num_outcomes();
+    Ok(normal_equations(
+        data.joint(),
+        data.joint_width(),
         |g| counts[g],
         |g| sums[g * o + outcome],
     ))

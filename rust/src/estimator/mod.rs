@@ -10,6 +10,8 @@
 //! * [`fit_between_cluster`], [`fit_cluster_static`],
 //!   [`fit_balanced_panel`]: the three §5.3 cluster-robust compressions.
 //! * [`fit_logistic`] ⟷ [`fit_logistic_suffstats`] (§7.3).
+//! * [`fit_iv_rows`] (uncompressed oracle) ⟷ [`fit_iv_2sls`] (§7.1
+//!   two-stage least squares on conditionally sufficient statistics).
 //! * [`fit_weighted_suffstats`] (§7.2) for analytic/frequency weights.
 //! * Baselines the paper discusses: [`ttest`] (§3.1), [`fit_sgd`] (§3.2),
 //!   [`fit_group_means`] (§3.4 — lossy variance).
@@ -18,6 +20,7 @@ mod balanced_panel;
 mod cluster;
 mod fit;
 mod groups;
+mod iv;
 mod kernels;
 mod logistic;
 mod observe;
@@ -31,7 +34,8 @@ pub use balanced_panel::{fit_balanced_panel, PanelModel};
 pub use cluster::{fit_between_cluster, fit_cluster_static};
 pub use fit::{cr1_factor, estimator_for, CovarianceKind, Fit, WeightKind};
 pub use groups::fit_group_means;
-pub use kernels::gram_xtwx_xtwy;
+pub use iv::{fit_iv_2sls, fit_iv_2sls_observed, fit_iv_rows};
+pub use kernels::{gram_iv_wtww_wty, gram_xtwx_xtwy};
 pub use logistic::{
     fit_logistic, fit_logistic_suffstats, fit_logistic_suffstats_observed, LogisticFit,
     LogisticOptions,

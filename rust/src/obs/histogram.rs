@@ -100,7 +100,7 @@ impl Histogram {
         let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
         let total: u64 = counts.iter().sum();
         let max = self.max.load(Relaxed);
-        let q = |p: f64| quantile(&counts, total, p).min(max);
+        let q = |p: f64| quantile(&counts, total, max, p);
         HistogramSnapshot {
             count: self.count.load(Relaxed),
             sum: self.sum.load(Relaxed),
@@ -113,8 +113,18 @@ impl Histogram {
 }
 
 /// Smallest value `u` such that at least `ceil(p·total)` recorded
-/// values fall in buckets with upper bound ≤ `u`.
-fn quantile(counts: &[u64], total: u64, p: f64) -> u64 {
+/// values fall in buckets with upper bound ≤ `u`, clamped to the
+/// observed `max`.
+///
+/// Boundary contract (pinned by tests):
+/// * `total == 0` → 0 for every `p` — an empty histogram never
+///   fabricates a latency out of bucket bounds.
+/// * A distribution occupying a single bucket reports `max` for every
+///   quantile (`p50 == p95 == p99 == max`): the bucket's upper bound
+///   overstates the one recorded value by up to 12.5%, and the clamp —
+///   applied here, not by each caller — removes exactly that
+///   overstatement.
+fn quantile(counts: &[u64], total: u64, max: u64, p: f64) -> u64 {
     if total == 0 {
         return 0;
     }
@@ -123,10 +133,10 @@ fn quantile(counts: &[u64], total: u64, p: f64) -> u64 {
     for (i, &c) in counts.iter().enumerate() {
         acc += c;
         if acc >= target {
-            return bucket_upper(i);
+            return bucket_upper(i).min(max);
         }
     }
-    bucket_upper(BUCKET_COUNT - 1)
+    bucket_upper(BUCKET_COUNT - 1).min(max)
 }
 
 /// Immutable view of a [`Histogram`] at snapshot time.
@@ -239,5 +249,31 @@ mod tests {
     #[test]
     fn empty_histogram_snapshot_is_zero() {
         assert_eq!(hist().snapshot(), HistogramSnapshot::default());
+    }
+
+    #[test]
+    fn single_occupied_bucket_pins_every_quantile_to_max() {
+        // A constant stream must report that constant for every
+        // quantile — the bucket upper bound's 12.5% overstatement may
+        // not leak out of the snapshot.
+        for v in [0u64, 1, 7, 100, 12_345, 1_000_000] {
+            let h = hist();
+            for _ in 0..37 {
+                h.record(v);
+            }
+            let s = h.snapshot();
+            assert_eq!(s.max, v);
+            assert_eq!(s.p50, v, "p50 for constant {v}");
+            assert_eq!(s.p95, v, "p95 for constant {v}");
+            assert_eq!(s.p99, v, "p99 for constant {v}");
+        }
+    }
+
+    #[test]
+    fn quantile_of_empty_distribution_is_zero() {
+        // total == 0 → 0 for any p, with or without bucket storage.
+        assert_eq!(quantile(&[0u64; 16], 0, 0, 0.50), 0);
+        assert_eq!(quantile(&[0u64; 16], 0, 0, 0.99), 0);
+        assert_eq!(quantile(&[], 0, 0, 0.99), 0);
     }
 }

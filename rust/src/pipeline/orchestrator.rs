@@ -19,7 +19,8 @@ use super::rebalance::ShardMap;
 use super::supervisor::{supervise_chunk, ChunkOutcome, ChunkTask};
 use crate::compress::core::{self, CompressedContainer, ContainerKind, SufficientStatistics};
 use crate::compress::{
-    ClusterStaticCompressed, ClusterStaticCompressor, CompressedData, SuffStatsCompressor,
+    ClusterStaticCompressed, ClusterStaticCompressor, CompressedData, IvCompressed,
+    IvCompressor, SuffStatsCompressor,
 };
 use crate::compress::hash_row;
 use crate::data::Batch;
@@ -77,6 +78,15 @@ pub enum PipelineMode {
         /// Outcome index (into the schema's outcome columns).
         outcome: usize,
     },
+    /// §7.1 IV / 2SLS conditionally sufficient statistics keyed on the
+    /// joint `[z | x]` row (instruments then features, requires
+    /// Instrument columns). Routes by joint-row hash, or by cluster when
+    /// `clustered` so cluster tags stay worker-disjoint.
+    Iv {
+        /// Tag groups with dense cluster ids (needed for cluster-robust
+        /// covariances; requires a Cluster column).
+        clustered: bool,
+    },
 }
 
 /// Pipeline output: one of the compressed dataset forms.
@@ -86,6 +96,8 @@ pub enum PipelineResult {
     SuffStats(CompressedData),
     /// §5.3.3 output.
     ClusterStatic(ClusterStaticCompressed),
+    /// §7.1 output.
+    Iv(IvCompressed),
 }
 
 impl PipelineResult {
@@ -93,9 +105,10 @@ impl PipelineResult {
     pub fn into_suffstats(self) -> Result<CompressedData> {
         match self {
             PipelineResult::SuffStats(d) => Ok(d),
-            PipelineResult::ClusterStatic(_) => {
-                Err(YocoError::invalid("pipeline produced cluster moments"))
-            }
+            other => Err(YocoError::invalid(format!(
+                "pipeline produced {}, not sufficient statistics",
+                other.kind().name()
+            ))),
         }
     }
 
@@ -103,9 +116,21 @@ impl PipelineResult {
     pub fn into_cluster_static(self) -> Result<ClusterStaticCompressed> {
         match self {
             PipelineResult::ClusterStatic(d) => Ok(d),
-            PipelineResult::SuffStats(_) => {
-                Err(YocoError::invalid("pipeline produced sufficient statistics"))
-            }
+            other => Err(YocoError::invalid(format!(
+                "pipeline produced {}, not cluster moments",
+                other.kind().name()
+            ))),
+        }
+    }
+
+    /// Unwrap as §7.1 IV conditionally sufficient statistics.
+    pub fn into_iv(self) -> Result<IvCompressed> {
+        match self {
+            PipelineResult::Iv(d) => Ok(d),
+            other => Err(YocoError::invalid(format!(
+                "pipeline produced {}, not IV statistics",
+                other.kind().name()
+            ))),
         }
     }
 
@@ -121,6 +146,7 @@ impl PipelineResult {
         match self {
             PipelineResult::SuffStats(d) => d,
             PipelineResult::ClusterStatic(d) => d,
+            PipelineResult::Iv(d) => d,
         }
     }
 
@@ -130,6 +156,7 @@ impl PipelineResult {
         match self {
             PipelineResult::SuffStats(d) => Arc::new(d),
             PipelineResult::ClusterStatic(d) => Arc::new(d),
+            PipelineResult::Iv(d) => Arc::new(d),
         }
     }
 }
@@ -215,16 +242,33 @@ impl Pipeline {
             .peek()
             .ok_or_else(|| YocoError::invalid("pipeline needs at least one batch"))?;
         let schema = first.schema().clone();
-        let f_idx = schema.feature_indices();
+        // For IV mode the "feature" columns a worker folds are the joint
+        // `[z | x]` row: instruments first, then model features.
+        let (f_idx, pz) = if matches!(self.mode, PipelineMode::Iv { .. }) {
+            let z_idx = schema.instrument_indices();
+            if z_idx.is_empty() {
+                return Err(YocoError::invalid("IV mode requires Instrument columns"));
+            }
+            let pz = z_idx.len();
+            let mut joint = z_idx;
+            joint.extend(schema.feature_indices());
+            (joint, pz)
+        } else {
+            (schema.feature_indices(), 0)
+        };
         let o_idx = schema.outcome_indices();
         let cl_idx = schema.cluster_index();
         let p = f_idx.len();
         let o = o_idx.len();
-        if p == 0 {
+        if p == 0 || p == pz {
             return Err(YocoError::invalid("no feature columns in schema"));
         }
-        let needs_cluster =
-            matches!(self.mode, PipelineMode::WithinCluster | PipelineMode::ClusterStatic { .. });
+        let needs_cluster = matches!(
+            self.mode,
+            PipelineMode::WithinCluster
+                | PipelineMode::ClusterStatic { .. }
+                | PipelineMode::Iv { clustered: true }
+        );
         if needs_cluster && cl_idx.is_none() {
             return Err(YocoError::invalid("mode requires a Cluster column"));
         }
@@ -259,7 +303,7 @@ impl Pipeline {
                     let trace = trace.clone();
                     scope.spawn(move || -> Result<WorkerState> {
                         let _worker_span = trace.span(&format!("worker-{w}"));
-                        let mut state = WorkerState::new(mode, p, o);
+                        let mut state = WorkerState::new(mode, p, pz, o);
                         while let Some(mut task) = queue.pop() {
                             let rows = task.chunk.rows as u64;
                             let outcome = supervise_chunk(
@@ -452,10 +496,14 @@ enum WorkerState {
     Suff(SuffStatsCompressor),
     Within { comp: SuffStatsCompressor, intern: std::collections::HashMap<u64, u32> },
     Static { comp: ClusterStaticCompressor, outcome: usize },
+    Iv { comp: IvCompressor, intern: std::collections::HashMap<u64, u32>, clustered: bool },
 }
 
 impl WorkerState {
-    fn new(mode: PipelineMode, p: usize, o: usize) -> Self {
+    /// `p` is the folded feature width — the joint `[z | x]` width for
+    /// IV mode (of which the first `pz` columns are instruments), the
+    /// model feature width otherwise.
+    fn new(mode: PipelineMode, p: usize, pz: usize, o: usize) -> Self {
         match mode {
             PipelineMode::SuffStats => WorkerState::Suff(SuffStatsCompressor::new(p, o)),
             PipelineMode::WithinCluster => WorkerState::Within {
@@ -466,6 +514,14 @@ impl WorkerState {
                 comp: ClusterStaticCompressor::new(p),
                 outcome,
             },
+            PipelineMode::Iv { clustered } => {
+                let comp = IvCompressor::new(pz, p - pz, o);
+                WorkerState::Iv {
+                    comp: if clustered { comp.with_cluster_tags() } else { comp },
+                    intern: std::collections::HashMap::new(),
+                    clustered,
+                }
+            }
         }
     }
 
@@ -510,6 +566,31 @@ impl WorkerState {
                         chunk.outs[i * o + *outcome],
                         clusters[i],
                     );
+                }
+            }
+            WorkerState::Iv { comp, intern, clustered } => {
+                let q = chunk.feats.len() / rows.max(1);
+                let o = chunk.outs.len() / rows.max(1);
+                if *clustered {
+                    let clusters =
+                        chunk.clusters.as_ref().expect("clustered IV mode has clusters");
+                    for i in 0..rows {
+                        let label = clusters[i];
+                        let next = intern.len() as u32;
+                        let id = *intern.entry(label.to_bits()).or_insert(next);
+                        comp.push_joint_clustered(
+                            &chunk.feats[i * q..(i + 1) * q],
+                            &chunk.outs[i * o..(i + 1) * o],
+                            id,
+                        );
+                    }
+                } else {
+                    for i in 0..rows {
+                        comp.push_joint(
+                            &chunk.feats[i * q..(i + 1) * q],
+                            &chunk.outs[i * o..(i + 1) * o],
+                        );
+                    }
                 }
             }
         }
@@ -574,6 +655,26 @@ fn merge_partials(
                 })
                 .collect();
             Ok(PipelineResult::ClusterStatic(merge_shards(shards, threads)?))
+        }
+        PipelineMode::Iv { clustered } => {
+            // Same offset scheme as WithinCluster: cluster-hash routing
+            // keeps clusters worker-disjoint, so offsetting each worker's
+            // dense ids by the running total keeps them globally unique.
+            let mut offset: u32 = 0;
+            let shards: Vec<IvCompressed> = partials
+                .into_iter()
+                .map(|p| {
+                    let WorkerState::Iv { comp, intern, .. } = p else { unreachable!() };
+                    let local_clusters = intern.len() as u32;
+                    let mut d = comp.finish();
+                    if clustered {
+                        d = d.offset_clusters(offset);
+                        offset += local_clusters;
+                    }
+                    d
+                })
+                .collect();
+            Ok(PipelineResult::Iv(merge_shards(shards, threads)?))
         }
     }
 }
@@ -677,6 +778,62 @@ mod tests {
         let labels = batch.column_by_name("user").unwrap();
         let oracle = fit_ols(&m, y, CovarianceKind::ClusterRobust, Some(labels)).unwrap();
         assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+    }
+
+    fn read_cols(batch: &Batch, idx: &[usize]) -> Matrix {
+        let n = batch.num_rows();
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(n);
+        let mut buf = vec![0.0; idx.len()];
+        for i in 0..n {
+            batch.read_features(i, idx, &mut buf);
+            rows.push(buf.clone());
+        }
+        Matrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn pipeline_iv_clustered_matches_raw_row_oracle() {
+        use crate::data::gen::{generate_iv, IvConfig};
+        use crate::estimator::{fit_iv_2sls, fit_iv_rows};
+        let batch = generate_iv(&IvConfig { n: 4000, clusters: 7, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::Iv { clustered: true });
+        let d = pipe.run_batch(&batch).unwrap().into_iv().unwrap();
+        assert_eq!(d.total_n(), 4000);
+        assert_eq!(d.num_clusters(), 7);
+        assert!(d.num_groups() < batch.num_rows(), "joint cells must compress");
+        let fit = fit_iv_2sls(&d, 0, CovarianceKind::ClusterRobust).unwrap();
+        let z = read_cols(&batch, &batch.schema().instrument_indices());
+        let x = read_cols(&batch, &batch.schema().feature_indices());
+        let y = batch.column_by_name("y0").unwrap();
+        let tags: Vec<u32> = batch
+            .column_by_name("user")
+            .unwrap()
+            .iter()
+            .map(|&c| c as u32)
+            .collect();
+        let oracle =
+            fit_iv_rows(&z, &x, y, CovarianceKind::ClusterRobust, Some(&tags)).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+    }
+
+    #[test]
+    fn pipeline_iv_untagged_matches_raw_row_oracle() {
+        use crate::data::gen::{generate_iv, IvConfig};
+        use crate::estimator::{fit_iv_2sls, fit_iv_rows};
+        let batch = generate_iv(&IvConfig { n: 3000, clusters: 0, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::Iv { clustered: false });
+        let d = pipe.run_batch(&batch).unwrap().into_iv().unwrap();
+        assert!(d.cluster_of().is_none());
+        let fit = fit_iv_2sls(&d, 0, CovarianceKind::Homoskedastic).unwrap();
+        let z = read_cols(&batch, &batch.schema().instrument_indices());
+        let x = read_cols(&batch, &batch.schema().feature_indices());
+        let y = batch.column_by_name("y0").unwrap();
+        let oracle = fit_iv_rows(&z, &x, y, CovarianceKind::Homoskedastic, None).unwrap();
+        assert!(fit.max_rel_diff(&oracle) < 1e-9, "{}", fit.max_rel_diff(&oracle));
+        // Without Instrument columns the mode is rejected up front.
+        let (xp, _) = generate_xp(&XpConfig { n: 100, ..Default::default() });
+        let pipe = Pipeline::new(small_cfg(), PipelineMode::Iv { clustered: false });
+        assert!(pipe.run_batch(&xp).is_err());
     }
 
     #[test]

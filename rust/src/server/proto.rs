@@ -57,8 +57,8 @@ pub enum Request {
         dataset: String,
         /// Feature columns in model order (empty = schema default).
         features: Vec<String>,
-        /// Compression strategy name (`"suffstats"` default, or
-        /// `"within_cluster"`).
+        /// Compression strategy name (`"suffstats"` default,
+        /// `"within_cluster"`, or `"iv"`).
         strategy: String,
     },
 }
@@ -107,6 +107,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     Some("feature") => ColumnRole::Feature,
                     Some("outcome") => ColumnRole::Outcome,
                     Some("cluster") => ColumnRole::Cluster,
+                    Some("instrument") => ColumnRole::Instrument,
                     Some("weight") => ColumnRole::Weight,
                     Some("metadata") => ColumnRole::Metadata,
                     other => {
@@ -132,6 +133,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             let estimator = match j.get("estimator").and_then(Json::as_str) {
                 None | Some("wls") => EstimatorKind::Wls,
                 Some("logistic") => EstimatorKind::Logistic,
+                Some("iv") => EstimatorKind::Iv,
                 Some(other) => {
                     return Err(YocoError::parse(format!("bad estimator '{other}'")))
                 }
@@ -312,6 +314,7 @@ fn handle(c: &Coordinator, req: Request) -> Result<Json> {
             let strategy = match strategy.as_str() {
                 "suffstats" => Strategy::SuffStats,
                 "within_cluster" => Strategy::WithinCluster,
+                "iv" => Strategy::Iv,
                 other => {
                     return Err(YocoError::parse(format!("unknown strategy '{other}'")))
                 }
@@ -485,6 +488,42 @@ mod tests {
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
         let r = handle_line(&c, r#"{"op":"export","dataset":"ghost"}"#);
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn iv_over_the_wire() {
+        let c = coordinator();
+        let path =
+            std::env::temp_dir().join(format!("yoco_proto_iv_{}.csv", std::process::id()));
+        std::fs::write(&path, "z,x,y\n1,1,2\n1,1,2.5\n2,2,4\n2,2,3.5\n3,3,6\n").unwrap();
+        let line = format!(
+            r#"{{"op":"register_csv","name":"ivd","path":"{}","roles":["instrument","feature","outcome"]}}"#,
+            path.display()
+        );
+        let r = handle_line(&c, &line);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        let r = handle_line(
+            &c,
+            r#"{"op":"analyze","dataset":"ivd","outcome":"y","estimator":"iv"}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("strategy").unwrap().as_str(), Some("iv"));
+        assert_eq!(r.get("engine_used").unwrap().as_str(), Some("native"));
+        // Just-identified 2SLS: β = Σ z·y / Σ z·x = 37.5/19.
+        let beta = r.get("beta").unwrap().as_arr().unwrap();
+        assert!((beta[0].as_f64().unwrap() - 37.5 / 19.0).abs() < 1e-12);
+        assert_eq!(r.get("records_used").unwrap().as_usize(), Some(3));
+        // The §7.1 container exports through the same container-agnostic
+        // wire form, from the SAME cached compression the analyze used.
+        let r = handle_line(&c, r#"{"op":"export","dataset":"ivd","strategy":"iv"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{}", r.to_string());
+        assert_eq!(r.get("kind").unwrap().as_str(), Some("iv"));
+        assert_eq!(r.get("cache_hit").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("records").unwrap().as_usize(), Some(3));
+        let wire =
+            crate::compress::WireContainer::from_json(r.get("container").unwrap()).unwrap();
+        assert_eq!(wire.kind, crate::compress::ContainerKind::Iv);
     }
 
     #[test]

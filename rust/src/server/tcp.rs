@@ -49,6 +49,14 @@ pub struct ServerConfig {
     /// (0 = forever). On expiry it gets a structured timeout reply and
     /// the connection closes.
     pub line_deadline_ms: u64,
+    /// Per-reply byte budget (0 = unlimited, the default). A payload
+    /// reply that serializes past the budget — e.g. `export` of a very
+    /// large container — is replaced by a structured `too_large` error
+    /// carrying the actual byte count, instead of an arbitrarily long
+    /// line the peer's own line limit would choke on. The transport's
+    /// fixed-size diagnostics (timeouts, oversized-request errors,
+    /// `overloaded`) are exempt.
+    pub max_reply_bytes: usize,
     /// Shutdown drain budget: how long [`ServerHandle::shutdown`] waits
     /// for in-flight handlers before reporting them leaked.
     pub drain_deadline_ms: u64,
@@ -65,6 +73,7 @@ impl Default for ServerConfig {
             max_connections: 64,
             max_line_bytes: 1 << 20,
             line_deadline_ms: 5000,
+            max_reply_bytes: 0,
             drain_deadline_ms: 5000,
             fault: None,
         }
@@ -381,6 +390,30 @@ fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
     writer.flush()
 }
 
+/// Serialize and send a *payload* reply under the reply byte budget
+/// (0 = unlimited). Over budget, the payload is replaced by a
+/// structured `too_large` error naming the actual and allowed sizes —
+/// the replacement itself goes out through the exempt [`write_reply`]
+/// path, so the client always gets a well-formed line.
+fn write_reply_capped(
+    writer: &mut TcpStream,
+    reply: &Json,
+    max_bytes: usize,
+) -> std::io::Result<()> {
+    let text = reply.to_string();
+    if max_bytes > 0 && text.len() > max_bytes {
+        let e = YocoError::invalid(format!(
+            "reply too_large: {} bytes exceeds max_reply_bytes {}",
+            text.len(),
+            max_bytes
+        ));
+        return write_reply(writer, &error_reply(&e));
+    }
+    writer.write_all(text.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
 fn client_loop(
     coordinator: &Coordinator,
     stream: TcpStream,
@@ -448,7 +481,7 @@ fn client_loop(
         if let Some(d) = fault::slow_keyed(&cfg.fault, key) {
             std::thread::sleep(d);
         }
-        write_reply(&mut writer, &reply)?;
+        write_reply_capped(&mut writer, &reply, cfg.max_reply_bytes)?;
     }
 }
 
@@ -546,6 +579,27 @@ mod tests {
         assert!(reply.contains(r#""ok":false"#), "{reply}");
         assert!(reply.contains("exceeds 4096 bytes"), "{reply}");
         // Connection still serves well-formed requests afterwards.
+        let reply = roundtrip(&mut stream, r#"{"op":"ping"}"#);
+        assert!(reply.contains(r#""pong":true"#), "{reply}");
+        let stats = handle.shutdown();
+        assert_eq!(stats.leaked, 0);
+    }
+
+    #[test]
+    fn oversized_reply_is_replaced_by_structured_too_large_error() {
+        let cfg = ServerConfig { max_reply_bytes: 512, ..ServerConfig::default() };
+        let handle = serve_with(coordinator(), "127.0.0.1:0", cfg).unwrap();
+        let mut stream = TcpStream::connect(handle.addr).unwrap();
+        let reply = roundtrip(&mut stream, r#"{"op":"register_xp","name":"xp","n":2000}"#);
+        assert!(reply.contains(r#""rows":2000"#), "{reply}");
+        // The export reply carries the whole container — far past the
+        // budget — and must come back as a bounded structured error.
+        let reply = roundtrip(&mut stream, r#"{"op":"export","dataset":"xp"}"#);
+        assert!(reply.contains(r#""ok":false"#), "{reply}");
+        assert!(reply.contains("too_large"), "{reply}");
+        assert!(reply.contains("max_reply_bytes 512"), "{reply}");
+        assert!(reply.len() <= 512, "the error itself must fit: {} bytes", reply.len());
+        // The connection survives and small replies still flow.
         let reply = roundtrip(&mut stream, r#"{"op":"ping"}"#);
         assert!(reply.contains(r#""pong":true"#), "{reply}");
         let stats = handle.shutdown();

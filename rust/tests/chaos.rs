@@ -222,6 +222,56 @@ fn slow_worker_fault_delays_replies_but_shutdown_drains() {
     assert_eq!(stats.leaked, 0);
 }
 
+/// Reply-cap boundary: an `export` reply exactly at `max_reply_bytes`
+/// goes through verbatim; one byte under the same reply's size it is
+/// replaced by a structured `too_large` error carrying the real byte
+/// count, and the connection keeps serving.
+#[test]
+fn export_reply_at_and_over_the_byte_cap() {
+    let c = coordinator();
+    // Measure the uncapped export reply first.
+    let probe = serve_with(c.clone(), "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let mut s = TcpStream::connect(probe.addr).unwrap();
+    let reply = roundtrip(&mut s, r#"{"op":"register_xp","name":"xp","n":1000}"#);
+    assert!(reply.contains(r#""rows":1000"#), "{reply}");
+    // Export twice and measure the warm-cache reply: cache_hit flips
+    // from false to true on the second export and stays there, so only
+    // the warm reply is byte-stable across later servers.
+    let cold = roundtrip(&mut s, r#"{"op":"export","dataset":"xp"}"#);
+    assert!(cold.contains(r#""ok":true"#), "{cold}");
+    let full = roundtrip(&mut s, r#"{"op":"export","dataset":"xp"}"#);
+    assert!(full.contains(r#""cache_hit":true"#), "{full}");
+    let len = full.trim_end().len();
+    drop(s);
+    probe.shutdown();
+
+    // Exactly at the cap: the reply fits and passes unchanged.
+    let cfg = ServerConfig { max_reply_bytes: len, ..ServerConfig::default() };
+    let at = serve_with(c.clone(), "127.0.0.1:0", cfg).unwrap();
+    let mut s = TcpStream::connect(at.addr).unwrap();
+    let reply = roundtrip(&mut s, r#"{"op":"export","dataset":"xp"}"#);
+    assert_eq!(reply, full, "at-cap reply must pass through verbatim");
+    drop(s);
+    at.shutdown();
+
+    // One byte under: structured too_large error with the byte count.
+    let cfg = ServerConfig { max_reply_bytes: len - 1, ..ServerConfig::default() };
+    let under = serve_with(c, "127.0.0.1:0", cfg).unwrap();
+    let mut s = TcpStream::connect(under.addr).unwrap();
+    let reply = roundtrip(&mut s, r#"{"op":"export","dataset":"xp"}"#);
+    assert!(reply.contains(r#""ok":false"#), "{reply}");
+    assert!(
+        reply.contains(&format!("reply too_large: {len} bytes")),
+        "error must carry the real byte count: {reply}"
+    );
+    // The connection survives the shed reply.
+    let reply = roundtrip(&mut s, r#"{"op":"ping"}"#);
+    assert!(reply.contains(r#""pong":true"#), "{reply}");
+    drop(s);
+    let stats = under.shutdown();
+    assert_eq!(stats.leaked, 0);
+}
+
 /// Load shedding under chaos config: the (cap+1)th client gets the
 /// structured overload reply and the server drains cleanly — the
 /// serving-side half of the acceptance contract.

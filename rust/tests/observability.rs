@@ -6,7 +6,7 @@
 use std::sync::Arc;
 use std::thread;
 
-use yoco::obs::{prometheus_text, registry_json, MetricsRegistry};
+use yoco::obs::{prometheus_text, registry_json, MetricsRegistry, SamplingGate};
 
 const WRITERS: u64 = 8;
 const OPS_PER_WRITER: u64 = 20_000;
@@ -119,6 +119,53 @@ fn sampling_toggle_races_never_corrupt_counters() {
     let h = s.histogram("obs_test_sampled_us").unwrap();
     assert!(h.count <= 40_000);
     assert!(h.p99 <= h.max && h.max <= 99);
+}
+
+#[test]
+fn sampling_gate_error_diffusion_holds_rate_under_concurrency() {
+    // Eight threads hammering one gate share a single fixed-point
+    // accumulator, so the error diffusion stays global: over k total
+    // candidates the admitted count lands within 1% of k·rate — no
+    // per-thread drift, no double-admitted carries.
+    let gate = SamplingGate::with_rate(0.37);
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 20_000;
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let g = gate.clone();
+        handles.push(thread::spawn(move || {
+            (0..PER_THREAD).filter(|_| g.admit()).count() as u64
+        }));
+    }
+    let admitted: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let k = (THREADS * PER_THREAD) as f64;
+    let observed = admitted as f64 / k;
+    assert!(
+        (observed - 0.37).abs() < 0.01 * 0.37,
+        "admitted rate {observed} strays more than 1% from 0.37"
+    );
+}
+
+#[test]
+fn sampling_gate_sequence_is_deterministic_single_threaded() {
+    // Two gates at the same rate must produce the identical
+    // accept/reject sequence — error diffusion is a function of the
+    // candidate index alone, never of wall clock or identity.
+    let a = SamplingGate::with_rate(0.37);
+    let b = SamplingGate::with_rate(0.37);
+    let seq_a: Vec<bool> = (0..10_000).map(|_| a.admit()).collect();
+    let seq_b: Vec<bool> = (0..10_000).map(|_| b.admit()).collect();
+    assert_eq!(seq_a, seq_b);
+    let admitted = seq_a.iter().filter(|&&x| x).count() as f64;
+    assert!(
+        (admitted / 10_000.0 - 0.37).abs() < 0.01 * 0.37,
+        "single-threaded rate {admitted} out of band"
+    );
+    // Endpoints short-circuit identically every time.
+    let always = SamplingGate::with_rate(1.0);
+    let never = SamplingGate::with_rate(0.0);
+    assert!((0..1000).all(|_| always.admit()));
+    assert!(!(0..1000).any(|_| never.admit()));
 }
 
 #[test]

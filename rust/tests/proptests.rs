@@ -4,11 +4,12 @@
 
 use yoco::compress::{
     compress_batch, merge_many, BalancedPanelCompressor, BetweenClusterCompressor,
-    ClusterStaticCompressor, CompressedContainer, FWeightCompressor, SuffStatsCompressor,
-    SufficientStatistics, WeightedSuffStatsCompressor, WireContainer, WithinClusterCompressor,
+    ClusterStaticCompressor, CompressedContainer, FWeightCompressor, IvCompressed,
+    IvCompressor, SuffStatsCompressor, SufficientStatistics, WeightedSuffStatsCompressor,
+    WireContainer, WithinClusterCompressor,
 };
 use yoco::data::gen::{generate_xp, XpConfig};
-use yoco::estimator::{fit_ols, fit_wls_suffstats, CovarianceKind};
+use yoco::estimator::{fit_iv_2sls, fit_iv_rows, fit_ols, fit_wls_suffstats, CovarianceKind};
 use yoco::linalg::Matrix;
 use yoco::pipeline::{Pipeline, PipelineConfig, PipelineMode};
 use yoco::util::rng::Rng;
@@ -231,7 +232,7 @@ fn check_generic_engine<T>(
 }
 
 #[test]
-fn prop_generic_merge_engine_matches_left_fold_for_all_six_containers() {
+fn prop_generic_merge_engine_matches_left_fold_for_all_seven_containers() {
     for_all_seeds(8, |rng| {
         // Full-mantissa stream + a small value pool so group keys
         // collide across shards (collisions are what exercise fold_slot).
@@ -331,6 +332,154 @@ fn prop_generic_merge_engine_matches_left_fold_for_all_six_containers() {
             }
             let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
             check_generic_engine(rng, "balanced_panel", shards, |a, b| a.merge(b).unwrap());
+
+            // §7.1 IV/2SLS conditional sufficiency (key = joint [z|x]
+            // row; the pool makes joint keys collide across shards).
+            let mut cs: Vec<_> = (0..k).map(|_| IvCompressor::new(2, 2, 2)).collect();
+            for i in 0..n {
+                let z = [1.0, pool[i % pool.len()]];
+                let x = [1.0, pool[(i / 3) % pool.len()]];
+                cs[i % k].push(&z, &x, &[next(), next()]);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "iv", shards, |a, b| {
+                let mut m = a.clone();
+                m.merge(b).unwrap();
+                m
+            });
+
+            // Same container, cluster-tagged: the cluster word joins
+            // the slot key, so tagged shards must also fold exactly.
+            let mut cs: Vec<_> =
+                (0..k).map(|_| IvCompressor::new(2, 2, 1).with_cluster_tags()).collect();
+            for i in 0..n {
+                let z = [1.0, pool[i % pool.len()]];
+                let x = [1.0, pool[(i / 3) % pool.len()]];
+                cs[i % k].push_clustered(&z, &x, &[next()], (i % 9) as u32);
+            }
+            let shards: Vec<_> = cs.into_iter().map(|c| c.finish()).collect();
+            check_generic_engine(rng, "iv_tagged", shards, |a, b| {
+                let mut m = a.clone();
+                m.merge(b).unwrap();
+                m
+            });
+        }
+    });
+}
+
+/// Satellite regression: the generic engine's edge cases. An empty
+/// shard LIST is a structured error (the output shape is unknowable
+/// with zero shards — never a panic); shards with zero records are
+/// legal anywhere and an all-empty list yields a well-formed empty
+/// container that still serializes over the wire.
+fn check_merge_many_edges<T>(name: &str, make_empty: impl Fn() -> T)
+where
+    T: SufficientStatistics + Clone,
+{
+    assert!(merge_many::<T>(&[], 4).is_err(), "{name}: empty list must be Err");
+    let shards: Vec<T> = (0..3).map(|_| make_empty()).collect();
+    for threads in [1usize, 4] {
+        let merged = merge_many(&shards, threads)
+            .unwrap_or_else(|e| panic!("{name}: all-empty shards must merge: {e}"));
+        assert_eq!(merged.num_records(), 0, "{name}");
+        assert_eq!(merged.total_records(), 0, "{name}");
+        let wire = merged.to_wire();
+        assert_eq!(wire.kind, shards[0].kind(), "{name}");
+        let rt = WireContainer::from_json(&wire.to_json())
+            .unwrap_or_else(|e| panic!("{name}: empty wire must roundtrip: {e}"));
+        assert_eq!(rt.kind, wire.kind, "{name}");
+    }
+}
+
+#[test]
+fn merge_many_edge_cases_for_all_seven_containers() {
+    check_merge_many_edges("suffstats", || SuffStatsCompressor::new(3, 2).finish());
+    check_merge_many_edges("weighted", || WeightedSuffStatsCompressor::new(3, 2).finish());
+    check_merge_many_edges("fweight", || FWeightCompressor::new(2).finish());
+    check_merge_many_edges("cluster_static", || ClusterStaticCompressor::new(2).finish());
+    check_merge_many_edges("between_cluster", || BetweenClusterCompressor::new(3).finish());
+    let m2 = Matrix::from_rows(&[vec![1.0, 0.0], vec![1.0, 1.0]]);
+    check_merge_many_edges("balanced_panel", move || {
+        BalancedPanelCompressor::new(m2.clone(), 2).finish()
+    });
+    check_merge_many_edges("iv", || IvCompressor::new(2, 2, 1).finish());
+    // A tagged empty IV shard keeps its shape through the engine too.
+    check_merge_many_edges("iv_tagged", || {
+        IvCompressor::new(1, 2, 1).with_cluster_tags().finish()
+    });
+}
+
+/// §7.1 exactness pin, property form: with dyadic-exact data every
+/// moment sum is exact in f64, so 2SLS on the compressed container must
+/// match 2SLS on raw rows to the last mantissa bit — for any shard
+/// count, shard shuffle, and merge thread count, under both classical
+/// and cluster-robust covariances.
+#[test]
+fn prop_iv_2sls_compressed_matches_rows_to_full_mantissa() {
+    for_all_seeds(10, |rng| {
+        let n = 300 + rng.below(500);
+        let z_levels = 2 + rng.below(3);
+        // Dyadic outcome grid: k/8 with |k| ≤ 32, sums stay exact.
+        let rows: Vec<(Vec<f64>, Vec<f64>, f64, u32)> = (0..n)
+            .map(|i| {
+                let zi = rng.below(z_levels) as f64;
+                let c = rng.below(3) as f64;
+                let z = vec![1.0, zi];
+                let x = vec![1.0, zi + c];
+                let y = (rng.below(64) as f64 - 32.0) / 8.0;
+                (z, x, y, (i % 13) as u32)
+            })
+            .collect();
+        let zm = Matrix::from_rows(&rows.iter().map(|r| r.0.clone()).collect::<Vec<_>>());
+        let xm = Matrix::from_rows(&rows.iter().map(|r| r.1.clone()).collect::<Vec<_>>());
+        let y: Vec<f64> = rows.iter().map(|r| r.2).collect();
+        let tags: Vec<u32> = rows.iter().map(|r| r.3).collect();
+
+        let assert_fit_bits = |a: &yoco::estimator::Fit, b: &yoco::estimator::Fit| {
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.beta), bits(&b.beta), "beta bits");
+            assert_eq!(bits(a.cov.as_slice()), bits(b.cov.as_slice()), "cov bits");
+            assert_eq!(
+                a.sigma2.map(f64::to_bits),
+                b.sigma2.map(f64::to_bits),
+                "sigma2 bits"
+            );
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.clusters, b.clusters);
+        };
+
+        for (kind, tagged) in [
+            (CovarianceKind::Homoskedastic, false),
+            (CovarianceKind::ClusterRobust, true),
+        ] {
+            let oracle =
+                fit_iv_rows(&zm, &xm, &y, kind, tagged.then_some(tags.as_slice())).unwrap();
+            for k in [1usize, 3, 8] {
+                let mut cs: Vec<IvCompressor> = (0..k)
+                    .map(|_| {
+                        let c = IvCompressor::new(2, 2, 1);
+                        if tagged { c.with_cluster_tags() } else { c }
+                    })
+                    .collect();
+                for (i, (z, x, yi, tag)) in rows.iter().enumerate() {
+                    if tagged {
+                        cs[i % k].push_clustered(z, x, &[*yi], *tag);
+                    } else {
+                        cs[i % k].push(z, x, &[*yi]);
+                    }
+                }
+                let mut shards: Vec<IvCompressed> =
+                    cs.into_iter().map(|c| c.finish()).collect();
+                for i in (1..shards.len()).rev() {
+                    shards.swap(i, rng.below(i + 1));
+                }
+                for threads in [1usize, 4] {
+                    let merged = IvCompressed::merge_many(&shards, threads).unwrap();
+                    let fit = fit_iv_2sls(&merged, 0, kind).unwrap();
+                    assert_fit_bits(&fit, &oracle);
+                    assert_eq!(fit.records_used, merged.num_groups());
+                }
+            }
         }
     });
 }
